@@ -1,0 +1,38 @@
+"""TPU-native DFC combine: wall-time of the jitted vectorized combining phase
+(CPU timings here; the structure — one fused device op per phase — is the
+TPU claim, validated by the dry-run lowering)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.jax_dfc import combine, init_stack
+from repro.kernels.dfc_reduce.ops import dfc_combine_step
+
+
+def _time(f, *args, iters=50):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main(emit):
+    rng = np.random.default_rng(0)
+    for n in (64, 256, 1024):
+        state = init_stack(capacity=8 * n)
+        ops = jnp.asarray(rng.integers(0, 3, n), jnp.int32)
+        params = jnp.asarray(rng.random(n), jnp.float32)
+        jc = jax.jit(combine)
+        us = _time(jc, state, ops, params)
+        emit(f"jax_combine_n{n}", us, f"{n/us:.1f} ops/us vectorized")
+        us2 = _time(lambda s, o, p: dfc_combine_step(s, o, p, backend="ref"), state, ops, params)
+        emit(f"jax_combine_kernelpath_n{n}", us2, "ref backend wrapper")
+
+
+if __name__ == "__main__":
+    main(lambda n, v, d: print(f"{n},{v},{d}"))

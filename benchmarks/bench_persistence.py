@@ -1,0 +1,68 @@
+"""Paper Figures 3b/3c/3e/3f: persistence instructions per operation.
+
+DFC counts come from the real simulated algorithm under the cooperative
+scheduler; Romulus/OneFile/PMDK from their schedule-faithful baselines.
+DFC (combiner-only) and DFC-TOTAL (incl. parallel announce path) are
+reported separately, as in the paper.
+"""
+
+from __future__ import annotations
+
+from repro.core.baselines import (
+    OneFileStack,
+    PMDKStack,
+    RomulusStack,
+    make_workloads,
+    run_dfc_counts,
+)
+
+THREADS = (1, 2, 4, 8, 16, 24, 32, 40)
+
+
+def measure(kind: str, total_ops: int = 800):
+    rows = []
+    for n in THREADS:
+        w = make_workloads(kind, n, total_ops)
+        dfc = run_dfc_counts(n, w, seed=7, think=(0, 30))
+        ops = dfc["ops"]
+        rom = RomulusStack(n).run(make_workloads(kind, n, total_ops))
+        one = OneFileStack(n).run(make_workloads(kind, n, total_ops))
+        pmdk = PMDKStack(n).run(make_workloads(kind, n, total_ops))
+        rows.append(
+            dict(
+                threads=n,
+                workload=kind,
+                dfc_pwb=dfc["pwb_combine"] / ops,
+                dfc_total_pwb=(dfc["pwb_combine"] + dfc["pwb_announce"]) / ops,
+                dfc_pfence=dfc["pfence_combine"] / ops,
+                dfc_total_pfence=(dfc["pfence_combine"] + dfc["pfence_announce"]) / ops,
+                romulus_pwb=rom.pwb_per_op(),
+                romulus_pfence=rom.pfence_per_op(),
+                onefile_pwb=one.pwb_per_op(),
+                onefile_pfence=one.cas / max(one.ops, 1),  # CAS = pfence proxy
+                pmdk_pwb=pmdk.pwb_per_op(),
+                pmdk_pfence=pmdk.pfence_per_op(),
+                phases_per_op=dfc["phases"] / ops,
+                elim_frac=2 * dfc["eliminated_pairs"] / max(dfc["combined_ops"], 1),
+            )
+        )
+    return rows
+
+
+def main(emit):
+    for kind in ("push-pop", "rand-op"):
+        for r in measure(kind):
+            emit(
+                f"fig3_pwb_{kind}_t{r['threads']}",
+                r["dfc_total_pwb"],
+                f"dfc={r['dfc_pwb']:.2f},rom={r['romulus_pwb']:.2f},one={r['onefile_pwb']:.2f},pmdk={r['pmdk_pwb']:.2f}",
+            )
+            emit(
+                f"fig3_pfence_{kind}_t{r['threads']}",
+                r["dfc_total_pfence"],
+                f"dfc={r['dfc_pfence']:.3f},rom={r['romulus_pfence']:.3f},one={r['onefile_pfence']:.2f},pmdk={r['pmdk_pfence']:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    main(lambda n, v, d: print(f"{n},{v},{d}"))

@@ -1,0 +1,26 @@
+"""Paper Figure 4: combining phases per operation (push-pop vs rand-op).
+
+Under the uniform cooperative scheduler phases/op is nearly workload-
+insensitive (see EXPERIMENTS.md discussion); both the raw metric and the
+elimination fraction (the mechanism behind the paper's Figure 4 effect) are
+reported.
+"""
+
+from repro.core.baselines import make_workloads, run_dfc_counts
+
+THREADS = (1, 2, 4, 8, 16, 24, 32, 40)
+
+
+def main(emit):
+    for kind in ("push-pop", "rand-op"):
+        for n in THREADS:
+            c = run_dfc_counts(n, make_workloads(kind, n, 800), seed=13, think=(0, 30))
+            emit(
+                f"fig4_phases_{kind}_t{n}",
+                c["phases"] / c["ops"],
+                f"elim_frac={2*c['eliminated_pairs']/max(c['combined_ops'],1):.3f}",
+            )
+
+
+if __name__ == "__main__":
+    main(lambda n, v, d: print(f"{n},{v},{d}"))

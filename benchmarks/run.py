@@ -1,0 +1,46 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV.  Figures:
+  fig3a  throughput (cost-model)            bench_throughput
+  fig3bc pwb/pfence per op                  bench_persistence
+  fig4   combining phases per op            bench_phases
+  jax    vectorized combine timings         bench_jax_combine
+  ckpt   DFC-Checkpoint combining           bench_checkpoint
+  roofline  per-cell fractions (from dry-run artifacts, if present)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    def emit(name, value, derived=""):
+        print(f"{name},{value},{derived}", flush=True)
+
+    from benchmarks import (
+        bench_checkpoint,
+        bench_jax_combine,
+        bench_persistence,
+        bench_phases,
+        bench_throughput,
+    )
+
+    t0 = time.time()
+    bench_persistence.main(emit)
+    bench_throughput.main(emit)
+    bench_phases.main(emit)
+    bench_jax_combine.main(emit)
+    bench_checkpoint.main(emit)
+    try:
+        from benchmarks import roofline
+
+        roofline.main(emit)
+    except Exception as e:  # dry-run artifacts may be absent on fresh checkouts
+        print(f"# roofline skipped: {e!r}", file=sys.stderr)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

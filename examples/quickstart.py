@@ -1,0 +1,69 @@
+"""Quickstart: the DFC persistent stack, three ways.
+
+1. Paper-faithful simulation (Algorithms 1-2) with persistence counters and
+   an injected crash + detectable recovery.
+2. The TPU-native vectorized combine (one fused op per combining phase).
+3. DFC-Checkpoint: the same protocol persisting a training state.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------- 1. faithful
+from repro.core.dfc import POP, PUSH, DFCStack
+from repro.core.harness import check_durable_linearizability, run_with_crash
+from repro.core.sim import History, Scheduler, workload_gen
+from repro.nvm.memory import CrashMode, NVMemory
+
+print("== 1. paper-faithful DFC stack ==")
+mem = NVMemory()
+stack = DFCStack(mem, n_threads=4)
+sched = Scheduler(seed=0)
+hist = History()
+workloads = [
+    [(PUSH, 10 + t), (POP, None)] if t % 2 == 0 else [(POP, None), (PUSH, 90 + t)]
+    for t in range(4)
+]
+gens = {t: workload_gen(stack, sched, hist, t, workloads[t]) for t in range(4)}
+sched.run(gens)
+print(f"   ops: {[(o['name'], o['param'], o['value']) for o in hist.ops]}")
+print(f"   combining phases: {stack.phases}, eliminated pairs: {stack.eliminated_pairs}")
+print(f"   pwb: {dict(mem.stats.pwb)}  pfence: {dict(mem.stats.pfence)}")
+
+print("   crash injection at step 25 + recovery ...")
+res = run_with_crash(workloads, crash_at=25, seed=0, mode=CrashMode.RANDOM)
+ok = check_durable_linearizability(res)
+print(f"   durable-linearizable after recovery: {ok}; took-effect: {res.took_effect}")
+
+# ------------------------------------------------------------- 2. vectorized
+from repro.core.jax_dfc import OP_POP, OP_PUSH, combine, init_stack
+
+print("== 2. TPU-native vectorized combine ==")
+state = init_stack(capacity=64)
+ops = jnp.asarray([OP_PUSH, OP_PUSH, OP_POP, OP_PUSH, OP_POP, OP_POP], jnp.int32)
+params = jnp.asarray([1.0, 2.0, 0, 3.0, 0, 0], jnp.float32)
+state, resp, kinds = combine(state, ops, params)
+print(f"   responses: {np.asarray(resp)} kinds: {np.asarray(kinds)}")
+print(f"   stack after phase: {np.asarray(state.values[: int(state.active_size())])}")
+
+# ----------------------------------------------------------- 3. checkpointing
+from repro.checkpoint.dfc_checkpoint import DFCCheckpointManager, SimFS
+
+print("== 3. DFC-Checkpoint ==")
+with tempfile.TemporaryDirectory() as d:
+    fs = SimFS(Path(d))
+    mgr = DFCCheckpointManager(fs, n_workers=4)
+    for w in range(4):
+        mgr.announce(w, {"step": 1, "cursor": 1})
+    mgr.combine([np.eye(3, dtype=np.float32)], {"step": 1, "cursor": 1})
+    leaves, man = mgr.load_active()
+    print(f"   committed step {man['meta']['step']}; pwb={fs.stats['pwb']} "
+          f"pfence={fs.stats['pfence']} (4 workers -> 1 slot persist)")
+    _, report = DFCCheckpointManager(fs.crash(), 4).recover()
+    print(f"   detectability report: {report}")
+print("done.")

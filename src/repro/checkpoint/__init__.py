@@ -1,0 +1,8 @@
+from repro.checkpoint.dfc_checkpoint import (
+    CrashNow,
+    DFCCheckpointManager,
+    FaultInjector,
+    SimFS,
+)
+
+__all__ = ["DFCCheckpointManager", "SimFS", "FaultInjector", "CrashNow"]

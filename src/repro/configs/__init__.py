@@ -1,0 +1,36 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_reduced(arch_id)``.
+
+All 10 assigned architectures are selectable via ``--arch <id>`` in the
+launchers; each module holds the exact published configuration plus a smoke
+(reduced) configuration of the same family for CPU tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch_id]).config()
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch_id]).reduced_config()

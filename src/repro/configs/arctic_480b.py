@@ -1,0 +1,48 @@
+"""arctic-480b [moe] — 35L d_model=7168 56H (GQA kv=8) expert d_ff=4864
+vocab=32000; MoE 128 experts top-2 **plus a dense residual MLP** evaluated in
+parallel (Snowflake Arctic's dense-MoE hybrid).
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+Memory note: ~480B params.  The launcher shards experts over the model axis
+(8 experts/shard on a 16-way axis) and everything over data (ZeRO); optimizer
+moments are kept in bf16 for this arch so train_4k fits a 256×16 GB pod (see
+EXPERIMENTS.md §Dry-run memory analysis).
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b",
+        family="moe",
+        n_layers=35,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=4864,  # dense residual MLP width
+        vocab=32000,
+        n_experts=128,
+        top_k=2,
+        moe_dff=4864,
+        dense_residual=True,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b-smoke",
+        family="moe",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=96,
+        vocab=256,
+        n_experts=8,
+        top_k=2,
+        moe_dff=96,
+        dense_residual=True,
+        remat="none",
+        dtype="float32",
+    )

@@ -1,0 +1,38 @@
+"""qwen2-1.5b [dense] — 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936; GQA with QKV bias, tied embeddings.  [arXiv:2407.10671; hf]
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-1.5b",
+        family="dense",
+        n_layers=28,
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=2,
+        d_ff=8960,
+        vocab=151936,
+        qkv_bias=True,
+        tie_embeddings=True,
+        rope_theta=1_000_000.0,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-1.5b-smoke",
+        family="dense",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=160,
+        vocab=256,
+        qkv_bias=True,
+        tie_embeddings=True,
+        remat="none",
+        dtype="float32",
+    )

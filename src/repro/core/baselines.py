@@ -1,0 +1,214 @@
+"""Persistence-schedule-faithful PTM baseline stacks (paper §5 competitors).
+
+These reproduce the *persistence-instruction schedules* of the three PTMs the
+paper compares against — the structure that determines Figures 3b/3c/3e/3f —
+over the same simulated NVM counters as DFC:
+
+  * PMDK   — undo-log PTM under a global transaction lock; every modified
+             range is undo-logged (pwb+pfence before mutation), mutations are
+             flushed, the log is invalidated at commit.  No combining: counts
+             are flat in the thread count.
+  * Romulus— lock-based PTM, flat combining for update transactions, TWO
+             copies of the whole heap.  Per combining phase: dirty main-copy
+             lines are flushed, the state flip is flushed, then the same
+             lines are copied+flushed in the back copy.  ~2 flushes per dirty
+             line, amortized over the combined batch.
+  * OneFile— wait-free PTM using DCAS; every store is a DCAS (CAS count is
+             the paper's pfence proxy) and concurrent helpers redundantly
+             apply+flush the same write-set under contention.  The helping
+             amplification coefficient is the one *calibrated* constant
+             (BETA) — everything else is mechanical.
+
+The baselines are round-based: each round every live thread announces one op
+and the batch executes under the PTM's regime.  This reproduces the steady
+state of the benchmark loop (all N threads always have an op in flight),
+which is exactly the paper's setting.  Crash-recovery of the baselines is out
+of scope (the paper evaluates them for performance only; none is detectable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dfc import ACK, EMPTY, POP, PUSH
+from repro.nvm.memory import NVMemory
+
+
+@dataclasses.dataclass
+class BaselineStats:
+    ops: int = 0
+    pwb: int = 0
+    pfence: int = 0
+    cas: int = 0  # OneFile pfence proxy
+    phases: int = 0
+
+    def pwb_per_op(self):
+        return self.pwb / max(self.ops, 1)
+
+    def pfence_per_op(self):
+        return self.pfence / max(self.ops, 1)
+
+
+class _RoundStack:
+    """Shared round-based driver: pops values, tracks a plain list stack."""
+
+    def __init__(self, n_threads: int):
+        self.n = n_threads
+        self.stack: List[Any] = []
+        self.stats = BaselineStats()
+
+    def run(self, workloads: Sequence[Sequence[Tuple[str, Any]]]) -> BaselineStats:
+        queues = [list(w) for w in workloads]
+        while any(queues):
+            batch = []
+            for t, q in enumerate(queues):
+                if q:
+                    batch.append((t, *q.pop(0)))
+            self._execute_batch(batch)
+            self.stats.ops += len(batch)
+            self.stats.phases += 1
+        return self.stats
+
+    def _execute_batch(self, batch):
+        raise NotImplementedError
+
+
+class PMDKStack(_RoundStack):
+    """Undo-log PTM, global lock, no combining — ops run one at a time."""
+
+    def _execute_batch(self, batch):
+        s = self.stats
+        for t, name, param in batch:
+            if name == PUSH:
+                # tx: alloc (persistent allocator metadata), undo-log the top
+                # pointer, write node, write top, commit.
+                s.pwb += 1  # allocator metadata persist
+                s.pwb += 1; s.pfence += 1  # undo-log record (top) + fence
+                s.pwb += 1  # node contents
+                s.pwb += 1  # top pointer
+                s.pfence += 1  # commit fence
+                s.pwb += 1; s.pfence += 1  # log invalidate + fence
+                self.stack.append(param)
+            else:
+                s.pwb += 1; s.pfence += 1  # undo-log record (top) + fence
+                s.pwb += 1  # top pointer
+                s.pwb += 1  # allocator free metadata
+                s.pfence += 1  # commit fence
+                s.pwb += 1; s.pfence += 1  # log invalidate + fence
+                if self.stack:
+                    self.stack.pop()
+
+
+class RomulusStack(_RoundStack):
+    """Two-copy PTM with flat combining for update transactions."""
+
+    def _execute_batch(self, batch):
+        s = self.stats
+        # Each transaction's modified ranges are logged and flushed
+        # per-transaction (the redo log records ranges per tx; repeatedly
+        # touched lines like `top` are flushed once per touching tx).  What
+        # combining amortizes is the state flip and the three fences.
+        logged_lines = 0
+        for t, name, param in batch:
+            if name == PUSH:
+                logged_lines += 3  # new node + top + allocator metadata
+                self.stack.append(param)
+            else:
+                logged_lines += 2  # top + allocator metadata
+                if self.stack:
+                    self.stack.pop()
+        # main copy flush (per-tx ranges)
+        s.pwb += logged_lines
+        s.pfence += 1
+        # state flip (curComb)
+        s.pwb += 1
+        s.pfence += 1
+        # back copy: replay the log onto the back heap + flush
+        s.pwb += logged_lines
+        s.pfence += 1
+
+
+class OneFileStack(_RoundStack):
+    """Wait-free DCAS-based PTM with redundant helping."""
+
+    BETA = 0.20  # calibrated helping-amplification per extra thread
+
+    def _execute_batch(self, batch):
+        s = self.stats
+        n_helpers = max(0, len(batch) - 1)
+        amp = 1.0 + self.BETA * n_helpers
+        for t, name, param in batch:
+            write_set = 3 if name == PUSH else 2  # node+top+alloc / top+alloc
+            # publish tx descriptor
+            s.cas += 1
+            s.pwb += 1
+            # apply phase: each word DCAS'd + flushed; helpers redundantly
+            # re-apply and re-flush a BETA fraction of the write-set each.
+            s.cas += int(round(write_set * amp))
+            s.pwb += int(round(write_set * amp))
+            # commit CAS + flush of the tx state
+            s.cas += 1
+            s.pwb += 1
+            if name == PUSH:
+                self.stack.append(param)
+            elif self.stack:
+                self.stack.pop()
+
+
+def run_dfc_counts(
+    n_threads: int,
+    workloads: Sequence[Sequence[Tuple[str, Any]]],
+    seed: int = 0,
+    think: Tuple[int, int] = None,
+):
+    """Run the real DFC stack under the cooperative scheduler, return
+    (announce, combine) persistence counters + phases for the figures."""
+    from repro.core.dfc import DFCStack
+    from repro.core.sim import History, Scheduler, workload_gen
+
+    mem = NVMemory()
+    n_ops = sum(len(w) for w in workloads)
+    stack = DFCStack(mem, n_threads, pool_capacity=max(1024, n_ops + 64))
+    sched = Scheduler(seed=seed)
+    hist = History()
+    rng = np.random.default_rng(seed + 17)
+    gens = {
+        t: workload_gen(stack, sched, hist, t, workloads[t], think=think, rng=rng)
+        for t in range(n_threads)
+    }
+    sched.run(gens)
+    st = mem.stats
+    return dict(
+        ops=n_ops,
+        phases=stack.phases,
+        eliminated_pairs=stack.eliminated_pairs,
+        combined_ops=stack.combined_ops,
+        pwb_announce=st.pwb.get("announce", 0),
+        pwb_combine=st.pwb.get("combine", 0),
+        pfence_announce=st.pfence.get("announce", 0),
+        pfence_combine=st.pfence.get("combine", 0),
+    )
+
+
+def make_workloads(kind: str, n_threads: int, total_ops: int, seed: int = 0):
+    """The paper's benchmarks: push-pop (alternating pairs) and rand-op."""
+    rng = np.random.default_rng(seed)
+    per = max(2, total_ops // n_threads)
+    out = []
+    uid = 0
+    for t in range(n_threads):
+        ops = []
+        for i in range(per):
+            if kind == "push-pop":
+                name = PUSH if i % 2 == 0 else POP
+            elif kind == "rand-op":
+                name = PUSH if rng.random() < 0.5 else POP
+            else:
+                raise ValueError(kind)
+            uid += 1
+            ops.append((name, uid * 10 + t) if name == PUSH else (name, None))
+        out.append(ops)
+    return out

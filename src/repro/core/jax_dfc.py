@@ -1,0 +1,182 @@
+"""TPU-native DFC: the paper's combiner as a data-parallel JAX op.
+
+The paper's combiner walks an announcement array sequentially, eliminating
+push/pop pairs and applying the surplus to a linked-list stack.  On TPU the
+same *semantic combining* is done in one vectorized pass over the
+announcement lanes:
+
+  * rank-matching elimination — the k-th announced push pairs with the k-th
+    announced pop (all batch ops are concurrent, so any pairing linearizes);
+    computed with prefix sums over the lane masks,
+  * the stack is an array `values[capacity]` with **two alternating size
+    pointers** `size[2]` — exactly the paper's two `top`s: both sizes share
+    the storage prefix, a combine phase only writes *above* the committed
+    prefix (surplus pushes) and publishes by flipping the active size with an
+    epoch bump of +2.  A crash mid-combine leaves the active prefix intact.
+  * all permutations (rank-compaction, pair-value routing) are expressed as
+    one-hot matmuls so the hot path maps onto the MXU (see
+    `repro/kernels/dfc_reduce` for the Pallas kernel of this function).
+
+Linearization order of a combined batch (the canonical witness used by the
+tests): eliminated pairs first (push_k, pop_k adjacent, k ascending), then
+surplus pushes in rank order, then surplus pops in rank order.
+
+The host-side persistence protocol (pwb/pfence analogue: device→host fetch +
+fsync; two-increment epoch commit) lives in `repro.checkpoint`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# op codes
+OP_NONE = 0
+OP_PUSH = 1
+OP_POP = 2
+# response kinds
+R_NONE = 0
+R_ACK = 1
+R_VALUE = 2
+R_EMPTY = 3
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StackState:
+    """Array-backed DFC stack with double-buffered top (paper Fig 1)."""
+
+    values: jax.Array  # f32[capacity]
+    size: jax.Array  # i32[2] — two alternating stack sizes
+    epoch: jax.Array  # i32[]  — cEpoch (always even between phases)
+
+    @property
+    def active_idx(self) -> jax.Array:
+        return (self.epoch // 2) % 2
+
+    def active_size(self) -> jax.Array:
+        return self.size[self.active_idx]
+
+
+def init_stack(capacity: int, dtype=jnp.float32) -> StackState:
+    return StackState(
+        values=jnp.zeros((capacity,), dtype=dtype),
+        size=jnp.zeros((2,), dtype=jnp.int32),
+        epoch=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def _onehot_route(src_idx: jax.Array, vals: jax.Array, n_out: int) -> jax.Array:
+    """out[src_idx[j]] += vals[j] — as a one-hot matmul (MXU-friendly).
+
+    src_idx entries outside [0, n_out) are dropped.
+    """
+    onehot = (src_idx[None, :] == jnp.arange(n_out)[:, None]).astype(vals.dtype)
+    return onehot @ vals
+
+
+def combine(
+    state: StackState, ops: jax.Array, params: jax.Array
+) -> Tuple[StackState, jax.Array, jax.Array]:
+    """One DFC combining phase over N announcement lanes.
+
+    Returns (new_state, responses f32[N], kinds i32[N]).
+    """
+    n = ops.shape[0]
+    cap = state.values.shape[0]
+    idx = jnp.arange(n)
+
+    is_push = ops == OP_PUSH
+    is_pop = ops == OP_POP
+    push_rank = jnp.where(is_push, jnp.cumsum(is_push) - 1, -1)
+    pop_rank = jnp.where(is_pop, jnp.cumsum(is_pop) - 1, -1)
+    p_total = jnp.sum(is_push)
+    q_total = jnp.sum(is_pop)
+    n_elim = jnp.minimum(p_total, q_total)
+
+    old_size = state.active_size()
+
+    # --- elimination: pop_k gets push_k's param (REDUCE lines 102-110) ------
+    push_by_rank = _onehot_route(push_rank, params.astype(jnp.float32), n)
+    elim_pop_val = push_by_rank[jnp.clip(pop_rank, 0, n - 1)]
+
+    # --- surplus pushes: compact above the committed prefix -----------------
+    surplus_push = is_push & (push_rank >= n_elim)
+    seg_idx = jnp.where(surplus_push, push_rank - n_elim, n)  # n => dropped
+    segment = _onehot_route(seg_idx, params.astype(state.values.dtype), n)
+    n_push_surplus = jnp.maximum(p_total - n_elim, 0)
+    new_values = jax.lax.dynamic_update_slice(
+        state.values,
+        segment,
+        (jnp.clip(old_size, 0, cap - n),),
+    )
+    # only the [old_size, old_size + n_push_surplus) part of the segment is
+    # real; restore the tail beyond it.  Contract: capacity >= size + N.
+    keep_mask = (jnp.arange(cap) >= old_size) & (
+        jnp.arange(cap) < old_size + n_push_surplus
+    )
+    new_values = jnp.where(keep_mask, new_values, state.values)
+
+    # --- surplus pops: read below the committed prefix ----------------------
+    surplus_pop = is_pop & (pop_rank >= n_elim)
+    depth = pop_rank - n_elim  # 0 == top of committed stack
+    pop_src = old_size - 1 - depth
+    pop_ok = surplus_pop & (pop_src >= 0)
+    stack_val = state.values[jnp.clip(pop_src, 0, cap - 1)].astype(jnp.float32)
+
+    # --- responses -----------------------------------------------------------
+    kinds = jnp.full((n,), R_NONE, dtype=jnp.int32)
+    kinds = jnp.where(is_push, R_ACK, kinds)
+    kinds = jnp.where(is_pop & (pop_rank < n_elim), R_VALUE, kinds)
+    kinds = jnp.where(pop_ok, R_VALUE, kinds)
+    kinds = jnp.where(surplus_pop & ~pop_ok, R_EMPTY, kinds)
+    responses = jnp.zeros((n,), dtype=jnp.float32)
+    responses = jnp.where(is_pop & (pop_rank < n_elim), elim_pop_val, responses)
+    responses = jnp.where(pop_ok, stack_val, responses)
+
+    # --- publish: write the inactive size, bump epoch by 2 -------------------
+    n_popped = jnp.minimum(jnp.maximum(q_total - n_elim, 0), old_size)
+    new_size_val = old_size + n_push_surplus - n_popped
+    inactive = (state.epoch // 2 + 1) % 2
+    new_size = state.size.at[inactive].set(new_size_val)
+    new_state = StackState(
+        values=new_values, size=new_size, epoch=state.epoch + 2
+    )
+    return new_state, responses, kinds
+
+
+combine_jit = jax.jit(combine)
+
+
+# ------------------------------------------------------------------ reference
+def sequential_reference(stack_list, ops, params):
+    """Canonical linearization witness in pure Python (test oracle).
+
+    Applies: eliminated pairs, then surplus pushes (rank order), then surplus
+    pops (rank order) to a Python list; returns (new_list, responses, kinds).
+    """
+    n = len(ops)
+    pushes = [i for i in range(n) if ops[i] == OP_PUSH]
+    pops = [i for i in range(n) if ops[i] == OP_POP]
+    e = min(len(pushes), len(pops))
+    responses = [0.0] * n
+    kinds = [R_NONE] * n
+    stack = list(stack_list)
+    for k in range(e):  # eliminated pairs
+        kinds[pushes[k]] = R_ACK
+        kinds[pops[k]] = R_VALUE
+        responses[pops[k]] = float(params[pushes[k]])
+    for i in pushes[e:]:  # surplus pushes
+        stack.append(float(params[i]))
+        kinds[i] = R_ACK
+    for i in pops[e:]:  # surplus pops
+        if stack:
+            responses[i] = stack.pop()
+            kinds[i] = R_VALUE
+        else:
+            kinds[i] = R_EMPTY
+    return stack, responses, kinds

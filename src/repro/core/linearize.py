@@ -1,0 +1,77 @@
+"""Stack (durable) linearizability checker — Wing & Gong style DFS.
+
+Checks whether a concurrent history of push/pop operations is linearizable
+with respect to sequential LIFO stack semantics.  Histories are lists of op
+dicts (``repro.core.sim.History`` format): {name, param, inv, resp, value}.
+
+Durable linearizability with detectability reduces to plain linearizability
+of the *effective* history: completed ops keep their timestamps; operations
+pending at a crash that the recovery reports as taken-effect are included
+with resp=+inf (they completed at recovery, concurrent with everything that
+was pending); operations reported as not-taken-effect are excluded.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple
+
+from repro.core.dfc import ACK, EMPTY, POP, PUSH
+
+INF = math.inf
+
+
+def _apply(state: Tuple, op: dict) -> Optional[Tuple]:
+    """Sequential stack semantics; None if op's recorded response is illegal."""
+    if op["name"] == PUSH:
+        if op["value"] not in (ACK, None):
+            return None
+        return state + (op["param"],)
+    # pop
+    if not state:
+        return state if op["value"] == EMPTY else None
+    if op["value"] != state[-1]:
+        return None
+    return state[:-1]
+
+
+def is_linearizable(ops: List[dict], max_nodes: int = 2_000_000) -> bool:
+    """DFS with memoization on (linearized-set, stack-state)."""
+    n = len(ops)
+    if n == 0:
+        return True
+    resp = [o["resp"] if o["resp"] is not None else INF for o in ops]
+    inv = [o["inv"] for o in ops]
+
+    seen = set()
+    budget = [max_nodes]
+
+    def dfs(done: frozenset, state: Tuple) -> bool:
+        if len(done) == n:
+            return True
+        key = (done, state)
+        if key in seen:
+            return False
+        seen.add(key)
+        if budget[0] <= 0:
+            raise RuntimeError("linearizability search budget exhausted")
+        budget[0] -= 1
+        # candidate i is eligible if no unlinearized j responded before i invoked
+        for i in range(n):
+            if i in done:
+                continue
+            eligible = True
+            for j in range(n):
+                if j != i and j not in done and resp[j] < inv[i]:
+                    eligible = False
+                    break
+            if not eligible:
+                continue
+            nxt = _apply(state, ops[i])
+            if nxt is None:
+                continue
+            if dfs(done | {i}, nxt):
+                return True
+        return False
+
+    return dfs(frozenset(), ())

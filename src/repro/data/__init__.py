@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataPipeline
+
+__all__ = ["DataPipeline"]

@@ -1,0 +1,22 @@
+from repro.distributed.compression import (
+    CompressionState,
+    compress_topk,
+    decompress_topk,
+    ef_compress_grads,
+    init_compression,
+    quantize_int8,
+    dequantize_int8,
+)
+from repro.distributed.elastic import ElasticPlan, plan_resize
+
+__all__ = [
+    "CompressionState",
+    "compress_topk",
+    "decompress_topk",
+    "ef_compress_grads",
+    "init_compression",
+    "quantize_int8",
+    "dequantize_int8",
+    "ElasticPlan",
+    "plan_resize",
+]

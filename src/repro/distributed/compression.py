@@ -1,0 +1,81 @@
+"""Gradient compression for the cross-pod (DCN) data-parallel axis.
+
+At 2+ pods the pod-axis all-reduce crosses the slow DCN links; compressing
+it is the standard distributed-optimization trick.  Two composable schemes:
+
+  * error-feedback top-k sparsification (memory = one residual per param):
+    the residual carries the un-transmitted mass into the next step, which
+    preserves convergence (Stich et al.),
+  * int8 linear quantization with per-tensor scale (4x over f32, 2x bf16).
+
+These run *inside* the jitted step on the pod-axis gradients; the DFC
+announcement records the compression config so recovery reproduces the same
+math (determinism contract of the exactly-once resume).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class CompressionState:
+    residual: Any  # pytree like grads
+
+
+def init_compression(params) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+# --------------------------------------------------------------------- top-k
+def compress_topk(g: jax.Array, frac: float = 0.01) -> Tuple[jax.Array, jax.Array]:
+    """Keep the top-|frac| entries by magnitude.  Returns (values, flat_idx)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def decompress_topk(vals, idx, shape) -> jax.Array:
+    n = 1
+    for s in shape:
+        n *= s
+    return jnp.zeros((n,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+
+def ef_compress_grads(grads, state: CompressionState, frac: float = 0.01):
+    """Error-feedback top-k over a gradient pytree.
+
+    Returns (compressed_grads_dense, new_state).  The dense reconstruction is
+    what enters the (cheap, sparse-in-content) cross-pod all-reduce; the
+    residual keeps whatever was dropped."""
+
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        vals, idx = compress_topk(acc, frac)
+        sent = decompress_topk(vals, idx, acc.shape)
+        return sent.astype(g.dtype), acc - sent
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(state.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    sent = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    resid = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return sent, CompressionState(residual=resid)
+
+
+# ---------------------------------------------------------------------- int8
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale

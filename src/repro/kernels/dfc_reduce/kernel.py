@@ -1,0 +1,135 @@
+"""Pallas TPU kernel for the DFC combining phase (paper Algorithm 2, REDUCE).
+
+One program instance processes a whole announcement batch of N lanes plus a
+window of the stack top.  The batch sizes the paper cares about (N = number
+of threads/workers, up to a few thousand) fit a single VMEM block, so the
+kernel is a single-grid fused pass:
+
+  * prefix sums over the push/pop lane masks (VPU),
+  * all value routing (push->pop elimination pairing, surplus compaction)
+    expressed as one-hot f32 matmuls so it runs on the MXU — the TPU-native
+    replacement for the paper's pointer-walking sequential combiner,
+  * the stack-top window is read for surplus pops and the new segment is
+    produced for surplus pushes; the caller splices it into the full stack
+    array with a dynamic_update_slice.
+
+Inputs (all VMEM blocks):
+  ops_ref      i32[N]    op codes (0 none, 1 push, 2 pop)
+  params_ref   f32[N]    push arguments
+  window_ref   f32[N]    stack[top-N : top] (zero-padded below), caller-built
+  size_ref     i32[1]    current committed size (for EMPTY detection)
+Outputs:
+  resp_ref     f32[N]    response values
+  kind_ref     i32[N]    response kinds (0 none, 1 ack, 2 value, 3 empty)
+  segment_ref  f32[N]    surplus-push values, rank-compacted from index 0
+  counts_ref   i32[4]    (n_push_surplus, n_popped, n_elim, q_total)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+OP_PUSH = 1
+OP_POP = 2
+R_NONE = 0
+R_ACK = 1
+R_VALUE = 2
+R_EMPTY = 3
+
+
+def _route(src_idx, vals, n):
+    """out[i] = sum_j [src_idx[j] == i] * vals[j] — one-hot MXU matmul."""
+    onehot = (src_idx[None, :] == jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)).astype(
+        jnp.float32
+    )
+    return jnp.dot(onehot, vals.astype(jnp.float32), preferred_element_type=jnp.float32)
+
+
+def dfc_reduce_kernel(ops_ref, params_ref, window_ref, size_ref, resp_ref, kind_ref, segment_ref, counts_ref):
+    n = ops_ref.shape[0]
+    ops = ops_ref[:]
+    params = params_ref[:].astype(jnp.float32)
+    window = window_ref[:].astype(jnp.float32)
+    size = size_ref[0]
+
+    is_push = ops == OP_PUSH
+    is_pop = ops == OP_POP
+    push_rank = jnp.where(is_push, jnp.cumsum(is_push.astype(jnp.int32)) - 1, -1)
+    pop_rank = jnp.where(is_pop, jnp.cumsum(is_pop.astype(jnp.int32)) - 1, -1)
+    p_total = jnp.sum(is_push.astype(jnp.int32))
+    q_total = jnp.sum(is_pop.astype(jnp.int32))
+    n_elim = jnp.minimum(p_total, q_total)
+
+    # elimination pairing: pop_k <- push_k.param (one-hot route + gather-route)
+    push_by_rank = _route(push_rank, params, n)
+    pop_gather = (
+        jnp.clip(pop_rank, 0, n - 1)[:, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    ).astype(jnp.float32)
+    elim_pop_val = jnp.dot(pop_gather, push_by_rank, preferred_element_type=jnp.float32)
+
+    # surplus push compaction into the segment
+    surplus_push = is_push & (push_rank >= n_elim)
+    seg_idx = jnp.where(surplus_push, push_rank - n_elim, n)
+    segment = _route(seg_idx, params, n)
+
+    # surplus pops read the window: window[N-1] is the committed top
+    surplus_pop = is_pop & (pop_rank >= n_elim)
+    depth = pop_rank - n_elim
+    win_src = n - 1 - depth  # index into the window
+    pop_ok = surplus_pop & (win_src >= 0) & (depth < size)
+    win_gather = (
+        jnp.clip(win_src, 0, n - 1)[:, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    ).astype(jnp.float32)
+    stack_val = jnp.dot(win_gather, window, preferred_element_type=jnp.float32)
+
+    kinds = jnp.full((n,), R_NONE, dtype=jnp.int32)
+    kinds = jnp.where(is_push, R_ACK, kinds)
+    kinds = jnp.where(is_pop & (pop_rank < n_elim), R_VALUE, kinds)
+    kinds = jnp.where(pop_ok, R_VALUE, kinds)
+    kinds = jnp.where(surplus_pop & ~pop_ok, R_EMPTY, kinds)
+    resp = jnp.zeros((n,), dtype=jnp.float32)
+    resp = jnp.where(is_pop & (pop_rank < n_elim), elim_pop_val, resp)
+    resp = jnp.where(pop_ok, stack_val, resp)
+
+    resp_ref[:] = resp
+    kind_ref[:] = kinds
+    segment_ref[:] = segment
+    n_push_surplus = jnp.maximum(p_total - n_elim, 0)
+    n_popped = jnp.minimum(jnp.maximum(q_total - n_elim, 0), size)
+    counts_ref[0] = n_push_surplus
+    counts_ref[1] = n_popped
+    counts_ref[2] = n_elim
+    counts_ref[3] = q_total
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dfc_reduce_call(ops, params, window, size, *, interpret: bool = True):
+    n = ops.shape[0]
+    return pl.pallas_call(
+        dfc_reduce_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),  # responses
+            jax.ShapeDtypeStruct((n,), jnp.int32),  # kinds
+            jax.ShapeDtypeStruct((n,), jnp.float32),  # segment
+            jax.ShapeDtypeStruct((4,), jnp.int32),  # counts
+        ),
+        in_specs=[
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((4,), lambda: (0,)),
+        ),
+        interpret=interpret,
+    )(ops, params, window, jnp.asarray(size, jnp.int32).reshape(1))

@@ -1,0 +1,60 @@
+"""Jitted public wrapper: full DFC combine step using the Pallas kernel.
+
+Splices the kernel outputs (responses / surplus segment / counts) into the
+array-backed double-buffered stack state.  ``backend`` selects the Pallas
+kernel (compiled for TPU, interpret-mode on CPU) or the pure-jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jax_dfc import StackState
+from repro.kernels.dfc_reduce.kernel import dfc_reduce_call
+from repro.kernels.dfc_reduce.ref import dfc_reduce_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def dfc_combine_step(state: StackState, ops, params, *, backend: str = "ref"):
+    n = ops.shape[0]
+    cap = state.values.shape[0]
+    old_size = state.active_size()
+
+    # window = stack[top-n : top], zero-padded below the bottom
+    start = jnp.clip(old_size - n, 0, cap - n)
+    raw = jax.lax.dynamic_slice(state.values, (start,), (n,))
+    # when old_size < n the slice starts at 0 and the top is at old_size-1;
+    # shift so the committed top sits at window[n-1]
+    shift = jnp.where(old_size >= n, 0, n - old_size)
+    window = jnp.roll(raw, shift)
+    window = jnp.where(jnp.arange(n) >= shift, window, 0.0)
+
+    if backend == "pallas":
+        resp, kinds, segment, counts = dfc_reduce_call(
+            ops, params, window, old_size, interpret=True
+        )
+    elif backend == "pallas_tpu":
+        resp, kinds, segment, counts = dfc_reduce_call(
+            ops, params, window, old_size, interpret=False
+        )
+    else:
+        resp, kinds, segment, counts = dfc_reduce_ref(ops, params, window, old_size)
+
+    n_push_surplus, n_popped = counts[0], counts[1]
+    new_values = jax.lax.dynamic_update_slice(
+        state.values, segment.astype(state.values.dtype), (jnp.clip(old_size, 0, cap - n),)
+    )
+    keep = (jnp.arange(cap) >= old_size) & (jnp.arange(cap) < old_size + n_push_surplus)
+    new_values = jnp.where(keep, new_values, state.values)
+
+    new_size_val = old_size + n_push_surplus - n_popped
+    inactive = (state.epoch // 2 + 1) % 2
+    new_state = StackState(
+        values=new_values,
+        size=state.size.at[inactive].set(new_size_val),
+        epoch=state.epoch + 2,
+    )
+    return new_state, resp, kinds

@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the dfc_reduce kernel (same signature/outputs)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dfc_reduce.kernel import (
+    OP_POP,
+    OP_PUSH,
+    R_ACK,
+    R_EMPTY,
+    R_NONE,
+    R_VALUE,
+)
+
+
+def dfc_reduce_ref(ops, params, window, size):
+    n = ops.shape[0]
+    params = params.astype(jnp.float32)
+    window = window.astype(jnp.float32)
+    size = jnp.asarray(size, jnp.int32).reshape(())
+
+    is_push = ops == OP_PUSH
+    is_pop = ops == OP_POP
+    push_rank = jnp.where(is_push, jnp.cumsum(is_push) - 1, -1)
+    pop_rank = jnp.where(is_pop, jnp.cumsum(is_pop) - 1, -1)
+    p_total = jnp.sum(is_push)
+    q_total = jnp.sum(is_pop)
+    n_elim = jnp.minimum(p_total, q_total)
+
+    push_by_rank = jnp.zeros((n,), jnp.float32).at[
+        jnp.where(is_push, push_rank, n)
+    ].add(params, mode="drop")
+    elim_pop_val = push_by_rank[jnp.clip(pop_rank, 0, n - 1)]
+
+    surplus_push = is_push & (push_rank >= n_elim)
+    segment = jnp.zeros((n,), jnp.float32).at[
+        jnp.where(surplus_push, push_rank - n_elim, n)
+    ].add(params, mode="drop")
+
+    surplus_pop = is_pop & (pop_rank >= n_elim)
+    depth = pop_rank - n_elim
+    win_src = n - 1 - depth
+    pop_ok = surplus_pop & (win_src >= 0) & (depth < size)
+    stack_val = window[jnp.clip(win_src, 0, n - 1)]
+
+    kinds = jnp.full((n,), R_NONE, dtype=jnp.int32)
+    kinds = jnp.where(is_push, R_ACK, kinds)
+    kinds = jnp.where(is_pop & (pop_rank < n_elim), R_VALUE, kinds)
+    kinds = jnp.where(pop_ok, R_VALUE, kinds)
+    kinds = jnp.where(surplus_pop & ~pop_ok, R_EMPTY, kinds)
+    resp = jnp.zeros((n,), jnp.float32)
+    resp = jnp.where(is_pop & (pop_rank < n_elim), elim_pop_val, resp)
+    resp = jnp.where(pop_ok, stack_val, resp)
+
+    counts = jnp.stack(
+        [
+            jnp.maximum(p_total - n_elim, 0),
+            jnp.minimum(jnp.maximum(q_total - n_elim, 0), size),
+            n_elim,
+            q_total,
+        ]
+    ).astype(jnp.int32)
+    return resp, kinds, segment, counts

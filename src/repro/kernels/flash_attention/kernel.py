@@ -1,0 +1,111 @@
+"""Pallas TPU flash attention (forward), GQA + causal.
+
+Blocked online-softmax: grid (batch, q_head, q_block, k_block) — the TPU
+grid executes the trailing dimension sequentially, so the running max /
+denominator / accumulator live in VMEM scratch across k-block steps and the
+output block is written on the last k step.  K/V blocks for a query head are
+selected via the GQA head mapping (kv = q_head // group) in the BlockSpec
+index maps, so only hd-wide tiles ever sit in VMEM:
+
+  VMEM footprint ≈ blk_q·hd (q) + blk_k·hd (k,v) + blk_q·blk_k (scores)
+                 + blk_q·(hd+2) (acc, m, l)   — fits ~2 MB at 512×512×128.
+
+Causal masking is applied at tile granularity (full tiles above the diagonal
+contribute nothing and are skipped cheaply with pl.when).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, blk_q, blk_k, n_k_blocks, scale, causal
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def init():
+        m_ref[:] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[:] = jnp.zeros_like(l_ref)
+        acc_ref[:] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * blk_q
+    k_start = ki * blk_k
+
+    # tiles entirely above the causal diagonal are skipped
+    run = (k_start <= q_start + blk_q - 1) if causal else (ki >= 0)
+
+    @pl.when(run)
+    def compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (blk_q, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (blk_k, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[:]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[:] = l_ref[:] * alpha + jnp.sum(p, axis=1)
+        acc_ref[:] = acc_ref[:] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[:] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def finalize():
+        denom = jnp.maximum(l_ref[:], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[:] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "blk_q", "blk_k", "interpret")
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, blk_q: int = 128, blk_k: int = 128,
+    interpret: bool = True,
+):
+    """q: (B, S, Hq, hd); k/v: (B, T, Hkv, hd) -> (B, S, Hq, hd)."""
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    blk_q = min(blk_q, s)
+    blk_k = min(blk_k, t)
+    n_q = s // blk_q
+    n_k = t // blk_k
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        blk_q=blk_q, blk_k=blk_k, n_k_blocks=n_k, scale=scale, causal=causal,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b_, h, qi, ki: (b_, qi, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b_, h, qi, ki, g=group: (b_, ki, h // g, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b_, h, qi, ki, g=group: (b_, ki, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, hd), lambda b_, h, qi, ki: (b_, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, hq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),  # running max m
+            pltpu.VMEM((blk_q,), jnp.float32),  # running denom l
+            pltpu.VMEM((blk_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

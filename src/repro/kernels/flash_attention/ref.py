@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash attention (same signature)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, k.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        mask = jnp.arange(t)[None, :] <= jnp.arange(s)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, hd).astype(q.dtype)

@@ -1,0 +1,79 @@
+"""Pallas TPU selective-scan kernel (mamba1, diagonal A).
+
+The recurrence  h_t = exp(Δ_t A) ⊙ h_{t-1} + Δ_t B_t x_t,  y_t = C_t·h_t + D x_t
+is evaluated chunk-by-chunk: grid (batch, channel_block, seq_chunk) with the
+sequence dimension executed sequentially so the (blk_d, N) state carries in
+VMEM scratch across chunks.  Inside a chunk a fori_loop walks the time steps
+— all operands ((chunk, blk_d) inputs, (blk_d, N) state) stay in VMEM, which
+is exactly the HBM-traffic structure that makes fused selective scan fast on
+real hardware: inputs are read once, the state never leaves VMEM.
+
+This adapts the CUDA selective-scan kernel's shared-memory strategy to the
+TPU memory hierarchy (HBM -> VMEM tiles -> VREG elementwise), per the
+hardware-adaptation requirement.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(dt_ref, a_ref, bx_ref, c_ref, x_ref, d_ref, y_ref, h_ref, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def init():
+        h_ref[:] = jnp.zeros_like(h_ref)
+
+    a = a_ref[:].astype(jnp.float32)  # (blk_d, N) log-A
+    d_skip = d_ref[:].astype(jnp.float32)  # (blk_d,)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)  # (blk_d,)
+        b_t = bx_ref[0, t, :].astype(jnp.float32)  # (N,)
+        c_t = c_ref[0, t, :].astype(jnp.float32)  # (N,)
+        x_t = x_ref[0, t, :].astype(jnp.float32)  # (blk_d,)
+        abar = jnp.exp(dt_t[:, None] * (-jnp.exp(a)))  # (blk_d, N)
+        h = abar * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y = jnp.sum(h * c_t[None, :], axis=1) + d_skip * x_t
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return h
+
+    h_ref[:] = jax.lax.fori_loop(0, chunk, step, h_ref[:])
+
+
+@functools.partial(jax.jit, static_argnames=("blk_d", "chunk", "interpret"))
+def selective_scan(
+    dt, a_log, b_ssm, c_ssm, x, d_skip, *, blk_d: int = 512, chunk: int = 64,
+    interpret: bool = True,
+):
+    """dt/x: (B, S, DI); a_log: (DI, N); b_ssm/c_ssm: (B, S, N); d_skip: (DI,).
+
+    Returns y: (B, S, DI)."""
+    b, s, di = dt.shape
+    n = a_log.shape[1]
+    blk_d = min(blk_d, di)
+    chunk = min(chunk, s)
+    assert di % blk_d == 0 and s % chunk == 0
+    grid = (b, di // blk_d, s // chunk)
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, blk_d), lambda bi, dgi, ci: (bi, ci, dgi)),  # dt
+            pl.BlockSpec((blk_d, n), lambda bi, dgi, ci: (dgi, 0)),  # a_log
+            pl.BlockSpec((1, chunk, n), lambda bi, dgi, ci: (bi, ci, 0)),  # B
+            pl.BlockSpec((1, chunk, n), lambda bi, dgi, ci: (bi, ci, 0)),  # C
+            pl.BlockSpec((1, chunk, blk_d), lambda bi, dgi, ci: (bi, ci, dgi)),  # x
+            pl.BlockSpec((blk_d,), lambda bi, dgi, ci: (dgi,)),  # D skip
+        ],
+        out_specs=pl.BlockSpec((1, chunk, blk_d), lambda bi, dgi, ci: (bi, ci, dgi)),
+        out_shape=jax.ShapeDtypeStruct((b, s, di), dt.dtype),
+        scratch_shapes=[pltpu.VMEM((blk_d, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, a_log, b_ssm, c_ssm, x, d_skip)

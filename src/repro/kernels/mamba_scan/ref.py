@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the selective-scan kernel (sequential reference)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dt, a_log, b_ssm, c_ssm, x, d_skip):
+    """Same contract as kernel.selective_scan; lax.scan over time."""
+    bsz, s, di = dt.shape
+    n = a_log.shape[1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp  # (B,DI), (B,N), (B,N), (B,DI)
+        abar = jnp.exp(dt_t[..., None].astype(jnp.float32) * a[None])
+        h = abar * h + (dt_t * x_t)[..., None].astype(jnp.float32) * b_t[:, None, :].astype(jnp.float32)
+        y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        y = y + d_skip.astype(jnp.float32)[None] * x_t.astype(jnp.float32)
+        return h, y
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(b_ssm, 1, 0),
+        jnp.moveaxis(c_ssm, 1, 0),
+        jnp.moveaxis(x, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(dt.dtype)

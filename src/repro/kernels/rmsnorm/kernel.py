@@ -1,0 +1,43 @@
+"""Pallas TPU fused RMSNorm.
+
+One pass over each row block: mean-of-squares reduction in f32, rsqrt,
+scale — avoids the separate square/reduce/multiply HLOs (3 HBM round trips)
+of the unfused path.  Grid over row blocks; the full feature dim sits in
+VMEM (d_model ≤ 8192 → ≤ 32 KB/row at f32).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[:].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[:] = (x * jax.lax.rsqrt(var + eps) * w_ref[:].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "eps", "interpret"))
+def rmsnorm(x, w, *, blk: int = 256, eps: float = 1e-6, interpret: bool = True):
+    """x: (R, D) row-major activations; w: (D,)."""
+    r, d = x.shape
+    blk = min(blk, r)
+    n = r // blk
+    assert r % blk == 0, "row count must divide the block size"
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,16 @@
+"""Public wrapper for fused RMSNorm."""
+
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def rmsnorm_op(x, w, *, backend: str = "ref", eps: float = 1e-6):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if backend == "pallas":
+        out = rmsnorm(x2, w, eps=eps, interpret=True)
+    elif backend == "pallas_tpu":
+        out = rmsnorm(x2, w, eps=eps, interpret=False)
+    else:
+        out = rmsnorm_ref(x2, w, eps)
+    return out.reshape(shape)

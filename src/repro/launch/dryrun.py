@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, WITHOUT allocating any real tensors
+(ShapeDtypeStruct inputs only):
+
+  * proof that the sharded step function compiles for the production mesh
+    (16×16 single pod and 2×16×16 multi-pod),
+  * compiled.memory_analysis()  — per-device bytes (does it fit a v5e?),
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * a collective census parsed from the post-SPMD HLO text — bytes per
+    all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+    for the collective roofline term.
+
+Results are dumped as JSON under experiments/dryrun/ and consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, input_specs, supports
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    opt_pspecs,
+    param_pspecs,
+    to_named,
+)
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models.model import abstract_params, init_cache
+from repro.optim.adamw import AdamWConfig, init_opt_state
+
+from jax.sharding import PartitionSpec as P
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\bf64|\bf32|\bbf16|\bf16|\bs32|\bu32|\bs8|\bu8|\bpred|\bs64|\bu64)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shapes>.*?)\s*(?P<op>all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?P<suffix>-start|-done)?\("
+)
+
+
+def _parse_collectives(hlo_text: str):
+    """Sum *result* bytes per collective kind from post-partition HLO.
+
+    The result shape(s) sit between '=' and the op name; async '-done' ops
+    are skipped so start/done pairs are counted once."""
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        kind = m.group("op")
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(m.group("shapes")):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _BYTES[dt]
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+    return out
+
+
+def _maybe(d, *names):
+    for n in names:
+        if d and n in d:
+            return d[n]
+    return None
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, cfg_overrides=None):
+    cfg = get_config(arch)
+    act_axes = ("pod", "data") if mesh_kind == "multi" else ("data",)
+    cfg = dataclasses.replace(cfg, act_sharding=act_axes, **(cfg_overrides or {}))
+    if arch == "arctic-480b":
+        opt_cfg = AdamWConfig(state_dtype="bfloat16")
+    else:
+        opt_cfg = AdamWConfig()
+    sh = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+
+    specs = input_specs(cfg, shape_name)
+    aparams = abstract_params(cfg)
+    pspec = param_pspecs(aparams, cfg, mesh)
+    param_sh = to_named(pspec, mesh)
+    batch_sh = to_named(batch_pspecs(specs["batch"], mesh), mesh)
+
+    t0 = time.time()
+    if sh.kind == "train":
+        aopt = jax.eval_shape(lambda: init_opt_state(aparams, opt_cfg))
+        opt_sh = to_named(opt_pspecs(aopt, pspec), mesh)
+        step = make_train_step(cfg, opt_cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, to_named(P(), mesh)),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(aparams, aopt, specs["batch"])
+    elif sh.kind == "prefill":
+        step = make_prefill_step(cfg, max_len=sh.seq_len)
+        cache_abs = jax.eval_shape(
+            lambda: init_cache(cfg, sh.global_batch, sh.seq_len)
+        )
+        cache_sh = to_named(cache_pspecs(cache_abs, cfg, mesh, sh.global_batch), mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=(to_named(P(), mesh), cache_sh),
+        )
+        with mesh:
+            lowered = jitted.lower(aparams, specs["batch"])
+    else:  # decode
+        step = make_serve_step(cfg, window=sh.window)
+        cache_sh = to_named(
+            cache_pspecs(specs["cache"], cfg, mesh, sh.global_batch), mesh
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(param_sh, cache_sh, batch_sh),
+            out_shardings=(to_named(P(), mesh), cache_sh),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = jitted.lower(aparams, specs["cache"], specs["batch"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = _parse_collectives(hlo)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "n_devices": int(n_dev),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": _maybe(cost, "flops"),
+        "bytes_accessed": _maybe(cost, "bytes accessed", "bytes accessed0{}"),
+        "transcendentals": _maybe(cost, "transcendentals"),
+        "cost_analysis_keys": sorted(cost.keys())[:40] if cost else [],
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "collectives": coll,
+        "params": get_config(arch).param_count(),
+        "active_params": get_config(arch).active_param_count(),
+    }
+    return result
+
+
+def run_bodies(arch: str, shape_name: str, mesh_kind: str):
+    """Per-body probes (scan-trip correction) — see launch/probe.py."""
+    from repro.launch.probe import probe_bodies
+
+    cfg = get_config(arch)
+    act_axes = ("pod", "data") if mesh_kind == "multi" else ("data",)
+    cfg = dataclasses.replace(cfg, act_sharding=act_axes)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    aparams = abstract_params(cfg)
+    return probe_bodies(cfg, shape_name, mesh, aparams, _parse_collectives)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--bodies", action="store_true", help="run per-body probes instead of full modules")
+    ap.add_argument("--tuned", action="store_true", help="apply launch.tuned perf levers")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    if args.tuned and args.out == "experiments/dryrun":
+        args.out = "experiments/dryrun_tuned"
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if not supports(arch, shape):
+                print(f"SKIP  {arch} × {shape} (documented: full attention at 500k)")
+                continue
+            for mesh_kind in meshes:
+                tag = f"{arch}_{shape}_{mesh_kind}"
+                path = outdir / (f"{tag}.bodies.json" if args.bodies else f"{tag}.json")
+                if path.exists():
+                    print(f"CACHED {tag}")
+                    continue
+                print(f"RUN   {tag} ...", flush=True)
+                try:
+                    overrides = None
+                    if args.tuned:
+                        from repro.launch.tuned import TUNED
+
+                        overrides = TUNED.get(arch, {})
+                    if args.bodies:
+                        res = run_bodies(arch, shape, mesh_kind)
+                        path.write_text(json.dumps(res, indent=2))
+                        print("  ok (bodies)", flush=True)
+                        continue
+                    res = run_cell(arch, shape, mesh_kind, cfg_overrides=overrides)
+                    path.write_text(json.dumps(res, indent=2))
+                    print(
+                        f"  ok: compile {res['compile_s']}s flops/dev {res['flops']:.3e} "
+                        f"colls {sum(c['count'] for c in res['collectives'].values())}"
+                        if res["flops"]
+                        else f"  ok: compile {res['compile_s']}s",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures.append((tag, repr(e)[:300]))
+                    print(f"  FAIL {tag}: {repr(e)[:300]}", flush=True)
+    if failures:
+        print("\nFAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err}")
+        raise SystemExit(1)
+    print("\nall dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

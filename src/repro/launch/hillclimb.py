@@ -1,0 +1,139 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb harness: probe one (arch × shape) cell under config variants.
+
+Runs the full-module dry-run + body probes for a list of named config
+overrides and prints the three roofline terms per variant, so each
+hypothesis→change→measure iteration is one invocation (§Perf methodology).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch deepseek-coder-33b \
+      --shape train_4k --variant baseline --variant chunked_attn ...
+"""
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_config
+from repro.launch import dryrun as DR
+from benchmarks.roofline import PEAK_FLOPS, HBM_BW, _coll_seconds, _merge_colls, fmt_seconds
+
+VARIANTS = {
+    "baseline": {},
+    "chunked_attn": {"attn_impl": "chunked", "attn_chunk": 512},
+    "chunked_attn_1k": {"attn_impl": "chunked", "attn_chunk": 1024},
+    "seq_shard": {"attn_seq_shard": True},
+    "seq_shard_chunked": {"attn_seq_shard": True, "attn_impl": "chunked", "attn_chunk": 512},
+    "loss_chunk": {"loss_chunk": 512},
+    "dots_remat": {"remat": "dots_saveable"},
+    "no_remat": {"remat": "none"},
+    "chunked_all": {
+        "attn_impl": "chunked", "attn_chunk": 512, "attn_seq_shard": True, "loss_chunk": 512,
+    },
+    "seq_resid": {"attn_seq_shard": True, "seq_parallel_resid": True},
+    "seq_resid_loss": {
+        "attn_seq_shard": True, "seq_parallel_resid": True, "loss_chunk": 512,
+    },
+    "seq_resid_loss_chunked": {
+        "attn_seq_shard": True, "seq_parallel_resid": True, "loss_chunk": 512,
+        "attn_impl": "chunked", "attn_chunk": 1024,
+    },
+    "seq_resid_dots": {
+        "attn_seq_shard": True, "seq_parallel_resid": True, "remat": "dots_saveable",
+    },
+    "seq_resid_norem": {
+        "attn_seq_shard": True, "seq_parallel_resid": True, "remat": "none",
+    },
+    "moe_ep": {"moe_shard_dispatch": True},
+    "moe_ep_seq_resid": {
+        "moe_shard_dispatch": True, "attn_seq_shard": True, "seq_parallel_resid": True,
+    },
+    "moe_ep_seq_resid_cap1": {
+        "moe_shard_dispatch": True, "attn_seq_shard": True, "seq_parallel_resid": True,
+        "capacity_factor": 1.0,
+    },
+    "seq_resid_lc_norem": {
+        "attn_seq_shard": True, "seq_parallel_resid": True, "loss_chunk": 512,
+        "remat": "none",
+    },
+    "moe_grouped": {"moe_groups": 16},
+    "moe_grouped_seq_resid": {
+        "moe_groups": 16, "attn_seq_shard": True, "seq_parallel_resid": True,
+    },
+    "cap_tight": {"capacity_factor": 1.0},
+    "cap_tight_chunked": {"capacity_factor": 1.0, "attn_impl": "chunked", "attn_chunk": 512},
+}
+
+
+def measure(arch: str, shape: str, overrides: dict, mesh_kind: str = "single"):
+    from repro.launch.probe import probe_bodies
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import abstract_params
+
+    mod = DR.run_cell(arch, shape, mesh_kind, cfg_overrides=overrides)
+    cfg = dataclasses.replace(
+        get_config(arch), act_sharding=("data",), **overrides
+    )
+    mesh = make_production_mesh(multi_pod=False)
+    bodies = probe_bodies(cfg, shape, mesh, abstract_params(cfg), DR._parse_collectives)
+
+    flops = mod["flops"] or 0.0
+    bytes_ = mod["bytes_accessed"] or 0.0
+    colls = mod["collectives"]
+    for b in bodies:
+        app = 2 if (arch == "zamba2-7b" and b["name"].startswith("mamba")) else 1
+        extra = b["trips"] - app
+        for part in ("fwd", "bwd"):
+            if part in b and extra > 0:
+                flops += extra * b[part]["flops"]
+                bytes_ += extra * b[part]["bytes"]
+                colls = _merge_colls(colls, b[part]["collectives"], extra)
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "colls": colls,
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": bytes_ / HBM_BW,
+        "t_collective": _coll_seconds(colls),
+        "temp_gb": (mod["memory"]["temp_bytes"] or 0) / 1e9,
+        "bodies": bodies,
+        "module": mod,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", action="append", default=None)
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+    variants = args.variant or ["baseline"]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    print(f"{'variant':22s} {'compute':>10s} {'memory':>10s} {'collective':>11s} {'temp GB':>8s}")
+    for name in variants:
+        ov = VARIANTS[name]
+        try:
+            r = measure(args.arch, args.shape, ov)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name:22s} FAILED: {repr(e)[:160]}")
+            continue
+        tag = f"{args.arch}_{args.shape}_{name}"
+        (outdir / f"{tag}.json").write_text(
+            json.dumps({k: v for k, v in r.items() if k != "module"} | {"module_mem": r["module"]["memory"]}, indent=2, default=float)
+        )
+        print(
+            f"{name:22s} {fmt_seconds(r['t_compute']):>10s} {fmt_seconds(r['t_memory']):>10s} "
+            f"{fmt_seconds(r['t_collective']):>11s} {r['temp_gb']:8.1f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

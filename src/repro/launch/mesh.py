@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Single pod: 16×16 = 256 chips, axes (data, model).
+Multi pod:  2×16×16 = 512 chips, axes (pod, data, model) — the pod axis is
+the outer data-parallel axis (DCN-linked); params are sharded over
+(pod, data) for ZeRO storage and gradients reduce over it.
+
+Functions, not module constants: importing this module must never touch jax
+device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py does this)"
+        )
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(shape: Tuple[int, ...] = (1, 1), axes=("data", "model")) -> Mesh:
+    """Tiny mesh for CPU tests (1 device)."""
+    return Mesh(np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape), axes)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes that act as data parallel (pod joins data when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,242 @@
+"""Per-body cost probes — correcting XLA's scan-once cost accounting.
+
+``compiled.cost_analysis()`` counts a ``lax.scan``'s (while-loop) body ONCE,
+regardless of trip count (verified empirically; see EXPERIMENTS.md §Dry-run).
+The dry-run therefore compiles each *distinct block body* separately, with
+the same shardings and mesh as the full module, and reports
+
+    corrected_X = module_X + Σ_bodies (trips_b - 1) · body_X
+
+for X ∈ {flops, bytes, per-collective bytes}.  For training cells both the
+forward body and its VJP (with remat recompute) are probed, matching the
+fwd/bwd while-loops of the real module.  Prefill/decode bodies carry their
+KV/SSM cache slices so cache-dominated attention costs are captured.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import SHAPES
+from repro.launch.sharding import _param_rule, to_named
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _slice_lead(tree, n_lead: int):
+    def f(leaf):
+        return SDS(leaf.shape[n_lead:], leaf.dtype)
+    return jax.tree.map(f, tree)
+
+
+def _param_sh(tree, cfg, mesh):
+    d = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def rule(path, leaf):
+        keys = tuple(k.key if hasattr(k, "key") else str(k) for k in path)
+        return _param_rule(keys, leaf.ndim, cfg, d)
+
+    return to_named(jax.tree_util.tree_map_with_path(rule, tree), mesh)
+
+
+def _cost_of(compiled, parse_collectives):
+    cost = compiled.cost_analysis() or {}
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "collectives": parse_collectives(compiled.as_text()),
+    }
+
+
+class BodyProber:
+    def __init__(self, cfg: ModelConfig, shape_name: str, mesh: Mesh, aparams, parse_collectives):
+        self.cfg = cfg
+        self.sh = SHAPES[shape_name]
+        self.mesh = mesh
+        self.aparams = aparams
+        self.parse = parse_collectives
+        self.kind = self.sh.kind
+        self.b = self.sh.global_batch
+        self.s = 1 if self.kind == "decode" else self.sh.seq_len
+        self.dt = cfg.act_dtype()
+        d = ("pod", "data") if "pod" in mesh.axis_names else "data"
+        self.dspec = d
+        n_data = mesh.shape["data"] * mesh.shape.get("pod", 1)
+        self.bspec = d if (self.b % n_data == 0 and self.b > 1) else None
+        self.h_sh = NamedSharding(mesh, P(self.bspec, None, None))
+
+    # ---------------------------------------------------------------- pieces
+    def h_spec(self):
+        return SDS((self.b, self.s, self.cfg.d_model), self.dt)
+
+    def kv_cache_piece(self):
+        cfg, sh = self.cfg, self.sh
+        wlen = sh.window or sh.seq_len
+        kshape = (self.b, wlen, cfg.n_kv_heads, cfg.hd())
+        spec = P(self.bspec, "model", None, None)
+        return (
+            (SDS(kshape, self.dt), SDS(kshape, self.dt)),
+            (NamedSharding(self.mesh, spec), NamedSharding(self.mesh, spec)),
+        )
+
+    def ssm_cache_piece(self):
+        cfg = self.cfg
+        di, n = cfg.d_inner(), cfg.ssm_state
+        if cfg.ssm_version == 2:
+            nh, hp = di // cfg.ssm_head_dim, cfg.ssm_head_dim
+            sshape = (self.b, nh, hp, n)
+            sspec = P(self.bspec, "model", None, None)
+            conv_c = di + 2 * n
+        else:
+            sshape = (self.b, di, n)
+            sspec = P(self.bspec, "model", None)
+            conv_c = di
+        cshape = (self.b, cfg.d_conv - 1, conv_c)
+        cspec = P(self.bspec, None, "model")
+        return (
+            (SDS(sshape, jnp.float32), SDS(cshape, self.dt)),
+            (NamedSharding(self.mesh, sspec), NamedSharding(self.mesh, cspec)),
+        )
+
+    # ----------------------------------------------------------------- probe
+    def _run(self, fn, specs, shardings, vjp):
+        out: Dict[str, Any] = {}
+        jf = jax.jit(fn, in_shardings=shardings)
+        with self.mesh:
+            out["fwd"] = _cost_of(jf.lower(*specs).compile(), self.parse)
+        if vjp:
+            def bwd_fn(*args):
+                y, pullback = jax.vjp(fn, *args)
+                ct = jax.tree.map(lambda t: jnp.ones(t.shape, t.dtype), y)
+                return pullback(ct)
+
+            jb = jax.jit(bwd_fn, in_shardings=shardings)
+            with self.mesh:
+                out["bwd"] = _cost_of(jb.lower(*specs).compile(), self.parse)
+        return out
+
+    def _attn_body(self, bp_abs, trips, name):
+        cfg, kind = self.cfg, self.kind
+        is_train = kind == "train"
+        ring = kind == "decode" and self.sh.window > 0
+        window = self.sh.window
+
+        if kind == "train":
+            def body(h, bp):
+                out, _, _ = M._self_block(h, bp, cfg, jnp.arange(h.shape[1]))
+                return M._shard_act(out, cfg)
+
+            body = M._remat(cfg, body)
+            return dict(
+                name=name, trips=trips,
+                **self._run(body, (self.h_spec(), bp_abs), (self.h_sh, _param_sh(bp_abs, cfg, self.mesh)), True),
+            )
+        (kv_specs, kv_sh) = self.kv_cache_piece()
+        length = self.sh.seq_len - 1 if kind == "decode" else 0
+
+        def body(h, bp, k_l, v_l):
+            out, _, _ = M._self_block(
+                h, bp, cfg,
+                jnp.full((1,), length, jnp.int32) if kind == "decode" else jnp.arange(h.shape[1]),
+                cache=(k_l, v_l, jnp.asarray(length, jnp.int32)),
+                window=window, ring=ring,
+            )
+            return M._shard_act(out, cfg)
+
+        return dict(
+            name=name, trips=trips,
+            **self._run(
+                body,
+                (self.h_spec(), bp_abs, *kv_specs),
+                (self.h_sh, _param_sh(bp_abs, cfg, self.mesh), *kv_sh),
+                False,
+            ),
+        )
+
+    def _mamba_body(self, bp_abs, trips, name):
+        cfg, kind = self.cfg, self.kind
+        if kind == "train":
+            def body(h, bp):
+                out, _ = M._mamba_layer(h, bp, cfg)
+                return M._shard_act(out, cfg)
+
+            body = M._remat(cfg, body)
+            return dict(
+                name=name, trips=trips,
+                **self._run(body, (self.h_spec(), bp_abs), (self.h_sh, _param_sh(bp_abs, cfg, self.mesh)), True),
+            )
+        (st_specs, st_sh) = self.ssm_cache_piece()
+
+        def body(h, bp, s_l, c_l):
+            out, _ = M._mamba_layer(h, bp, cfg, state=(s_l, c_l) if kind == "decode" else None)
+            return M._shard_act(out, cfg)
+
+        return dict(
+            name=name, trips=trips,
+            **self._run(
+                body,
+                (self.h_spec(), bp_abs, *st_specs),
+                (self.h_sh, _param_sh(bp_abs, cfg, self.mesh), *st_sh),
+                False,
+            ),
+        )
+
+    def _cross_body(self, bp_abs, trips):
+        cfg = self.cfg
+        img_spec = SDS((self.b, cfg.n_img_tokens, cfg.d_model), self.dt)
+        is_train = self.kind == "train"
+
+        def body(h, bp, img):
+            return M._shard_act(
+                M._cross_block(h, bp, cfg, jnp.arange(h.shape[1]), img), cfg
+            )
+
+        if is_train:
+            body = M._remat(cfg, body)
+        return dict(
+            name="cross_block", trips=trips,
+            **self._run(
+                body,
+                (self.h_spec(), bp_abs, img_spec),
+                (self.h_sh, _param_sh(bp_abs, cfg, self.mesh), self.h_sh),
+                is_train,
+            ),
+        )
+
+    # ------------------------------------------------------------------ main
+    def probe(self) -> List[Dict[str, Any]]:
+        cfg, p = self.cfg, self.aparams
+        fam = cfg.family
+        if fam in ("dense", "moe", "audio"):
+            return [self._attn_body(_slice_lead(p["blocks"], 1), cfg.n_layers, "self_block")]
+        if fam == "ssm":
+            return [self._mamba_body(_slice_lead(p["blocks"], 1), cfg.n_layers, "mamba1_layer")]
+        if fam == "hybrid":
+            out = [
+                self._mamba_body(_slice_lead(p["mamba_groups"], 2), cfg.n_layers, "mamba2_layer"),
+                self._attn_body(p["shared_attn"], cfg.n_layers // cfg.attn_every, "shared_attn"),
+            ]
+            return out
+        if fam == "vlm":
+            g = cfg.n_layers // cfg.cross_attn_every
+            per = cfg.cross_attn_every - 1
+            out = [
+                self._attn_body(_slice_lead(p["self_blocks"], 2), g * per, "self_block"),
+            ]
+            # decode-path cross block uses precomputed image KV; approximate
+            # with the full cross block for train/prefill, skip the tiny
+            # decode cross-attn correction (image KV already cached)
+            if self.kind != "decode":
+                out.append(self._cross_body(_slice_lead(p["cross_blocks"], 1), g))
+            return out
+        raise ValueError(fam)
+
+
+def probe_bodies(cfg, shape_name, mesh, aparams, parse_collectives):
+    return BodyProber(cfg, shape_name, mesh, aparams, parse_collectives).probe()

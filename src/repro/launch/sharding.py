@@ -1,0 +1,148 @@
+"""Sharding rules: parameter, batch, and cache PartitionSpecs per arch.
+
+Scheme (megatron-style TP on the `model` axis + ZeRO/FSDP on the data axes):
+
+  embed (V, D)                     -> (model, data)
+  lm_head (D, V)                   -> (data, model)
+  attn wq/wk/wv (…, D, H·hd)       -> (…, data, model)     head-sharded TP
+  attn wo (…, H·hd, D)             -> (…, model, data)
+  mlp w1/w3 (…, D, F)              -> (…, data, model)
+  mlp w2 (…, F, D)                 -> (…, model, data)
+  moe router (…, D, E)             -> (…, data, None)
+  moe w1/w3 (…, E, D, F)           -> (…, model, data, None)   expert parallel
+  moe w2 (…, E, F, D)              -> (…, model, None, data)
+  mamba in/out projections         -> like mlp (d_inner on model)
+  norms / biases / gates / scalars -> model on the channel dim where it is
+                                       d_inner-sized, else replicated
+
+`…` are the leading layer-stack axes (never sharded).  On the multi-pod mesh
+the data axes are ('pod', 'data') so parameters/optimizer state shard over
+all 512 chips.
+
+Batch: (B, …) over the data axes.  Decode KV caches shard batch over data and
+the *context* dim over model (context-parallel decode — always divisible,
+unlike kv-head sharding with kv=8 on a 16-way axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _param_rule(path: Tuple[str, ...], ndim: int, cfg: ModelConfig, d: Tuple[str, ...]):
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    in_moe = "moe" in path
+    lead = lambda k: (None,) * (ndim - k)
+
+    if name == "embed":
+        return P("model", d)
+    if name == "lm_head":
+        return P(d, "model")
+    if name in ("wq", "wk", "wv"):
+        return P(*lead(2), d, "model")
+    if name == "wo":
+        return P(*lead(2), "model", d)
+    if name in ("w1", "w3"):
+        if in_moe and parent == "moe":  # (…, E, D, F)
+            return P(*lead(3), "model", d, None)
+        return P(*lead(2), d, "model")
+    if name == "w2":
+        if in_moe and parent == "moe":  # (…, E, F, D)
+            return P(*lead(3), "model", None, d)
+        return P(*lead(2), "model", d)
+    if name == "router":
+        return P(*lead(2), d, None)
+    if name == "in_proj":
+        return P(*lead(2), d, "model")
+    if name == "out_proj":
+        return P(*lead(2), "model", d)
+    if name in ("conv_w",):
+        return P(*lead(2), "model", None)
+    if name in ("x_proj",):
+        return P(*lead(2), "model", None)
+    if name == "dt_proj":
+        return P(*lead(2), None, "model")
+    if name == "A_log" and cfg.ssm_version == 1:
+        return P(*lead(2), "model", None)
+    if name in ("conv_b", "dt_bias", "D_skip", "norm_scale", "A_log"):
+        return P(*lead(1), "model")
+    if name in ("bq", "bk", "bv"):
+        return P(*lead(1), "model")
+    # norms, gates, counters: replicated
+    return P()
+
+
+def param_pspecs(abstract_params, cfg: ModelConfig, mesh: Mesh):
+    d = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def rule(path, leaf):
+        keys = tuple(
+            k.key if hasattr(k, "key") else str(k) for k in path
+        )
+        return _param_rule(keys, leaf.ndim, cfg, d)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def opt_pspecs(abstract_opt, param_specs):
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "count": P(),
+    }
+
+
+def batch_pspecs(batch_specs, mesh: Mesh, *, shard_batch: bool = True):
+    d = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def rule(path, leaf):
+        if not shard_batch or leaf.shape[0] == 1:
+            return P()
+        return P(d, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_specs)
+
+
+def cache_pspecs(cache_specs, cfg: ModelConfig, mesh: Mesh, batch_size: int):
+    """Decode caches: batch over data (when divisible), context over model."""
+    d = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    n_data = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    bspec = d if batch_size % n_data == 0 and batch_size > 1 else None
+
+    def rule(path, leaf):
+        keys = tuple(k.key if hasattr(k, "key") else str(k) for k in path)
+        name = keys[-1]
+        if name == "len":
+            return P()
+        nd = leaf.ndim
+        if name in ("k", "v", "attn_k", "attn_v", "img_k", "img_v"):
+            # (L…, B, W, kv, hd): batch over data, context over model
+            lead = nd - 4
+            return P(*([None] * lead), bspec, "model", None, None)
+        if name in ("ssm", "tail_ssm"):
+            # (L…, B, H|DI, P?, N): batch over data, channel/head over model
+            lead = nd - (4 if cfg.ssm_version == 2 else 3)
+            if cfg.ssm_version == 2:
+                return P(*([None] * lead), bspec, "model", None, None)
+            return P(*([None] * lead), bspec, "model", None)
+        if name in ("conv", "tail_conv"):
+            # (L…, B, K-1, C): channel over model
+            lead = nd - 3
+            return P(*([None] * lead), bspec, None, "model")
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_specs)
+
+
+def to_named(tree_of_pspecs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_of_pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,44 @@
+"""Step functions lowered by the dry-run and executed by the launchers.
+
+  train_step(params, opt_state, batch)        -> (params, opt_state, metrics)
+  prefill_step(params, batch)                 -> (last_logits, cache)
+  serve_step(params, cache, batch)            -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, loss_fn, prefill
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, cfg, batch))(params)
+        new_params, new_opt, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch, max_len)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, window: int = 0):
+    def serve_step(params, cache, batch):
+        logits, new_cache = decode_step(params, cfg, cache, batch, window=window)
+        next_token = jnp.argmax(logits[:, -1], axis=-1)
+        return {"logits": logits, "next_token": next_token}, new_cache
+
+    return serve_step

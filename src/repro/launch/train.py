@@ -1,0 +1,64 @@
+"""Production training launcher.
+
+Selects an architecture (``--arch``), builds the mesh, shards params/opt/
+batch per launch/sharding.py, and runs the fault-tolerant training loop with
+DFC-Checkpoint.  On this CPU container it is exercised with reduced configs
+(``--reduced``) — the same code path the dry-run lowers for the full configs
+on the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \
+      --steps 50 --ckpt-dir /tmp/dfc_ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import jax
+
+from repro.checkpoint.dfc_checkpoint import SimFS
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.data.pipeline import DataPipeline
+from repro.launch.tuned import apply_tuning
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train_loop import TrainRuntime
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true", help="CPU-sized smoke config")
+    ap.add_argument("--tuned", action="store_true", default=True)
+    ap.add_argument("--no-tuned", dest="tuned", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/dfc_ckpt")
+    ap.add_argument("--workers", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.tuned:
+        cfg = apply_tuning(cfg)
+    if cfg.family in ("vlm", "audio"):
+        raise SystemExit(
+            f"{args.arch}: frontend-stub arch — drive via examples/ or dryrun"
+        )
+
+    pipe = DataPipeline(vocab=cfg.vocab, batch_size=args.batch, seq_len=args.seq)
+    fs = SimFS(Path(args.ckpt_dir))
+    rt = TrainRuntime(
+        cfg, AdamWConfig(), pipe, fs, n_workers=args.workers, ckpt_every=args.ckpt_every
+    )
+    params, opt, step, cursor, report = rt.boot()
+    if step:
+        print(f"resuming from committed step {step} (detectability: {report})")
+    params, opt, losses = rt.train(args.steps)
+    print(f"trained to step {args.steps}: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    print(f"persistence: {fs.stats}")
+
+
+if __name__ == "__main__":
+    main()

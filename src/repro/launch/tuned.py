@@ -1,0 +1,37 @@
+"""Per-arch tuned perf levers — the hillclimb results as deployable defaults.
+
+`apply_tuning(cfg)` returns the optimized configuration for the production
+mesh (EXPERIMENTS.md §Perf).  Levers are math-preserving (validated in
+tests/); they only change sharding structure, dispatch layout, and
+chunking.  Baseline (paper-faithful substrate) is always available with
+``--no-tuned``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+# context-parallel attention + sequence-parallel residual: wins on every
+# attention-bearing arch whose head count is not divisible by the TP width,
+# and is neutral-to-positive on the others (EXPERIMENTS.md §Perf A/C)
+_ATTN_TUNING = dict(attn_seq_shard=True, seq_parallel_resid=True)
+
+TUNED = {
+    "llama-3.2-vision-11b": _ATTN_TUNING,
+    "zamba2-7b": _ATTN_TUNING,
+    "smollm-135m": _ATTN_TUNING,
+    "qwen2-1.5b": _ATTN_TUNING,
+    "olmo-1b": _ATTN_TUNING,
+    "deepseek-coder-33b": _ATTN_TUNING,
+    "musicgen-large": _ATTN_TUNING,
+    "arctic-480b": dict(moe_groups=16, **_ATTN_TUNING),
+    "dbrx-132b": dict(moe_groups=16, **_ATTN_TUNING),
+    "falcon-mamba-7b": dict(seq_parallel_resid=True),
+}
+
+
+def apply_tuning(cfg: ModelConfig) -> ModelConfig:
+    overrides = TUNED.get(cfg.name, {})
+    return dataclasses.replace(cfg, **overrides)

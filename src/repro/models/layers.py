@@ -1,0 +1,169 @@
+"""Shared neural-net layers: norms, rotary embeddings, attention (GQA +
+KV-cache + cross-attention), MLPs.  Pure-jnp reference path; the Pallas
+kernels in ``repro.kernels`` implement the hot spots for TPU (selected via
+``use_pallas`` at the model level — the math is identical).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------------- norms
+def rmsnorm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_np(x, _scale_unused=None, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm (no scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(kind: str, x, scale):
+    if kind == "rmsnorm":
+        return rmsnorm(x, scale)
+    return layernorm_np(x)
+
+
+# -------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions: i32[...]; returns (cos, sin) with shape positions.shape + (hd/2,)."""
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (S, hd/2) or (B, S, hd/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:  # (S, hd/2): broadcast over batch + heads
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:  # (B, S, hd/2): broadcast over heads
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    rot1 = x1 * cos - x2 * sin
+    rot2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rot1, rot2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def gqa_attention(
+    q,  # (B, S, Hq, hd)
+    k,  # (B, T, Hkv, hd)
+    v,  # (B, T, Hkv, hd)
+    causal: bool = True,
+    q_offset=0,  # absolute position of q[0] (decode: T-1)
+    window: int = 0,  # sliding window size, 0 = full
+):
+    """Grouped-query attention, f32 softmax, optional causal/sliding mask."""
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qf = q.reshape(b, s, hkv, group, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, kf) / np.sqrt(hd)
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def attention_block(
+    x,
+    p,  # params: wq, wk, wv, wo (+ bq, bk, bv if qkv_bias)
+    cfg,
+    positions,
+    kv_cache: Optional[Tuple] = None,  # (k_cache, v_cache, length)
+    kv_override: Optional[Tuple] = None,  # cross-attention K/V source (B,T,D)
+    window: int = 0,
+):
+    """Self- or cross-attention with optional KV cache.
+
+    Returns (out, new_kv_cache_entry or None).
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, hq, hd)
+    if kv_override is not None:
+        src = kv_override
+        k = jnp.einsum("btd,dh->bth", src, p["wk"]).reshape(b, -1, hkv, hd)
+        v = jnp.einsum("btd,dh->bth", src, p["wv"]).reshape(b, -1, hkv, hd)
+    else:
+        k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, s, hkv, hd)
+        v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, s, hkv, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(1, 1, hq, hd)
+        k = k + p["bk"].reshape(1, 1, hkv, hd) if kv_override is None else k
+        v = v + p["bv"].reshape(1, 1, hkv, hd) if kv_override is None else v
+
+    new_cache = None
+    if kv_override is not None:
+        # cross-attention: no causal mask, no rope on kv
+        cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+        q = apply_rope(q, cos, sin)
+        out = gqa_attention(q, k, v, causal=False)
+    elif kv_cache is not None:
+        k_cache, v_cache, length = kv_cache
+        cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, length, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, length, 0, 0))
+        # causal mask with q_offset covers the invalid (zero-init) cache tail
+        out = gqa_attention(
+            q, k_cache, v_cache, causal=True, q_offset=length, window=window
+        )
+        new_cache = (k_cache, v_cache, length + s)
+    else:
+        cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        if getattr(cfg, "attn_seq_shard", False) and cfg.act_sharding:
+            # context-parallel attention: shard the sequence over 'model'
+            # (always divisible, unlike head counts like 56 or 9 on a 16-way
+            # axis) and replicate the small GQA K/V.  Kills the partial-sum
+            # score all-reduce GSPMD emits for indivisible head sharding.
+            from jax.sharding import PartitionSpec as P
+
+            wsc = jax.lax.with_sharding_constraint
+            q = wsc(q, P(cfg.act_sharding, "model", None, None))
+            k = wsc(k, P(cfg.act_sharding, None, None, None))
+            v = wsc(v, P(cfg.act_sharding, None, None, None))
+        if getattr(cfg, "attn_impl", "naive") == "chunked":
+            from repro.kernels.flash_attention.ops import chunked_attention
+
+            out = chunked_attention(q, k, v, causal=True, blk_k=cfg.attn_chunk)
+        else:
+            out = gqa_attention(q, k, v, causal=True, window=window)
+        if getattr(cfg, "attn_seq_shard", False) and cfg.act_sharding:
+            from jax.sharding import PartitionSpec as P
+
+            out = jax.lax.with_sharding_constraint(
+                out, P(cfg.act_sharding, "model", None, None)
+            )
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, hq * hd), p["wo"])
+    return out, new_cache
+
+
+# -------------------------------------------------------------------- MLPs
+def mlp_block(x, p, kind: str = "swiglu"):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+        return h @ p["w2"]
+    h = jax.nn.gelu(x @ p["w1"])
+    return h @ p["w2"]

@@ -1,0 +1,207 @@
+"""Mamba blocks: mamba1 (falcon-mamba-7b) and mamba2/SSD (zamba2-7b).
+
+Training path uses chunk-parallel formulations that map onto the MXU:
+  * mamba1 — diagonal selective scan; sequential `lax.scan` over the time
+    axis with a (B, d_inner, d_state) carry for the reference path, and the
+    chunked Pallas kernel (`repro.kernels.mamba_scan`) for TPU.
+  * mamba2 — the SSD chunked algorithm: intra-chunk attention-like matmuls
+    plus an inter-chunk state recurrence (matmul-dominated, TPU-friendly).
+
+Decode path is O(1) per token for both (the whole point of SSMs for the
+``long_500k`` shape): the carried state is (B, d_inner, d_state) (mamba1) or
+(B, H, P, N) (mamba2) plus a (B, d_conv-1, conv_width) convolution tail.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------- primitives
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv1d.  x: (B, S, C), w: (C, K), tail: (B, K-1, C).
+
+    Returns (y, new_tail)."""
+    bsz, s, c = x.shape
+    k = w.shape[1]
+    if tail is None:
+        tail = jnp.zeros((bsz, k - 1, c), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, S+K-1, C)
+    # window sum: y[t] = sum_j xp[t+j] * w[:, j]
+    y = jnp.zeros((bsz, s, c), jnp.float32)
+    for j in range(k):
+        y = y + xp[:, j : j + s, :].astype(jnp.float32) * w[:, j].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_tail = xp[:, s:, :]
+    return y.astype(x.dtype), new_tail
+
+
+# ------------------------------------------------------------------ mamba1
+def mamba1_scan(abar, bx):
+    """h_t = abar_t * h_{t-1} + bx_t over axis 1.  (B, S, DI, N) -> (B, S, DI, N).
+
+    Associative scan (log-depth, parallel) — the jnp reference; the Pallas
+    kernel uses a chunked work-efficient version."""
+
+    def comb(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(comb, (abar, bx), axis=1)
+    return h
+
+
+def mamba1_block(x, p, cfg, state: Optional[Tuple] = None):
+    """x: (B, S, D).  state: (ssm_h (B, DI, N), conv_tail) for decode.
+
+    Returns (out, new_state)."""
+    b, s, d = x.shape
+    di, n = cfg.d_inner(), cfg.ssm_state
+    xz = x @ p["in_proj"]  # (B, S, 2*DI)
+    xpart, z = jnp.split(xz, 2, axis=-1)
+    conv_tail = state[1] if state is not None else None
+    xpart, new_tail = _causal_conv(xpart, p["conv_w"], p["conv_b"], conv_tail)
+    xpart = jax.nn.silu(xpart)
+
+    proj = xpart @ p["x_proj"]  # (B, S, dtr + 2N)
+    dtr = cfg.dtr()
+    dt_raw, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # (B, S, DI)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (DI, N)
+    abar = jnp.exp(dt.astype(jnp.float32)[..., None] * a[None, None])  # (B,S,DI,N)
+    bx = (
+        dt.astype(jnp.float32)[..., None]
+        * b_ssm.astype(jnp.float32)[:, :, None, :]
+        * xpart.astype(jnp.float32)[..., None]
+    )
+
+    if state is not None and s == 1:
+        h0 = state[0]  # (B, DI, N)
+        h = abar[:, 0] * h0 + bx[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0].astype(jnp.float32))[:, None]
+        new_h = h
+    else:
+        hs = mamba1_scan(abar, bx)  # (B, S, DI, N)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, c_ssm.astype(jnp.float32))
+        new_h = hs[:, -1]
+    y = y + p["D_skip"].astype(jnp.float32) * xpart.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    return out, (new_h, new_tail)
+
+
+# ------------------------------------------------------------------ mamba2
+def ssd_chunked(xh, dt, a_log, b_ssm, c_ssm, chunk: int, init_state=None):
+    """Mamba2 SSD forward.
+
+    xh:    (B, S, H, P)   value heads
+    dt:    (B, S, H)      positive step sizes (already softplus'd)
+    a_log: (H,)           per-head log decay
+    b_ssm: (B, S, N)      input projection (single group)
+    c_ssm: (B, S, N)      output projection
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p_dim = xh.shape
+    n = b_ssm.shape[-1]
+    nc = s // chunk
+    q = chunk
+    f32 = jnp.float32
+
+    da = dt.astype(f32) * (-jnp.exp(a_log.astype(f32)))[None, None]  # (B,S,H) <= 0
+    da = da.reshape(bsz, nc, q, h)
+    xc = xh.reshape(bsz, nc, q, h, p_dim).astype(f32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(f32)
+    bc = b_ssm.reshape(bsz, nc, q, n).astype(f32)
+    cc = c_ssm.reshape(bsz, nc, q, n).astype(f32)
+
+    cum = jnp.cumsum(da, axis=2)  # (B, C, Q, H) cumulative log decay
+    total = cum[:, :, -1]  # (B, C, H)
+
+    # intra-chunk: Y[t] = sum_{tau<=t} exp(cum_t - cum_tau) * (C_t . B_tau) dt_tau x_tau
+    decay = jnp.exp(cum[:, :, :, None] - cum[:, :, None, :])  # (B,C,Qt,Qtau,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)  # (B,C,Qt,Qtau)
+    w = cb[..., None] * decay  # (B,C,Qt,Qtau,H)
+    y_diag = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", w, dtc, xc)
+
+    # chunk states: S_c = sum_tau exp(total - cum_tau) B_tau (dt_tau x_tau)
+    state_decay = jnp.exp(total[:, :, None] - cum)  # (B,C,Q,H)
+    s_chunk = jnp.einsum("bckn,bckh,bckhp->bchpn", bc, state_decay * dtc, xc)
+
+    # inter-chunk recurrence over C
+    def step(carry, inp):
+        s_prev = carry  # (B,H,P,N)
+        tot, s_c = inp  # (B,H), (B,H,P,N)
+        s_new = s_prev * jnp.exp(tot)[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    init = (
+        init_state.astype(f32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p_dim, n), f32)
+    )
+    final, s_prevs = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(total, 1, 0), jnp.moveaxis(s_chunk, 1, 0)),
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)  # (B,C,H,P,N) state entering chunk
+
+    # off-diagonal: Y_off[t] = exp(cum_t) C_t . S_prev
+    y_off = jnp.einsum("bcqn,bchpn->bcqhp", cc, s_prevs) * jnp.exp(cum)[..., None]
+    y = (y_diag + y_off).reshape(bsz, s, h, p_dim)
+    return y, final
+
+
+def mamba2_block(x, p, cfg, state: Optional[Tuple] = None):
+    """Mamba2 block (zamba2).  x: (B, S, D); state: (ssm (B,H,P,N), conv_tail)."""
+    b, s, d = x.shape
+    di, n = cfg.d_inner(), cfg.ssm_state
+    hp = cfg.ssm_head_dim
+    nh = di // hp
+    zxbcdt = x @ p["in_proj"]  # (B, S, 2*DI + 2N + H)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    conv_tail = state[1] if state is not None else None
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_tail)
+    xbc = jax.nn.silu(xbc)
+    xpart, b_ssm, c_ssm = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])  # (B, S, H)
+
+    xh = xpart.reshape(b, s, nh, hp)
+    if state is not None and s == 1:
+        h0 = state[0]  # (B, H, P, N)
+        da = jnp.exp(
+            dt[:, 0].astype(jnp.float32) * (-jnp.exp(p["A_log"].astype(jnp.float32)))[None]
+        )  # (B, H)
+        upd = jnp.einsum(
+            "bn,bh,bhp->bhpn",
+            b_ssm[:, 0].astype(jnp.float32),
+            dt[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32),
+        )
+        h_new = h0 * da[:, :, None, None] + upd
+        yh = jnp.einsum("bhpn,bn->bhp", h_new, c_ssm[:, 0].astype(jnp.float32))
+        yh = yh + p["D_skip"].astype(jnp.float32)[None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = yh.reshape(b, 1, di)
+        final = h_new
+    else:
+        chunk = min(128, s) if s % min(128, s) == 0 else s
+        y4, final = ssd_chunked(
+            xh, dt, p["A_log"], b_ssm, c_ssm, chunk=chunk,
+            init_state=state[0] if state is not None else None,
+        )
+        y4 = y4 + p["D_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(
+            jnp.float32
+        )
+        y = y4.reshape(b, s, di)
+    # gated RMSNorm (mamba2 style): norm(y * silu(z))
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    out = g.astype(x.dtype) @ p["out_proj"]
+    return out, (final, new_tail)

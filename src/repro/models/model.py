@@ -1,0 +1,700 @@
+"""Unified scan-over-layers model covering all assigned families.
+
+Families and their block structure:
+  dense / moe / audio : scan over L identical blocks (attn + mlp/moe)
+  vlm (llama-3.2-vision): scan over G groups of (cross_attn_every-1) self
+        blocks + 1 cross-attention block against stub image embeddings
+  ssm (falcon-mamba)  : scan over L mamba1 blocks
+  hybrid (zamba2)     : scan over G groups of `attn_every` mamba2 blocks,
+        one *shared* attention+MLP block applied after every group (weights
+        shared across applications, zamba-style), plus a mamba tail
+
+Three entry points per model:
+  forward(params, batch)              -> logits             (training fwd)
+  loss(params, batch)                 -> scalar             (train_step body)
+  init_cache(cfg, batch, max_len)     -> cache pytree       (decode)
+  decode_step(params, cache, tok)     -> (logits, cache)    (serve_step body)
+  prefill(params, batch, max_len)     -> (logits, cache)
+
+Decode caches for attention are *right-aligned rolling windows* when
+cfg window > 0 (zamba2 long-context) and insert-at-length buffers otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_norm,
+    apply_rope,
+    attention_block,
+    gqa_attention,
+    mlp_block,
+    rope_freqs,
+)
+from repro.models.mamba import mamba1_block, mamba2_block
+from repro.models.moe import moe_ffn
+
+Params = Dict[str, Any]
+
+
+def _shard_act(x, cfg, *trailing):
+    """Anchor the batch dim of an activation to the data axes (GSPMD hint).
+
+    Without this anchor the partitioner can propagate a weight sharding onto
+    the residual stream's feature dim and drop batch parallelism entirely
+    (observed: 155 GB/device attention temps on smollm train_4k)."""
+    if not cfg.act_sharding:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    if trailing:
+        spec = trailing
+    elif (
+        getattr(cfg, "seq_parallel_resid", False)
+        and x.ndim == 3
+        and x.shape[1] % 16 == 0  # never shard decode's S=1 over the TP axis
+    ):
+        spec = ("model",) + (None,) * (x.ndim - 2)
+    else:
+        spec = (None,) * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(x, P(cfg.act_sharding, *spec))
+
+
+# ============================================================== initialization
+def _dense(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _attn_params(key, cfg, dtype, layers_shape=()):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense(ks[0], layers_shape + (d, hq * hd), dtype),
+        "wk": _dense(ks[1], layers_shape + (d, hkv * hd), dtype),
+        "wv": _dense(ks[2], layers_shape + (d, hkv * hd), dtype),
+        "wo": _dense(ks[3], layers_shape + (hq * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros(layers_shape + (hq * hd,), dtype)
+        p["bk"] = jnp.zeros(layers_shape + (hkv * hd,), dtype)
+        p["bv"] = jnp.zeros(layers_shape + (hkv * hd,), dtype)
+    return p
+
+
+def _mlp_params(key, cfg, dtype, layers_shape=(), d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": _dense(ks[0], layers_shape + (d, f), dtype),
+        "w2": _dense(ks[1], layers_shape + (f, d), dtype),
+    }
+    if cfg.mlp == "swiglu":
+        p["w3"] = _dense(ks[2], layers_shape + (d, f), dtype)
+    return p
+
+
+def _moe_params(key, cfg, dtype, layers_shape=()):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_dff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense(ks[0], layers_shape + (d, e), jnp.float32),
+        "w1": _dense(ks[1], layers_shape + (e, d, f), dtype),
+        "w3": _dense(ks[2], layers_shape + (e, d, f), dtype),
+        "w2": _dense(ks[3], layers_shape + (e, f, d), dtype),
+    }
+    if cfg.dense_residual:
+        p["dense"] = _mlp_params(ks[4], cfg, dtype, layers_shape)
+    return p
+
+
+def _mamba_params(key, cfg, dtype, layers_shape=()):
+    d, di, n = cfg.d_model, cfg.d_inner(), cfg.ssm_state
+    ks = jax.random.split(key, 10)
+    if cfg.ssm_version == 1:
+        dtr = cfg.dtr()
+        return {
+            "in_proj": _dense(ks[0], layers_shape + (d, 2 * di), dtype),
+            "conv_w": _dense(ks[1], layers_shape + (di, cfg.d_conv), dtype, 0.1),
+            "conv_b": jnp.zeros(layers_shape + (di,), dtype),
+            "x_proj": _dense(ks[2], layers_shape + (di, dtr + 2 * n), dtype),
+            "dt_proj": _dense(ks[3], layers_shape + (dtr, di), dtype),
+            "dt_bias": jnp.full(layers_shape + (di,), -4.6, dtype),  # softplus^-1(0.01)
+            "A_log": jnp.broadcast_to(
+                jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), layers_shape + (di, n)
+            ),
+            "D_skip": jnp.ones(layers_shape + (di,), jnp.float32),
+            "out_proj": _dense(ks[4], layers_shape + (di, d), dtype),
+        }
+    nh = di // cfg.ssm_head_dim
+    conv_c = di + 2 * n
+    return {
+        "in_proj": _dense(ks[0], layers_shape + (d, 2 * di + 2 * n + nh), dtype),
+        "conv_w": _dense(ks[1], layers_shape + (conv_c, cfg.d_conv), dtype, 0.1),
+        "conv_b": jnp.zeros(layers_shape + (conv_c,), dtype),
+        "dt_bias": jnp.zeros(layers_shape + (nh,), dtype),
+        "A_log": jnp.zeros(layers_shape + (nh,), jnp.float32),
+        "D_skip": jnp.ones(layers_shape + (nh,), jnp.float32),
+        "norm_scale": jnp.ones(layers_shape + (di,), dtype),
+        "out_proj": _dense(ks[2], layers_shape + (di, d), dtype),
+    }
+
+
+def _norm_scale(cfg, dtype, layers_shape=()):
+    if cfg.norm == "rmsnorm":
+        return jnp.ones(layers_shape + (cfg.d_model,), dtype)
+    return jnp.zeros(layers_shape + (0,), dtype)  # non-parametric: empty leaf
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = cfg.act_dtype()
+    ks = jax.random.split(key, 12)
+    p: Params = {}
+    if not cfg.embedding_inputs:
+        p["embed"] = _dense(ks[0], (cfg.vocab, cfg.d_model), dtype)
+    p["final_norm"] = _norm_scale(cfg, dtype)
+    if cfg.tie_embeddings and not cfg.embedding_inputs:
+        pass  # logits via embed.T
+    else:
+        p["lm_head"] = _dense(ks[1], (cfg.d_model, cfg.vocab), dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "audio"):
+        L = (cfg.n_layers,)
+        blocks = {
+            "norm1": _norm_scale(cfg, dtype, L),
+            "norm2": _norm_scale(cfg, dtype, L),
+            "attn": _attn_params(ks[2], cfg, dtype, L),
+        }
+        if fam == "moe":
+            blocks["moe"] = _moe_params(ks[3], cfg, dtype, L)
+        else:
+            blocks["mlp"] = _mlp_params(ks[3], cfg, dtype, L)
+        p["blocks"] = blocks
+    elif fam == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_every  # groups
+        per = cfg.cross_attn_every - 1  # self layers per group
+        GS = (g, per)
+        p["self_blocks"] = {
+            "norm1": _norm_scale(cfg, dtype, GS),
+            "norm2": _norm_scale(cfg, dtype, GS),
+            "attn": _attn_params(ks[2], cfg, dtype, GS),
+            "mlp": _mlp_params(ks[3], cfg, dtype, GS),
+        }
+        p["cross_blocks"] = {
+            "norm1": _norm_scale(cfg, dtype, (g,)),
+            "norm2": _norm_scale(cfg, dtype, (g,)),
+            "attn": _attn_params(ks[4], cfg, dtype, (g,)),
+            "mlp": _mlp_params(ks[5], cfg, dtype, (g,)),
+            "gate": jnp.zeros((g,), jnp.float32),  # tanh-gated cross-attn
+        }
+    elif fam == "ssm":
+        L = (cfg.n_layers,)
+        p["blocks"] = {
+            "norm1": _norm_scale(cfg, dtype, L),
+            "mamba": _mamba_params(ks[2], cfg, dtype, L),
+        }
+    elif fam == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - g * cfg.attn_every
+        GS = (g, cfg.attn_every)
+        p["mamba_groups"] = {
+            "norm1": _norm_scale(cfg, dtype, GS),
+            "mamba": _mamba_params(ks[2], cfg, dtype, GS),
+        }
+        if tail:
+            p["mamba_tail"] = {
+                "norm1": _norm_scale(cfg, dtype, (tail,)),
+                "mamba": _mamba_params(ks[3], cfg, dtype, (tail,)),
+            }
+        p["shared_attn"] = {
+            "norm1": _norm_scale(cfg, dtype),
+            "norm2": _norm_scale(cfg, dtype),
+            "attn": _attn_params(ks[4], cfg, dtype),
+            "mlp": _mlp_params(ks[5], cfg, dtype),
+        }
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """Shape/dtype pytree without allocation (for the dry-run)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ================================================================ block bodies
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = {
+        "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+        "dots_saveable": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[cfg.remat]
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _self_block(h, bp, cfg, positions, cache=None, window=0, ring=False):
+    """Pre-norm attention + FFN.  Returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = apply_norm(cfg.norm, h, bp["norm1"])
+    if ring:
+        attn_out, new_cache = _ring_attention(x, bp["attn"], cfg, positions, cache, window)
+    else:
+        attn_out, new_cache = attention_block(
+            x, bp["attn"], cfg, positions, kv_cache=cache, window=window
+        )
+    h = h + attn_out
+    x = apply_norm(cfg.norm, h, bp["norm2"])
+    if "moe" in bp:
+        ffn_out, aux = moe_ffn(x, bp["moe"], cfg)
+    else:
+        ffn_out = mlp_block(x, bp["mlp"], kind=cfg.mlp)
+    return h + ffn_out, new_cache, aux
+
+
+def _cross_block(h, bp, cfg, positions, img_kv):
+    """Gated cross-attention block (llama-3.2-vision style)."""
+    x = apply_norm(cfg.norm, h, bp["norm1"])
+    out, _ = attention_block(x, bp["attn"], cfg, positions, kv_override=img_kv)
+    h = h + jnp.tanh(bp["gate"]).astype(h.dtype) * out
+    x = apply_norm(cfg.norm, h, bp["norm2"])
+    return h + mlp_block(x, bp["mlp"], kind=cfg.mlp)
+
+
+def _mamba_layer(h, bp, cfg, state=None):
+    x = apply_norm(cfg.norm, h, bp["norm1"])
+    if cfg.ssm_version == 1:
+        out, new_state = mamba1_block(x, bp["mamba"], cfg, state)
+    else:
+        out, new_state = mamba2_block(x, bp["mamba"], cfg, state)
+    return h + out, new_state
+
+
+# ---------------------------------------------------- rolling-window attention
+def _ring_attention(x, p, cfg, positions, cache, window):
+    """Decode attention over a right-aligned rolling KV window.
+
+    cache = (k_win (B, W, Hkv, hd) roped, v_win, length).  x: (B, 1, D).
+    """
+    b, s, d = x.shape
+    assert s == 1
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    k_win, v_win, length = cache
+    w = k_win.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, 1, hq, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, 1, hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, 1, hkv, hd)
+    cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    k_win = jnp.concatenate([k_win[:, 1:], k.astype(k_win.dtype)], axis=1)
+    v_win = jnp.concatenate([v_win[:, 1:], v.astype(v_win.dtype)], axis=1)
+    # slot j holds absolute position length - (W-1-j); valid iff >= 0
+    valid = (jnp.arange(w) >= (w - 1 - length))[None, :]
+    group = hq // hkv
+    qf = q.reshape(b, 1, hkv, group, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, k_win.astype(jnp.float32)) / np.sqrt(hd)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v_win.astype(jnp.float32))
+    out = out.reshape(b, 1, hq * hd).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), (k_win, v_win, length + 1)
+
+
+# ===================================================================== forward
+def _embed(params, cfg, batch):
+    if cfg.embedding_inputs:
+        return batch["embeddings"].astype(cfg.act_dtype())
+    return params["embed"][batch["tokens"]]
+
+
+def _logits(params, cfg, h):
+    h = apply_norm(cfg.norm, h, params["final_norm"])
+    if cfg.tie_embeddings and not cfg.embedding_inputs:
+        out = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        out = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return _shard_act(out, cfg, None, "model")
+
+
+def _img_embeds(params, cfg, batch):
+    return batch["image_embeddings"].astype(cfg.act_dtype())
+
+
+def forward(params: Params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array]:
+    """Training/prefill-style full-sequence forward.  Returns (logits, aux)."""
+    h, aux_total = _trunk(params, cfg, batch)
+    return _logits(params, cfg, h), aux_total
+
+
+def _trunk(params: Params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array]:
+    """All blocks, pre-head.  Returns (hidden, aux)."""
+    h = _shard_act(_embed(params, cfg, batch), cfg)
+    b, s, _ = h.shape
+    positions = jnp.arange(s)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "audio"):
+
+        def body(carry, bp):
+            h, aux = carry
+            h, _, a = _self_block(h, bp, cfg, positions)
+            return (_shard_act(h, cfg), aux + a), None
+
+        (h, aux_total), _ = jax.lax.scan(
+            _remat(cfg, body), (h, aux_total), params["blocks"]
+        )
+    elif cfg.family == "vlm":
+        img = _img_embeds(params, cfg, batch)
+
+        def group_body(carry, bps):
+            h, aux = carry
+            self_bp, cross_bp = bps
+
+            def self_body(hh, bp):
+                hh, _, a = _self_block(hh, bp, cfg, positions)
+                return _shard_act(hh, cfg), a
+
+            h, a_in = jax.lax.scan(self_body, h, self_bp)
+            h = _cross_block(h, cross_bp, cfg, positions, img)
+            return (_shard_act(h, cfg), aux + jnp.sum(a_in)), None
+
+        (h, aux_total), _ = jax.lax.scan(
+            _remat(cfg, group_body),
+            (h, aux_total),
+            (params["self_blocks"], params["cross_blocks"]),
+        )
+    elif cfg.family == "ssm":
+
+        def body(h, bp):
+            h, _ = _mamba_layer(h, bp, cfg)
+            return _shard_act(h, cfg), None
+
+        h, _ = jax.lax.scan(_remat(cfg, body), h, params["blocks"])
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(h, bp):
+            def inner(hh, lbp):
+                hh, _ = _mamba_layer(hh, lbp, cfg)
+                return _shard_act(hh, cfg), None
+
+            h, _ = jax.lax.scan(inner, h, bp)
+            h, _, _ = _self_block(h, shared, cfg, positions)
+            return _shard_act(h, cfg), None
+
+        h, _ = jax.lax.scan(_remat(cfg, group_body), h, params["mamba_groups"])
+        if "mamba_tail" in params:
+
+            def tail_body(h, bp):
+                h, _ = _mamba_layer(h, bp, cfg)
+                return _shard_act(h, cfg), None
+
+            h, _ = jax.lax.scan(_remat(cfg, tail_body), h, params["mamba_tail"])
+    else:
+        raise ValueError(cfg.family)
+
+    return h, aux_total
+
+
+def _ce_terms(logits, labels):
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch) -> jax.Array:
+    labels = batch["labels"]
+    chunk = getattr(cfg, "loss_chunk", 0)
+    if chunk and labels.shape[1] % chunk == 0 and labels.shape[1] > chunk:
+        # sequence-chunked CE: run the trunk once, apply the LM head + CE per
+        # sequence chunk so the full (B, S, V) logits never materializes.
+        hs, aux = _trunk(params, cfg, batch)
+        total, count = jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)
+        for i in range(0, labels.shape[1], chunk):
+            lg = _logits(params, cfg, hs[:, i : i + chunk])
+            t, c = _ce_terms(lg, labels[:, i : i + chunk])
+            total, count = total + t, count + c
+        nll = total / jnp.maximum(count, 1.0)
+        return nll + 0.01 * aux
+    logits, aux = forward(params, cfg, batch)
+    t, c = _ce_terms(logits, labels)
+    return t / jnp.maximum(c, 1.0) + 0.01 * aux
+
+
+# ====================================================================== decode
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, window: int = 0):
+    """Zero caches for decode.  window>0 => rolling-window attention caches."""
+    dtype = cfg.act_dtype()
+    hkv, hd = cfg.n_kv_heads, cfg.hd()
+    wlen = window or max_len
+    kv = lambda n: (
+        jnp.zeros((n, batch_size, wlen, hkv, hd), dtype),
+        jnp.zeros((n, batch_size, wlen, hkv, hd), dtype),
+    )
+    if cfg.family in ("dense", "moe", "audio"):
+        k, v = kv(cfg.n_layers)
+        return {"k": k, "v": v, "len": jnp.zeros((), jnp.int32)}
+    if cfg.family == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_every
+        per = cfg.cross_attn_every - 1
+        k = jnp.zeros((g, per, batch_size, wlen, hkv, hd), dtype)
+        v = jnp.zeros((g, per, batch_size, wlen, hkv, hd), dtype)
+        ik = jnp.zeros((g, batch_size, cfg.n_img_tokens, hkv, hd), dtype)
+        iv = jnp.zeros((g, batch_size, cfg.n_img_tokens, hkv, hd), dtype)
+        return {"k": k, "v": v, "img_k": ik, "img_v": iv, "len": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        di, n = cfg.d_inner(), cfg.ssm_state
+        return {
+            "ssm": jnp.zeros((cfg.n_layers, batch_size, di, n), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch_size, cfg.d_conv - 1, di), dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        di, n = cfg.d_inner(), cfg.ssm_state
+        nh, hp = di // cfg.ssm_head_dim, cfg.ssm_head_dim
+        g = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - g * cfg.attn_every
+        conv_c = di + 2 * n
+        out = {
+            "ssm": jnp.zeros((g, cfg.attn_every, batch_size, nh, hp, n), jnp.float32),
+            "conv": jnp.zeros((g, cfg.attn_every, batch_size, cfg.d_conv - 1, conv_c), dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+        ak, av = kv(g)
+        out["attn_k"], out["attn_v"] = ak, av
+        if tail:
+            out["tail_ssm"] = jnp.zeros((tail, batch_size, nh, hp, n), jnp.float32)
+            out["tail_conv"] = jnp.zeros((tail, batch_size, cfg.d_conv - 1, conv_c), dtype)
+        return out
+    raise ValueError(cfg.family)
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache, batch, window: int = 0):
+    """One-token decode.  batch: {tokens (B,1)} or {embeddings (B,1,D)} (+
+    image_embeddings for vlm prefill-less runs).  Returns (logits, cache)."""
+    h = _shard_act(_embed(params, cfg, batch), cfg)
+    b = h.shape[0]
+    length = cache["len"]
+    positions = jnp.full((1,), length, jnp.int32)
+    ring = window > 0
+
+    if cfg.family in ("dense", "moe", "audio"):
+
+        def body(h, xs):
+            bp, k_l, v_l = xs
+            hh, new_cache, _ = _self_block(
+                h, bp, cfg, positions, cache=(k_l, v_l, length), window=window, ring=ring
+            )
+            return hh, (new_cache[0], new_cache[1])
+
+        h, (new_k, new_v) = jax.lax.scan(body, h, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": new_k, "v": new_v, "len": length + 1}
+    elif cfg.family == "vlm":
+
+        def group_body(h, xs):
+            self_bp, cross_bp, k_g, v_g, ik_g, iv_g = xs
+
+            def self_body(hh, inner):
+                bp, k_l, v_l = inner
+                hh, nc, _ = _self_block(
+                    hh, bp, cfg, positions, cache=(k_l, v_l, length), window=window, ring=ring
+                )
+                return hh, (nc[0], nc[1])
+
+            h, (nk, nv) = jax.lax.scan(self_body, h, (self_bp, k_g, v_g))
+            # cross-attention against precomputed image KV
+            x = apply_norm(cfg.norm, h, cross_bp["norm1"])
+            hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+            q = jnp.einsum("bsd,dh->bsh", x, cross_bp["attn"]["wq"]).reshape(b, 1, hq, hd)
+            cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+            q = apply_rope(q, cos, sin)
+            out = gqa_attention(q, ik_g, iv_g, causal=False)
+            out = jnp.einsum(
+                "bsh,hd->bsd", out.reshape(b, 1, hq * hd), cross_bp["attn"]["wo"]
+            )
+            h = h + jnp.tanh(cross_bp["gate"]).astype(h.dtype) * out
+            x = apply_norm(cfg.norm, h, cross_bp["norm2"])
+            h = h + mlp_block(x, cross_bp["mlp"], kind=cfg.mlp)
+            return h, (nk, nv)
+
+        h, (new_k, new_v) = jax.lax.scan(
+            group_body,
+            h,
+            (
+                params["self_blocks"],
+                params["cross_blocks"],
+                cache["k"],
+                cache["v"],
+                cache["img_k"],
+                cache["img_v"],
+            ),
+        )
+        new_cache = dict(cache, k=new_k, v=new_v, len=length + 1)
+    elif cfg.family == "ssm":
+
+        def body(h, xs):
+            bp, s_l, c_l = xs
+            hh, (ns, nc) = _mamba_layer(h, bp, cfg, state=(s_l, c_l))
+            return hh, (ns, nc)
+
+        h, (new_s, new_c) = jax.lax.scan(
+            body, h, (params["blocks"], cache["ssm"], cache["conv"])
+        )
+        new_cache = {"ssm": new_s, "conv": new_c, "len": length + 1}
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(h, xs):
+            bp, s_g, c_g, k_g, v_g = xs
+
+            def inner(hh, inner_xs):
+                lbp, s_l, c_l = inner_xs
+                hh, (ns, nc) = _mamba_layer(hh, lbp, cfg, state=(s_l, c_l))
+                return hh, (ns, nc)
+
+            h, (ns_g, nc_g) = jax.lax.scan(inner, h, (bp, s_g, c_g))
+            h, new_kv, _ = _self_block(
+                h, shared, cfg, positions, cache=(k_g, v_g, length), window=window, ring=ring
+            )
+            return h, (ns_g, nc_g, new_kv[0], new_kv[1])
+
+        h, (new_s, new_c, new_k, new_v) = jax.lax.scan(
+            group_body,
+            h,
+            (params["mamba_groups"], cache["ssm"], cache["conv"], cache["attn_k"], cache["attn_v"]),
+        )
+        new_cache = dict(cache, ssm=new_s, conv=new_c, attn_k=new_k, attn_v=new_v, len=length + 1)
+        if "mamba_tail" in params:
+
+            def tail_body(h, xs):
+                lbp, s_l, c_l = xs
+                hh, (ns, nc) = _mamba_layer(h, lbp, cfg, state=(s_l, c_l))
+                return hh, (ns, nc)
+
+            h, (ts, tc) = jax.lax.scan(
+                tail_body, h, (params["mamba_tail"], cache["tail_ssm"], cache["tail_conv"])
+            )
+            new_cache.update(tail_ssm=ts, tail_conv=tc)
+    else:
+        raise ValueError(cfg.family)
+
+    return _logits(params, cfg, h), new_cache
+
+
+def prefill(params: Params, cfg: ModelConfig, batch, max_len: int):
+    """Full-sequence forward that also fills the decode cache.
+
+    For attention families this recomputes K/V into the cache; for SSMs it
+    runs the scan and keeps the final state.  Returns (last_logits, cache).
+    """
+    h = _shard_act(_embed(params, cfg, batch), cfg)
+    b, s, _ = h.shape
+    positions = jnp.arange(s)
+    cache = init_cache(cfg, b, max_len)
+    length = jnp.zeros((), jnp.int32)
+
+    if cfg.family in ("dense", "moe", "audio"):
+
+        def body(carry, xs):
+            h = carry
+            bp, k_l, v_l = xs
+            hh, nc, _ = _self_block(h, bp, cfg, positions, cache=(k_l, v_l, length))
+            return hh, (nc[0], nc[1])
+
+        h, (nk, nv) = jax.lax.scan(
+            _remat(cfg, body), h, (params["blocks"], cache["k"], cache["v"])
+        )
+        new_cache = {"k": nk, "v": nv, "len": length + s}
+    elif cfg.family == "ssm":
+
+        def body(h, xs):
+            bp, s_l, c_l = xs
+            hh, (ns, nc) = _mamba_layer(h, bp, cfg, state=None)
+            return hh, (ns, nc)
+
+        h, (ns, nc) = jax.lax.scan(
+            _remat(cfg, body), h, (params["blocks"], cache["ssm"], cache["conv"])
+        )
+        new_cache = {"ssm": ns, "conv": nc, "len": length + s}
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(h, xs):
+            bp, s_g, c_g, k_g, v_g = xs
+
+            def inner(hh, inner_xs):
+                lbp, s_l, c_l = inner_xs
+                hh, (ns, nc) = _mamba_layer(hh, lbp, cfg, state=None)
+                return hh, (ns, nc)
+
+            h, (ns_g, nc_g) = jax.lax.scan(inner, h, (bp, s_g, c_g))
+            h, nkv, _ = _self_block(h, shared, cfg, positions, cache=(k_g, v_g, length))
+            return h, (ns_g, nc_g, nkv[0], nkv[1])
+
+        h, (ns, nc, nk, nv) = jax.lax.scan(
+            _remat(cfg, group_body),
+            h,
+            (params["mamba_groups"], cache["ssm"], cache["conv"], cache["attn_k"], cache["attn_v"]),
+        )
+        new_cache = dict(cache, ssm=ns, conv=nc, attn_k=nk, attn_v=nv, len=length + s)
+        if "mamba_tail" in params:
+
+            def tail_body(h, xs):
+                lbp, s_l, c_l = xs
+                hh, (nss, ncc) = _mamba_layer(h, lbp, cfg, state=None)
+                return hh, (nss, ncc)
+
+            h, (ts, tc) = jax.lax.scan(
+                tail_body, h, (params["mamba_tail"], cache["tail_ssm"], cache["tail_conv"])
+            )
+            new_cache.update(tail_ssm=ts, tail_conv=tc)
+    elif cfg.family == "vlm":
+        img = _img_embeds(params, cfg, batch)
+        hkv, hd = cfg.n_kv_heads, cfg.hd()
+
+        def group_body(carry, xs):
+            h = carry
+            self_bp, cross_bp, k_g, v_g = xs
+
+            def self_body(hh, inner):
+                bp, k_l, v_l = inner
+                hh, ncc, _ = _self_block(hh, bp, cfg, positions, cache=(k_l, v_l, length))
+                return hh, (ncc[0], ncc[1])
+
+            h, (nk, nv) = jax.lax.scan(self_body, h, (self_bp, k_g, v_g))
+            ik = jnp.einsum("btd,dh->bth", img, cross_bp["attn"]["wk"]).reshape(
+                b, -1, hkv, hd
+            )
+            iv = jnp.einsum("btd,dh->bth", img, cross_bp["attn"]["wv"]).reshape(
+                b, -1, hkv, hd
+            )
+            h = _cross_block(h, cross_bp, cfg, positions, img)
+            return h, (nk, nv, ik.astype(cfg.act_dtype()), iv.astype(cfg.act_dtype()))
+
+        h, (nk, nv, ik, iv) = jax.lax.scan(
+            _remat(cfg, group_body),
+            h,
+            (params["self_blocks"], params["cross_blocks"], cache["k"], cache["v"]),
+        )
+        new_cache = dict(cache, k=nk, v=nv, img_k=ik, img_v=iv, len=length + s)
+    else:
+        raise ValueError(cfg.family)
+
+    last = _logits(params, cfg, h[:, -1:])
+    return last, new_cache
+
+
+def init_mamba_tail_none():  # pragma: no cover - placeholder symmetry helper
+    return None

@@ -1,0 +1,4 @@
+from repro.nvm.memory import NVMemory, PersistStats, CrashMode
+from repro.nvm.pool import NodePool
+
+__all__ = ["NVMemory", "PersistStats", "CrashMode", "NodePool"]

@@ -1,0 +1,3 @@
+from repro.runtime.train_loop import TrainRuntime
+
+__all__ = ["TrainRuntime"]

@@ -1,0 +1,95 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train-step (grad + update) on CPU, asserting output shapes and
+no NaNs.  Full configs are exercised only via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models.model import decode_step, forward, init_cache, init_params, loss_fn
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 16
+
+
+def make_batch(cfg, rng):
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["image_embeddings"] = (
+            jax.random.normal(jax.random.PRNGKey(7), (B, cfg.n_img_tokens, cfg.d_model))
+            * 0.02
+        )
+    if cfg.embedding_inputs:
+        batch = {
+            "embeddings": jax.random.normal(rng, (B, S, cfg.d_model)) * 0.02,
+            "labels": toks,
+        }
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    logits, _ = forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), "NaN/inf in logits"
+
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, cfg, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    assert bool(jnp.isfinite(sq)) and float(sq) > 0
+    # one SGD step changes the loss
+    new_params = jax.tree.map(lambda p, g: p - 0.05 * g.astype(p.dtype), params, grads)
+    loss2 = loss_fn(new_params, cfg, batch)
+    assert bool(jnp.isfinite(loss2))
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_cache(cfg, B, S)
+    if cfg.family == "vlm":
+        # image KV is zero in a fresh cache; still a valid decode
+        pass
+    step = (
+        {"embeddings": jnp.zeros((B, 1, cfg.d_model))}
+        if cfg.embedding_inputs
+        else {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    )
+    logits, cache = decode_step(params, cfg, cache, step)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache["len"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_count_matches_spec(arch):
+    """Analytic parameter count of the FULL config lands near the advertised
+    size (sanity check on the configuration numbers; wide tolerance since
+    marketing names round aggressively)."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "llama-3.2-vision-11b": (8.5e9, 12.5e9),
+        "zamba2-7b": (6.0e9, 8.8e9),
+        "smollm-135m": (0.11e9, 0.16e9),
+        "qwen2-1.5b": (1.2e9, 1.9e9),
+        "olmo-1b": (0.9e9, 1.4e9),
+        "deepseek-coder-33b": (30e9, 36e9),
+        # backbone-only: the marketed 3.3B includes T5 cross-attn + codebook
+        # embeddings, which the assignment stubs out (frontend)
+        "musicgen-large": (2.2e9, 4.0e9),
+        "arctic-480b": (430e9, 520e9),
+        "dbrx-132b": (120e9, 145e9),
+        "falcon-mamba-7b": (6.0e9, 8.5e9),
+    }[arch]
+    assert expected[0] <= n <= expected[1], f"{arch}: {n/1e9:.2f}B params"

@@ -1,0 +1,75 @@
+"""Baseline PTM stacks: sanity + the paper's qualitative ordering claims."""
+
+import pytest
+
+from repro.core.dfc import POP, PUSH
+from repro.core.baselines import (
+    OneFileStack,
+    PMDKStack,
+    RomulusStack,
+    make_workloads,
+    run_dfc_counts,
+)
+
+
+def _counts(cls, n, kind="push-pop", total=200):
+    w = make_workloads(kind, n, total)
+    st = cls(n).run(w)
+    return st
+
+
+def test_pmdk_flat_in_threads():
+    a = _counts(PMDKStack, 1).pwb_per_op()
+    b = _counts(PMDKStack, 16).pwb_per_op()
+    assert abs(a - b) < 0.2
+
+
+def test_romulus_amortizes_with_combining():
+    a = _counts(RomulusStack, 1).pwb_per_op()
+    b = _counts(RomulusStack, 32).pwb_per_op()
+    assert b < a  # state-flip cost amortized over the batch
+
+
+def test_onefile_grows_with_contention():
+    a = _counts(OneFileStack, 1).pwb_per_op()
+    b = _counts(OneFileStack, 32).pwb_per_op()
+    assert b > 2 * a  # helping amplification
+
+
+def test_paper_ordering_at_high_concurrency():
+    """Fig 3b at 40 threads: DFC-combiner < Romulus < OneFile; PMDK worst of
+    the fence-per-op world and flat."""
+    n, total = 40, 400
+    w = make_workloads("push-pop", n, total)
+    dfc = run_dfc_counts(n, w)
+    dfc_combiner_pwb = dfc["pwb_combine"] / dfc["ops"]
+    dfc_total_pwb = (dfc["pwb_combine"] + dfc["pwb_announce"]) / dfc["ops"]
+    rom = _counts(RomulusStack, n, total=total).pwb_per_op()
+    one = _counts(OneFileStack, n, total=total).pwb_per_op()
+    assert dfc_combiner_pwb < rom < one
+    assert dfc_total_pwb < one
+
+
+def test_counts_similar_across_workloads():
+    """Paper Fig 3e/3f: all algorithms keep roughly the same per-op
+    persistence counts on push-pop vs rand-op (the rand-op throughput drop is
+    a phase-dynamics effect, not a count effect)."""
+    n, total = 16, 1600
+    pp = run_dfc_counts(n, make_workloads("push-pop", n, total), seed=1, think=(0, 30))
+    ro = run_dfc_counts(n, make_workloads("rand-op", n, total), seed=1, think=(0, 30))
+    pp_rate = (pp["pwb_combine"] + pp["pwb_announce"]) / pp["ops"]
+    ro_rate = (ro["pwb_combine"] + ro["pwb_announce"]) / ro["ops"]
+    assert abs(pp_rate - ro_rate) / pp_rate < 0.10
+
+
+def test_elimination_is_batch_composition_property():
+    """Balanced batches eliminate fully (no stack traffic); imbalanced
+    batches pay one node pwb per surplus push — checked via combiner pwbs."""
+    n = 8
+    # perfectly mixed single batch: half push, half pop
+    w_bal = [[(PUSH, 100 + t)] if t < n // 2 else [(POP, None)] for t in range(n)]
+    c_bal = run_dfc_counts(n, w_bal, seed=2)
+    # all-push single batch: every op allocates + persists a node
+    w_push = [[(PUSH, 200 + t)] for t in range(n)]
+    c_push = run_dfc_counts(n, w_push, seed=2)
+    assert c_push["pwb_combine"] > c_bal["pwb_combine"]

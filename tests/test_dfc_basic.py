@@ -1,0 +1,89 @@
+"""Crash-free behaviour of the paper-faithful DFC stack."""
+
+import numpy as np
+import pytest
+
+from repro.core.dfc import ACK, BOT, EMPTY, POP, PUSH, DFCStack
+from repro.core.linearize import is_linearizable
+from repro.core.sim import History, Scheduler, workload_gen
+from repro.nvm.memory import CrashMode, NVMemory
+
+
+def run_workload(n_threads, per_thread_ops, seed=0):
+    mem = NVMemory()
+    stack = DFCStack(mem, n_threads)
+    sched = Scheduler(seed=seed)
+    hist = History()
+    gens = {
+        t: workload_gen(stack, sched, hist, t, per_thread_ops[t])
+        for t in range(n_threads)
+    }
+    sched.run(gens)
+    return stack, hist, mem
+
+
+def test_single_thread_push_pop():
+    ops = [[(PUSH, 10), (PUSH, 20), (POP, None), (POP, None), (POP, None)]]
+    stack, hist, _ = run_workload(1, ops)
+    values = [o["value"] for o in hist.ops]
+    assert values == [ACK, ACK, 20, 10, EMPTY]
+    assert stack.peek_stack() == []
+
+
+def test_pop_empty_returns_empty():
+    stack, hist, _ = run_workload(2, [[(POP, None)], [(POP, None)]])
+    assert all(o["value"] == EMPTY for o in hist.ops)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_concurrent_push_pop_linearizable(seed):
+    n = 4
+    ops = [[(PUSH, 100 * t + i) for i in range(2)] + [(POP, None)] for t in range(n)]
+    stack, hist, _ = run_workload(n, ops, seed=seed)
+    assert is_linearizable(hist.ops)
+    # conservation: stack contents + popped values == pushed values
+    pushed = {o["param"] for o in hist.ops if o["name"] == PUSH}
+    popped = {o["value"] for o in hist.ops if o["name"] == POP and o["value"] != EMPTY}
+    remaining = set(stack.peek_stack())
+    assert popped | remaining == pushed
+    assert popped & remaining == set()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_balanced_workload_drains(seed):
+    n = 6
+    ops = [[(PUSH, 10 * t + i) for i in range(3)] + [(POP, None)] * 3 for t in range(n)]
+    stack, hist, _ = run_workload(n, ops, seed=seed)
+    assert is_linearizable(hist.ops[:12])  # checker budget: spot-check prefix
+    assert stack.peek_stack() == []
+
+
+def test_elimination_reduces_persistence():
+    """Paper's core claim: paired push/pops are eliminated — the stack is
+    untouched and combiner-path pwbs stay low."""
+    n = 8
+    ops = [[(PUSH, t)] if t % 2 == 0 else [(POP, None)] for t in range(n)]
+    stack, hist, mem = run_workload(n, ops, seed=3)
+    pushed = {o["param"] for o in hist.ops if o["name"] == PUSH}
+    popped = {o["value"] for o in hist.ops if o["name"] == POP and o["value"] != EMPTY}
+    assert set(stack.peek_stack()) == pushed - popped  # conservation
+    # combiner-path pwbs: responses + top + epoch per phase; no node pwbs needed
+    # unless a surplus hit the stack.  With a balanced workload the total must
+    # be far below what per-op persistence (>=2 pwb/op) would cost.
+    combine_pwbs = mem.stats.pwb.get("combine", 0)
+    assert combine_pwbs < 2 * sum(len(o) for o in ops)
+
+
+def test_epoch_parity_and_phase_count():
+    stack, hist, mem = run_workload(3, [[(PUSH, 1)], [(PUSH, 2)], [(PUSH, 3)]])
+    assert mem.read("cEpoch", "v") % 2 == 0
+    assert stack.phases >= 1
+    assert sorted(stack.peek_stack()) == [1, 2, 3]
+
+
+def test_announce_vs_combine_attribution():
+    _, _, mem = run_workload(2, [[(PUSH, 1)], [(POP, None)]])
+    # each op does exactly 2 announce pwbs + 2 announce pfences (lines 9, 11)
+    assert mem.stats.pwb["announce"] == 2 * 2
+    assert mem.stats.pfence["announce"] == 2 * 2
+    assert mem.stats.pfence.get("combine", 0) % 2 == 0  # 2 per phase

@@ -1,0 +1,72 @@
+"""Hypothesis property tests on the paper-faithful DFC stack's invariants."""
+
+import hypothesis
+import hypothesis.strategies as st
+
+from repro.core.baselines import run_dfc_counts
+from repro.core.dfc import ACK, EMPTY, POP, PUSH, DFCStack
+from repro.core.harness import check_durable_linearizability, run_with_crash, total_steps
+from repro.core.linearize import is_linearizable
+from repro.core.sim import History, Scheduler, workload_gen
+from repro.nvm.memory import CrashMode, NVMemory
+
+
+def _workloads(op_codes, n_threads):
+    """op_codes: list of lists of 0/1 per thread (1=push)."""
+    out, uid = [], 0
+    for t in range(n_threads):
+        ops = []
+        for c in op_codes[t]:
+            uid += 1
+            ops.append((PUSH, 1000 + uid) if c else (POP, None))
+        out.append(ops)
+    return out
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    st.lists(
+        st.lists(st.integers(0, 1), min_size=1, max_size=3),
+        min_size=2,
+        max_size=4,
+    ),
+    st.integers(0, 2**16),
+)
+def test_property_crash_free_linearizable(op_codes, seed):
+    w = _workloads(op_codes, len(op_codes))
+    mem = NVMemory()
+    stack = DFCStack(mem, len(w))
+    sched = Scheduler(seed=seed)
+    hist = History()
+    gens = {t: workload_gen(stack, sched, hist, t, w[t]) for t in range(len(w))}
+    sched.run(gens)
+    assert is_linearizable(hist.ops)
+    # conservation
+    pushed = {o["param"] for o in hist.ops if o["name"] == PUSH}
+    popped = {o["value"] for o in hist.ops if o["name"] == POP and o["value"] != EMPTY}
+    assert popped | set(stack.peek_stack()) == pushed
+    # announce-path persistence is exactly 2 pwb + 2 pfence per op (L9, L11)
+    n_ops = sum(len(x) for x in w)
+    assert mem.stats.pwb["announce"] == 2 * n_ops
+    assert mem.stats.pfence["announce"] == 2 * n_ops
+    # epoch is even and equals 2x phases
+    assert mem.read("cEpoch", "v") == 2 * stack.phases
+
+
+@hypothesis.settings(max_examples=12, deadline=None)
+@hypothesis.given(
+    st.lists(
+        st.lists(st.integers(0, 1), min_size=1, max_size=2),
+        min_size=2,
+        max_size=3,
+    ),
+    st.integers(0, 2**10),
+    st.floats(0.05, 0.95),
+    st.sampled_from([CrashMode.MIN, CrashMode.MAX, CrashMode.RANDOM]),
+)
+def test_property_durable_under_random_crash(op_codes, seed, frac, mode):
+    w = _workloads(op_codes, len(op_codes))
+    steps = total_steps(w, seed=seed)
+    crash_at = max(1, int(steps * frac))
+    res = run_with_crash(w, crash_at=crash_at, seed=seed, mode=mode)
+    assert check_durable_linearizability(res)

@@ -1,0 +1,62 @@
+"""Gradient compression + elastic plan unit/property tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.compression import (
+    CompressionState,
+    dequantize_int8,
+    ef_compress_grads,
+    init_compression,
+    quantize_int8,
+)
+from repro.distributed.elastic import plan_resize
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_int8_roundtrip_bounded_error():
+    g = jax.random.normal(jax.random.PRNGKey(0), (128, 64))
+    q, s = quantize_int8(g)
+    back = dequantize_int8(q, s)
+    assert float(jnp.max(jnp.abs(back - g))) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_conserves_mass():
+    """sent + residual == grad + old_residual (no gradient mass lost)."""
+    params = {"a": jnp.zeros((64, 32)), "b": jnp.zeros((128,))}
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(p.size), p.shape), params
+    )
+    state = init_compression(params)
+    sent, new_state = ef_compress_grads(grads, state, frac=0.05)
+    for k in params:
+        total = np.asarray(sent[k], np.float32) + np.asarray(new_state.residual[k])
+        np.testing.assert_allclose(total, np.asarray(grads[k]), atol=1e-6)
+
+
+def test_error_feedback_long_run_conservation():
+    """Over T rounds: transmitted + residual == T·g exactly (nothing lost),
+    and large coordinates transmit nearly their full due mass."""
+    g = {"w": jnp.ones((100,)) * jnp.linspace(0.01, 1.0, 100)}
+    state = init_compression(g)
+    acc = jnp.zeros((100,))
+    T = 60
+    for _ in range(T):
+        sent, state = ef_compress_grads(g, state, frac=0.05)
+        acc = acc + sent["w"]
+    total = acc + state.residual["w"]
+    np.testing.assert_allclose(np.asarray(total), np.asarray(T * g["w"]), rtol=1e-5)
+    # the top decile transmitted the bulk of its due mass
+    assert float(jnp.min(acc[-10:] / (T * g["w"][-10:]))) > 0.7
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(st.integers(1, 16), st.integers(1, 16), st.integers(0, 1000))
+def test_elastic_cursor_map_no_overlap(n_old, n_new, cursor):
+    plan = plan_resize(list(range(n_old)), list(range(n_new)), cursor)
+    starts = sorted(plan.cursor_map.values())
+    assert starts == list(range(cursor, cursor + n_new))

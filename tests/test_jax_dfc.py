@@ -1,0 +1,150 @@
+"""Vectorized JAX DFC combine: semantics vs the sequential oracle, Pallas
+kernel vs pure-jnp ref (interpret mode), and hypothesis property tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.jax_dfc import (
+    OP_NONE,
+    OP_POP,
+    OP_PUSH,
+    R_ACK,
+    R_EMPTY,
+    R_NONE,
+    R_VALUE,
+    StackState,
+    combine,
+    init_stack,
+    sequential_reference,
+)
+from repro.kernels.dfc_reduce.ops import dfc_combine_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def apply_batches(batches, capacity=256, via="jnp"):
+    state = init_stack(capacity)
+    stack_py = []
+    for ops, params in batches:
+        ops_a = jnp.asarray(ops, jnp.int32)
+        par_a = jnp.asarray(params, jnp.float32)
+        if via == "jnp":
+            state, resp, kinds = combine(state, ops_a, par_a)
+        else:
+            state, resp, kinds = dfc_combine_step(state, ops_a, par_a, backend=via)
+        stack_py, ref_resp, ref_kinds = sequential_reference(stack_py, ops, params)
+        np.testing.assert_array_equal(np.asarray(kinds), ref_kinds)
+        np.testing.assert_allclose(
+            np.asarray(resp), np.asarray(ref_resp, np.float32), rtol=1e-6
+        )
+    # final stack contents match
+    top = int(state.active_size())
+    np.testing.assert_allclose(np.asarray(state.values[:top]), stack_py)
+    assert int(state.epoch) == 2 * len(batches)
+    return state
+
+
+def test_push_only_batch():
+    n = 8
+    apply_batches([([OP_PUSH] * n, list(range(1, n + 1)))])
+
+
+def test_balanced_batch_full_elimination():
+    ops = [OP_PUSH, OP_POP, OP_PUSH, OP_POP]
+    state = apply_batches([(ops, [5.0, 0, 7.0, 0])])
+    assert int(state.active_size()) == 0  # fully eliminated — stack untouched
+
+
+def test_pop_empty():
+    ops = [OP_POP, OP_POP]
+    state = init_stack(64)
+    _, resp, kinds = combine(state, jnp.asarray(ops, jnp.int32), jnp.zeros(2))
+    assert list(np.asarray(kinds)) == [R_EMPTY, R_EMPTY]
+
+
+def test_multi_phase_lifo():
+    apply_batches(
+        [
+            ([OP_PUSH] * 4, [1, 2, 3, 4]),
+            ([OP_POP] * 2 + [OP_NONE] * 2, [0] * 4),
+            ([OP_PUSH, OP_POP, OP_POP, OP_POP], [9, 0, 0, 0]),
+        ]
+    )
+
+
+def test_double_buffered_top_preserves_committed_prefix():
+    """A combine must never overwrite values below the committed size —
+    the crash-consistency invariant of the alternating-top design."""
+    state = init_stack(64)
+    state, _, _ = combine(state, jnp.full(4, OP_PUSH, jnp.int32), jnp.arange(4.0))
+    before = np.asarray(state.values[:4]).copy()
+    # a batch with surplus pushes appends; prefix bytes identical
+    state2, _, _ = combine(state, jnp.full(4, OP_PUSH, jnp.int32), jnp.arange(10.0, 14.0))
+    np.testing.assert_array_equal(np.asarray(state2.values[:4]), before)
+    # a pop-surplus batch only flips the size pointer, storage prefix intact
+    state3, _, _ = combine(state2, jnp.full(8, OP_POP, jnp.int32), jnp.zeros(8))
+    np.testing.assert_array_equal(np.asarray(state3.values[:4]), before)
+    assert int(state3.active_size()) == 0
+    # the previous epoch's size pointer still reads 8 (the old committed top)
+    assert int(state3.size[(int(state3.epoch) // 2 + 1) % 2]) == 8
+
+
+@pytest.mark.parametrize("backend", ["pallas"])
+@pytest.mark.parametrize("n", [8, 128, 256])
+def test_pallas_kernel_matches_ref(backend, n):
+    rng = np.random.default_rng(n)
+    batches = []
+    for _ in range(3):
+        ops = rng.integers(0, 3, n).tolist()
+        params = (rng.random(n) * 100).round(2).tolist()
+        batches.append((ops, params))
+    apply_batches(batches, capacity=4 * n, via=backend)
+
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(
+    st.lists(
+        st.tuples(st.integers(0, 2), st.floats(1.0, 1e4, allow_nan=False)),
+        min_size=1,
+        max_size=24,
+    ),
+    st.integers(0, 3),
+)
+def test_property_combine_matches_sequential_witness(lanes, n_batches):
+    ops = [o for o, _ in lanes]
+    params = [p for _, p in lanes]
+    batches = [(ops, params)] * (n_batches + 1)
+    apply_batches(batches, capacity=max(128, 32 * len(lanes)))
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(st.data())
+def test_property_conservation(data):
+    """Across arbitrary batches: pushed = popped + remaining (multisets)."""
+    rng_ops = data.draw(
+        st.lists(
+            st.lists(st.integers(0, 2), min_size=4, max_size=16),
+            min_size=1,
+            max_size=4,
+        )
+    )
+    state = init_stack(512)
+    uid = 1.0
+    pushed, popped = [], []
+    for ops in rng_ops:
+        params = []
+        for o in ops:
+            params.append(uid if o == OP_PUSH else 0.0)
+            if o == OP_PUSH:
+                pushed.append(uid)
+                uid += 1.0
+        state, resp, kinds = combine(
+            state, jnp.asarray(ops, jnp.int32), jnp.asarray(params, jnp.float32)
+        )
+        popped += [float(v) for v, k in zip(np.asarray(resp), np.asarray(kinds)) if k == R_VALUE]
+    remaining = list(np.asarray(state.values[: int(state.active_size())]))
+    assert sorted(popped + [float(r) for r in remaining]) == sorted(pushed)

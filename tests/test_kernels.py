@@ -1,0 +1,122 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import chunked_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.kernel import selective_scan
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.5).astype(dtype)
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,hd,blk",
+    [
+        (1, 128, 2, 2, 64, 64),
+        (2, 256, 4, 2, 64, 128),
+        (1, 256, 8, 1, 32, 64),  # MQA
+        (2, 128, 3, 1, 64, 64),  # odd head count
+    ],
+)
+def test_flash_attention_matches_ref(b, s, hq, hkv, hd, blk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(s + hq), 3)
+    q = rand(ks[0], (b, s, hq, hd), dtype)
+    k = rand(ks[1], (b, s, hkv, hd), dtype)
+    v = rand(ks[2], (b, s, hkv, hd), dtype)
+    got = flash_attention(q, k, v, causal=True, blk_q=blk, blk_k=blk, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (1, 128, 2, 32), jnp.float32)
+    k = rand(ks[1], (1, 128, 2, 32), jnp.float32)
+    v = rand(ks[2], (1, 128, 2, 32), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, blk_q=64, blk_k=64)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("blk_k", [64, 128, 256])
+def test_chunked_attention_matches_ref(blk_k):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(ks[0], (2, 256, 4, 64), jnp.float32)
+    k = rand(ks[1], (2, 256, 2, 64), jnp.float32)
+    v = rand(ks[2], (2, 256, 2, 64), jnp.float32)
+    got = chunked_attention(q, k, v, causal=True, blk_k=blk_k)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("r,d,blk", [(256, 512, 128), (64, 64, 64), (512, 4096, 256)])
+def test_rmsnorm_matches_ref(r, d, blk, dtype):
+    x = rand(jax.random.PRNGKey(r), (r, d), dtype)
+    w = rand(jax.random.PRNGKey(d), (d,), jnp.float32) + 1.0
+    got = rmsnorm(x, w, blk=blk, interpret=True)
+    want = rmsnorm_ref(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+# --------------------------------------------------------------- mamba scan
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,di,n,blk_d,chunk",
+    [(2, 64, 128, 8, 64, 32), (1, 128, 64, 16, 64, 64), (2, 32, 256, 4, 128, 16)],
+)
+def test_selective_scan_matches_ref(b, s, di, n, blk_d, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(di + s), 5)
+    dt = jax.nn.softplus(rand(ks[0], (b, s, di), dtype) - 2).astype(dtype)
+    a_log = (jax.random.uniform(ks[1], (di, n)) * 0.5).astype(jnp.float32)
+    b_ssm = rand(ks[2], (b, s, n), dtype)
+    c_ssm = rand(ks[3], (b, s, n), dtype)
+    x = rand(ks[4], (b, s, di), dtype)
+    d_skip = jnp.ones((di,), jnp.float32)
+    got = selective_scan(dt, a_log, b_ssm, c_ssm, x, d_skip, blk_d=blk_d, chunk=chunk)
+    want = selective_scan_ref(dt, a_log, b_ssm, c_ssm, x, d_skip)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(
+    st.integers(1, 3), st.sampled_from([32, 64]), st.sampled_from([8, 16])
+)
+def test_property_scan_state_independence_of_chunking(b, s, n):
+    """Chunk size must not change the result (state carries exactly)."""
+    di = 32
+    ks = jax.random.split(jax.random.PRNGKey(b * s + n), 5)
+    dt = jax.nn.softplus(rand(ks[0], (b, s, di), jnp.float32) - 2)
+    a_log = jnp.zeros((di, n))
+    b_ssm = rand(ks[2], (b, s, n), jnp.float32)
+    c_ssm = rand(ks[3], (b, s, n), jnp.float32)
+    x = rand(ks[4], (b, s, di), jnp.float32)
+    d_skip = jnp.zeros((di,))
+    y1 = selective_scan(dt, a_log, b_ssm, c_ssm, x, d_skip, blk_d=32, chunk=s)
+    y2 = selective_scan(dt, a_log, b_ssm, c_ssm, x, d_skip, blk_d=32, chunk=s // 2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5, rtol=1e-5)

@@ -1,0 +1,62 @@
+"""Tuned perf levers keep every reduced arch training/decoding correctly."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.launch.tuned import TUNED, apply_tuning
+from repro.models.model import decode_step, forward, init_cache, init_params, loss_fn
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 16
+
+
+def make_batch(cfg, rng):
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["image_embeddings"] = (
+            jax.random.normal(jax.random.PRNGKey(7), (B, cfg.n_img_tokens, cfg.d_model)) * 0.02
+        )
+    if cfg.embedding_inputs:
+        batch = {
+            "embeddings": jax.random.normal(rng, (B, S, cfg.d_model)) * 0.02,
+            "labels": toks,
+        }
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_tuned_reduced_smoke(arch):
+    cfg = get_reduced(arch)
+    overrides = dict(TUNED.get(cfg.name.replace("-smoke", ""), {}))
+    # group count must divide the tiny smoke token count
+    if "moe_groups" in overrides:
+        overrides["moe_groups"] = 4
+    cfg = dataclasses.replace(cfg, **overrides)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    logits, _ = forward(params, cfg, batch)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss = loss_fn(params, cfg, batch)
+    assert bool(jnp.isfinite(loss))
+    # decode with tuned flags (levers must be decode-safe)
+    cache = init_cache(cfg, B, S)
+    step = (
+        {"embeddings": jnp.zeros((B, 1, cfg.d_model))}
+        if cfg.embedding_inputs
+        else {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    )
+    lg, _ = decode_step(params, cfg, cache, step)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+def test_apply_tuning_covers_all_archs():
+    for arch in ARCH_IDS:
+        cfg = apply_tuning(get_reduced(arch))  # must not raise
+        assert cfg is not None
+    assert set(TUNED) == set(ARCH_IDS)
