@@ -1,33 +1,50 @@
-"""Paper Figures 3b/3c/3e/3f: persistence instructions per operation.
+"""Paper Figures 3b/3c/3e/3f: persistence instructions per operation, for
+all three DFC structures (stack, FIFO queue, deque).
 
-DFC counts come from the real simulated algorithm under the cooperative
+DFC counts come from the real simulated algorithms under the cooperative
 scheduler; Romulus/OneFile/PMDK from their schedule-faithful baselines.
 DFC (combiner-only) and DFC-TOTAL (incl. parallel announce path) are
-reported separately, as in the paper.
+reported separately, as in the paper.  The deque is compared against the
+queue baselines: a PTM's insert/remove persistence schedule is end-agnostic
+(node + root pointer + allocator metadata), so the queue schedule is the
+faithful PTM counterpart for deque ops too.
 """
 
 from __future__ import annotations
 
 from repro.core.baselines import (
+    OneFileQueue,
     OneFileStack,
+    PMDKQueue,
     PMDKStack,
+    RomulusQueue,
     RomulusStack,
     make_workloads,
     run_dfc_counts,
 )
+from repro.core.dfc import DFCStack
+from repro.core.dfc_deque import DFCDeque
+from repro.core.dfc_queue import DFCQueue
 
 THREADS = (1, 2, 4, 8, 16, 24, 32, 40)
 
+STRUCTURES = {
+    "stack": (DFCStack, PMDKStack, RomulusStack, OneFileStack),
+    "queue": (DFCQueue, PMDKQueue, RomulusQueue, OneFileQueue),
+    "deque": (DFCDeque, PMDKQueue, RomulusQueue, OneFileQueue),
+}
 
-def measure(kind: str, total_ops: int = 800):
+
+def measure(kind: str, total_ops: int = 800, structure: str = "stack"):
+    dfc_cls, pmdk_cls, rom_cls, one_cls = STRUCTURES[structure]
     rows = []
     for n in THREADS:
-        w = make_workloads(kind, n, total_ops)
-        dfc = run_dfc_counts(n, w, seed=7, think=(0, 30))
+        w = make_workloads(kind, n, total_ops, structure=structure)
+        dfc = run_dfc_counts(n, w, seed=7, think=(0, 30), structure=dfc_cls)
         ops = dfc["ops"]
-        rom = RomulusStack(n).run(make_workloads(kind, n, total_ops))
-        one = OneFileStack(n).run(make_workloads(kind, n, total_ops))
-        pmdk = PMDKStack(n).run(make_workloads(kind, n, total_ops))
+        rom = rom_cls(n).run(make_workloads(kind, n, total_ops, structure=structure))
+        one = one_cls(n).run(make_workloads(kind, n, total_ops, structure=structure))
+        pmdk = pmdk_cls(n).run(make_workloads(kind, n, total_ops, structure=structure))
         rows.append(
             dict(
                 threads=n,
@@ -50,18 +67,21 @@ def measure(kind: str, total_ops: int = 800):
 
 
 def main(emit):
-    for kind in ("push-pop", "rand-op"):
-        for r in measure(kind):
-            emit(
-                f"fig3_pwb_{kind}_t{r['threads']}",
-                r["dfc_total_pwb"],
-                f"dfc={r['dfc_pwb']:.2f},rom={r['romulus_pwb']:.2f},one={r['onefile_pwb']:.2f},pmdk={r['pmdk_pwb']:.2f}",
-            )
-            emit(
-                f"fig3_pfence_{kind}_t{r['threads']}",
-                r["dfc_total_pfence"],
-                f"dfc={r['dfc_pfence']:.3f},rom={r['romulus_pfence']:.3f},one={r['onefile_pfence']:.2f},pmdk={r['pmdk_pfence']:.2f}",
-            )
+    for structure in ("stack", "queue", "deque"):
+        # keep the original (structure-less) metric names for the stack
+        tag = "" if structure == "stack" else f"_{structure}"
+        for kind in ("push-pop", "rand-op"):
+            for r in measure(kind, structure=structure):
+                emit(
+                    f"fig3_pwb{tag}_{kind}_t{r['threads']}",
+                    r["dfc_total_pwb"],
+                    f"dfc={r['dfc_pwb']:.2f},rom={r['romulus_pwb']:.2f},one={r['onefile_pwb']:.2f},pmdk={r['pmdk_pwb']:.2f}",
+                )
+                emit(
+                    f"fig3_pfence{tag}_{kind}_t{r['threads']}",
+                    r["dfc_total_pfence"],
+                    f"dfc={r['dfc_pfence']:.3f},rom={r['romulus_pfence']:.3f},one={r['onefile_pfence']:.2f},pmdk={r['pmdk_pfence']:.2f}",
+                )
 
 
 if __name__ == "__main__":

@@ -25,21 +25,33 @@ OP_WORK_NS = 40.0
 PHASE_OVERHEAD_NS = 150.0
 
 from repro.core.baselines import (
+    OneFileQueue,
     OneFileStack,
+    PMDKQueue,
     PMDKStack,
+    RomulusQueue,
     RomulusStack,
     make_workloads,
     run_dfc_counts,
 )
+from repro.core.dfc import DFCStack
+from repro.core.dfc_deque import DFCDeque
+from repro.core.dfc_queue import DFCQueue
 
 THREADS = (1, 2, 4, 8, 16, 24, 32, 40)
 
+STRUCTURES = {
+    "stack": (DFCStack, PMDKStack, RomulusStack, OneFileStack),
+    "queue": (DFCQueue, PMDKQueue, RomulusQueue, OneFileQueue),
+    "deque": (DFCDeque, PMDKQueue, RomulusQueue, OneFileQueue),
+}
 
-def dfc_throughput(kind: str, n: int, total_ops: int = 800):
+
+def dfc_throughput(kind: str, n: int, total_ops: int = 800, structure: str = "stack"):
     """Phase-structured cost model: combiner path is serial; announce path
     runs in parallel across threads."""
-    w = make_workloads(kind, n, total_ops)
-    c = run_dfc_counts(n, w, seed=11, think=(0, 30))
+    w = make_workloads(kind, n, total_ops, structure=structure)
+    c = run_dfc_counts(n, w, seed=11, think=(0, 30), structure=STRUCTURES[structure][0])
     ops, phases = c["ops"], max(c["phases"], 1)
     surplus_ops = c["combined_ops"] - 2 * c["eliminated_pairs"]
     # serial combiner time per phase
@@ -77,18 +89,23 @@ def ptm_throughput(stats, n: int, serial: bool):
 
 
 def main(emit):
-    for kind in ("push-pop", "rand-op"):
-        for n in THREADS:
-            total = 800
-            dfc = dfc_throughput(kind, n, total)
-            rom = ptm_throughput(RomulusStack(n).run(make_workloads(kind, n, total)), n, True)
-            one = ptm_throughput(OneFileStack(n).run(make_workloads(kind, n, total)), n, False)
-            pmdk = ptm_throughput(PMDKStack(n).run(make_workloads(kind, n, total)), n, True)
-            emit(
-                f"fig3a_throughput_{kind}_t{n}",
-                dfc,
-                f"Mops/s dfc={dfc:.2f},rom={rom:.2f},one={one:.2f},pmdk={pmdk:.2f}",
-            )
+    for structure in ("stack", "queue", "deque"):
+        # keep the original (structure-less) metric names for the stack
+        tag = "" if structure == "stack" else f"_{structure}"
+        _, pmdk_cls, rom_cls, one_cls = STRUCTURES[structure]
+        for kind in ("push-pop", "rand-op"):
+            for n in THREADS:
+                total = 800
+                mk = lambda: make_workloads(kind, n, total, structure=structure)
+                dfc = dfc_throughput(kind, n, total, structure=structure)
+                rom = ptm_throughput(rom_cls(n).run(mk()), n, True)
+                one = ptm_throughput(one_cls(n).run(mk()), n, False)
+                pmdk = ptm_throughput(pmdk_cls(n).run(mk()), n, True)
+                emit(
+                    f"fig3a_throughput{tag}_{kind}_t{n}",
+                    dfc,
+                    f"Mops/s dfc={dfc:.2f},rom={rom:.2f},one={one:.2f},pmdk={pmdk:.2f}",
+                )
 
 
 if __name__ == "__main__":

@@ -33,8 +33,16 @@ from typing import Any, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.dfc import ACK, EMPTY, POP, PUSH
+from repro.core.dfc import ACK, DEQ, EMPTY, ENQ, POP, POPL, POPR, PUSH, PUSHL, PUSHR
 from repro.nvm.memory import NVMemory
+
+_PUSH_NAMES = frozenset((PUSH, ENQ, PUSHL, PUSHR))
+
+
+def _is_push(name: str) -> bool:
+    """Insertions share one persistence schedule across all three structures
+    (node + root pointer + allocator metadata), as do removals."""
+    return name in _PUSH_NAMES
 
 
 @dataclasses.dataclass
@@ -53,12 +61,27 @@ class BaselineStats:
 
 
 class _RoundStack:
-    """Shared round-based driver: pops values, tracks a plain list stack."""
+    """Shared round-based driver: pops values, tracks a plain list container.
+
+    ``FIFO = True`` subclasses remove from the front instead of the back —
+    the persistence schedules are identical (what the figures measure); only
+    the container semantics differ.
+    """
+
+    FIFO = False
 
     def __init__(self, n_threads: int):
         self.n = n_threads
         self.stack: List[Any] = []
         self.stats = BaselineStats()
+
+    def _pop(self) -> None:
+        if not self.stack:
+            return
+        if self.FIFO:
+            self.stack.pop(0)
+        else:
+            self.stack.pop()
 
     def run(self, workloads: Sequence[Sequence[Tuple[str, Any]]]) -> BaselineStats:
         queues = [list(w) for w in workloads]
@@ -82,7 +105,7 @@ class PMDKStack(_RoundStack):
     def _execute_batch(self, batch):
         s = self.stats
         for t, name, param in batch:
-            if name == PUSH:
+            if _is_push(name):
                 # tx: alloc (persistent allocator metadata), undo-log the top
                 # pointer, write node, write top, commit.
                 s.pwb += 1  # allocator metadata persist
@@ -98,8 +121,7 @@ class PMDKStack(_RoundStack):
                 s.pwb += 1  # allocator free metadata
                 s.pfence += 1  # commit fence
                 s.pwb += 1; s.pfence += 1  # log invalidate + fence
-                if self.stack:
-                    self.stack.pop()
+                self._pop()
 
 
 class RomulusStack(_RoundStack):
@@ -113,13 +135,12 @@ class RomulusStack(_RoundStack):
         # combining amortizes is the state flip and the three fences.
         logged_lines = 0
         for t, name, param in batch:
-            if name == PUSH:
+            if _is_push(name):
                 logged_lines += 3  # new node + top + allocator metadata
                 self.stack.append(param)
             else:
                 logged_lines += 2  # top + allocator metadata
-                if self.stack:
-                    self.stack.pop()
+                self._pop()
         # main copy flush (per-tx ranges)
         s.pwb += logged_lines
         s.pfence += 1
@@ -141,7 +162,7 @@ class OneFileStack(_RoundStack):
         n_helpers = max(0, len(batch) - 1)
         amp = 1.0 + self.BETA * n_helpers
         for t, name, param in batch:
-            write_set = 3 if name == PUSH else 2  # node+top+alloc / top+alloc
+            write_set = 3 if _is_push(name) else 2  # node+top+alloc / top+alloc
             # publish tx descriptor
             s.cas += 1
             s.pwb += 1
@@ -152,10 +173,22 @@ class OneFileStack(_RoundStack):
             # commit CAS + flush of the tx state
             s.cas += 1
             s.pwb += 1
-            if name == PUSH:
+            if _is_push(name):
                 self.stack.append(param)
-            elif self.stack:
-                self.stack.pop()
+            else:
+                self._pop()
+
+
+class PMDKQueue(PMDKStack):
+    FIFO = True
+
+
+class RomulusQueue(RomulusStack):
+    FIFO = True
+
+
+class OneFileQueue(OneFileStack):
+    FIFO = True
 
 
 def run_dfc_counts(
@@ -163,29 +196,33 @@ def run_dfc_counts(
     workloads: Sequence[Sequence[Tuple[str, Any]]],
     seed: int = 0,
     think: Tuple[int, int] = None,
+    structure=None,
 ):
-    """Run the real DFC stack under the cooperative scheduler, return
-    (announce, combine) persistence counters + phases for the figures."""
+    """Run a real DFC structure (default: the stack) under the cooperative
+    scheduler, return (announce, combine) persistence counters + phases for
+    the figures."""
     from repro.core.dfc import DFCStack
     from repro.core.sim import History, Scheduler, workload_gen
 
+    if structure is None:
+        structure = DFCStack
     mem = NVMemory()
     n_ops = sum(len(w) for w in workloads)
-    stack = DFCStack(mem, n_threads, pool_capacity=max(1024, n_ops + 64))
+    obj = structure(mem, n_threads, pool_capacity=max(1024, n_ops + 64))
     sched = Scheduler(seed=seed)
     hist = History()
     rng = np.random.default_rng(seed + 17)
     gens = {
-        t: workload_gen(stack, sched, hist, t, workloads[t], think=think, rng=rng)
+        t: workload_gen(obj, sched, hist, t, workloads[t], think=think, rng=rng)
         for t in range(n_threads)
     }
     sched.run(gens)
     st = mem.stats
     return dict(
         ops=n_ops,
-        phases=stack.phases,
-        eliminated_pairs=stack.eliminated_pairs,
-        combined_ops=stack.combined_ops,
+        phases=obj.phases,
+        eliminated_pairs=obj.eliminated_pairs,
+        combined_ops=obj.combined_ops,
         pwb_announce=st.pwb.get("announce", 0),
         pwb_combine=st.pwb.get("combine", 0),
         pfence_announce=st.pfence.get("announce", 0),
@@ -193,9 +230,22 @@ def run_dfc_counts(
     )
 
 
-def make_workloads(kind: str, n_threads: int, total_ops: int, seed: int = 0):
-    """The paper's benchmarks: push-pop (alternating pairs) and rand-op."""
+# (insert, remove) op names per structure; deque inserts/removes pick a
+# random side per op in make_workloads.
+_STRUCTURE_OPS = {
+    "stack": ((PUSH,), (POP,)),
+    "queue": ((ENQ,), (DEQ,)),
+    "deque": ((PUSHL, PUSHR), (POPL, POPR)),
+}
+
+
+def make_workloads(
+    kind: str, n_threads: int, total_ops: int, seed: int = 0, structure: str = "stack"
+):
+    """The paper's benchmarks: push-pop (alternating pairs) and rand-op, for
+    any of the three structures."""
     rng = np.random.default_rng(seed)
+    ins_names, rem_names = _STRUCTURE_OPS[structure]
     per = max(2, total_ops // n_threads)
     out = []
     uid = 0
@@ -203,12 +253,14 @@ def make_workloads(kind: str, n_threads: int, total_ops: int, seed: int = 0):
         ops = []
         for i in range(per):
             if kind == "push-pop":
-                name = PUSH if i % 2 == 0 else POP
+                is_ins = i % 2 == 0
             elif kind == "rand-op":
-                name = PUSH if rng.random() < 0.5 else POP
+                is_ins = rng.random() < 0.5
             else:
                 raise ValueError(kind)
+            names = ins_names if is_ins else rem_names
+            name = names[int(rng.integers(len(names)))]
             uid += 1
-            ops.append((name, uid * 10 + t) if name == PUSH else (name, None))
+            ops.append((name, uid * 10 + t) if is_ins else (name, None))
         out.append(ops)
     return out

@@ -15,6 +15,11 @@ Layout (Figure 1):
   Volatile:
     cLock, rLock, pushList[N], popList[N], vColl[N]
 
+The announce / lock hand-off / recovery skeleton (Algorithm 1) is shared by
+all three of the paper's structures — stack, FIFO queue (`dfc_queue`), and
+double-ended queue (`dfc_deque`) — via :class:`DFCBase`; only REDUCE/COMBINE
+(Algorithm 2) and the double-buffered root pointers differ per structure.
+
 Deviations from the pseudocode (documented):
   * Initial announcements get ``epoch=-1, val=INIT, name=NONE`` instead of
     all-zero, so that threads which never announced an operation are not
@@ -25,26 +30,51 @@ Deviations from the pseudocode (documented):
 
 from __future__ import annotations
 
-from typing import Any, Dict, Generator, Optional
+from typing import Any, Dict, Generator, Iterable, Optional, Sequence, Tuple
 
 from repro.nvm.memory import BOT, NVMemory
 from repro.nvm.pool import NIL, NodePool
 
 PUSH = "push"
 POP = "pop"
+ENQ = "enq"  # FIFO queue (repro.core.dfc_queue)
+DEQ = "deq"
+PUSHL = "pushL"  # double-ended queue (repro.core.dfc_deque)
+POPL = "popL"
+PUSHR = "pushR"
+POPR = "popR"
 NONE = "none"
 ACK = "ACK"
 EMPTY = "EMPTY"
 INIT = "INIT"  # val of a never-used announcement slot
 
 
-class DFCStack:
+class DFCBase:
+    """Algorithm 1 (announce, lock hand-off, try-to-return, recover) — the
+    structure-independent detectable flat-combining skeleton.
+
+    Subclasses provide:
+      * ``SEMANTICS``  — key into ``repro.core.linearize.SEMANTICS``
+      * ``DRAIN_OP``   — op name that removes one element (harness drains)
+      * ``_alloc_structure()``   — allocate the double-buffered root lines
+      * ``_extra_volatile()``    — combiner scratch lists
+      * ``_gc_roots()``          — (roots, stops) for the recovery GC cycle
+      * ``combine(t)``           — Algorithm 2 for the concrete structure
+      * ``snapshot()``           — current contents (test/drain helper)
+    """
+
+    SEMANTICS = "stack"
+    DRAIN_OP = POP
+    POOL_EXTRA_FIELDS: Tuple[str, ...] = ()
+
     def __init__(self, mem: NVMemory, n_threads: int, pool_capacity: int = 4096):
         self.mem = mem
         self.N = n_threads
-        self.pool = NodePool(mem, pool_capacity)
+        self.pool = NodePool(
+            mem, pool_capacity, extra_fields=self.POOL_EXTRA_FIELDS
+        )
         mem.alloc_line("cEpoch", v=0)
-        mem.alloc_line("top", **{"0": NIL, "1": NIL})
+        self._alloc_structure()
         for t in range(n_threads):
             mem.alloc_line(("valid", t), v=0)
             for s in (0, 1):
@@ -52,8 +82,24 @@ class DFCStack:
         self.vol: Dict[str, Any] = {}
         self.reset_volatile()
         self.phases = 0  # combining-phase counter (Figure 4)
-        self.eliminated_pairs = 0  # push/pop pairs resolved without stack access
+        self.eliminated_pairs = 0  # op pairs resolved without structure access
         self.combined_ops = 0  # total ops collected by combiners
+
+    # ----------------------------------------------------------------- hooks
+    def _alloc_structure(self) -> None:
+        raise NotImplementedError
+
+    def _extra_volatile(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def _gc_roots(self) -> Tuple[Sequence[int], Iterable[int]]:
+        raise NotImplementedError
+
+    def combine(self, t: int) -> Generator:
+        raise NotImplementedError
+
+    def snapshot(self):
+        raise NotImplementedError
 
     # ----------------------------------------------------------------- state
     def reset_volatile(self) -> None:
@@ -61,9 +107,8 @@ class DFCStack:
         self.vol = dict(
             cLock=0,
             rLock=0,
-            pushList=[0] * self.N,
-            popList=[0] * self.N,
             vColl=[BOT] * self.N,
+            **self._extra_volatile(),
         )
 
     def _top_entry(self, epoch: int) -> str:
@@ -140,12 +185,17 @@ class DFCStack:
             return (yield from self.take_lock(t, op_epoch))  # L49
         return val  # L50
 
-    # ---------------------------------------------------------------- Reduce
-    def reduce(self, t: int) -> Generator:
-        """Algorithm 2, lines 86-113 (push/pop pair elimination)."""
+    # ------------------------------------------------------ announcement scan
+    def _collect(self, t: int) -> Generator:
+        """Algorithm 2, lines 88-101 (shared collection loop of REDUCE).
+
+        Scans the announcement array, stamps collected ops with the current
+        epoch (val+epoch share the cache line, so they persist together) and
+        fills ``vColl``.  Yields (i, op_name) for each collected op; the
+        caller routes it into its per-structure lists.
+        """
         m = self.mem
         vol = self.vol
-        t_push = t_pop = -1  # L87
         yield
         c_epoch = m.read("cEpoch", "v")
         for i in range(self.N):  # L88
@@ -162,14 +212,131 @@ class DFCStack:
                 m.write(ann, "epoch", c_epoch)  # L92 (val+epoch share the line)
                 vol["vColl"][i] = lsb  # L93
                 self.combined_ops += 1
-                if op_name == PUSH:  # L94
-                    t_push += 1  # L95
-                    vol["pushList"][t_push] = i  # L96
-                else:
-                    t_pop += 1  # L98
-                    vol["popList"][t_pop] = i  # L99
+                self._route(i, op_name)  # L94-99
             else:
                 vol["vColl"][i] = BOT  # L101
+
+    def _route(self, i: int, op_name: str) -> None:
+        """Place collected op ``i`` into the combiner's scratch lists."""
+        raise NotImplementedError
+
+    # --------------------------------------------------------------- publish
+    def _publish(self, t: int, c_epoch: int, struct_lines: Sequence) -> Generator:
+        """Algorithm 2, lines 77-85: persist responses + roots, then commit
+        the phase with the two-increment epoch protocol."""
+        m = self.mem
+        vol = self.vol
+        for i in range(self.N):  # L77
+            v_op = vol["vColl"][i]  # L78
+            if v_op is not BOT:  # L79
+                yield
+                m.pwb(t, ("ann", i, v_op), tag="combine")
+        for line in struct_lines:
+            yield
+            m.pwb(t, line, tag="combine")  # L80
+        yield
+        m.pfence(t, tag="combine")
+        yield
+        m.write("cEpoch", "v", c_epoch + 1)  # L81
+        yield
+        m.pwb(t, "cEpoch", tag="combine")  # L82
+        yield
+        m.pfence(t, tag="combine")
+        yield
+        m.write("cEpoch", "v", c_epoch + 2)  # L83
+        yield
+        self.vol["cLock"] = 0  # L84
+        self.phases += 1
+
+    # --------------------------------------------------------------- Recover
+    def recover(self, t: int) -> Generator:
+        """Algorithm 1, lines 26-43."""
+        m = self.mem
+        yield
+        if self.vol["rLock"] == 0:  # L27: rLock.CAS(0,1)
+            self.vol["rLock"] = 1
+            yield
+            c_epoch = m.read("cEpoch", "v")
+            if c_epoch % 2 == 1:  # L28
+                c_epoch += 1
+                yield
+                m.write("cEpoch", "v", c_epoch)  # L29
+                yield
+                m.pwb(t, "cEpoch", tag="recover")  # L30
+                yield
+                m.pfence(t, tag="recover")
+            yield
+            roots, stops = self._gc_roots()
+            self.pool.garbage_collect(roots, stops=stops)  # L31
+            for i in range(self.N):  # L32
+                yield
+                v_op = m.read(("valid", i), "v")  # L33
+                lsb = v_op & 1
+                yield
+                op_epoch = m.read(("ann", i, lsb), "epoch")  # L34
+                if (v_op >> 1) & 1 == 0:  # L35
+                    yield
+                    m.write(("valid", i), "v", 2 | lsb)  # L36
+                if op_epoch == c_epoch:  # L37
+                    yield
+                    m.write(("ann", i, lsb), "val", BOT)  # L38
+            yield from self.combine(t)  # L39
+            yield
+            self.vol["rLock"] = 2  # L40
+        else:
+            while True:  # L42
+                yield
+                if self.vol["rLock"] != 1:
+                    break
+        yield
+        lsb = m.read(("valid", t), "v") & 1
+        return m.read(("ann", t, lsb), "val")  # L43
+
+    # ------------------------------------------------------------ inspection
+    def active_announcement(self, t: int):
+        """(name, param, val) of thread t's active announcement (helper)."""
+        lsb = self.mem.read(("valid", t), "v") & 1
+        ann = ("ann", t, lsb)
+        return (
+            self.mem.read(ann, "name"),
+            self.mem.read(ann, "param"),
+            self.mem.read(ann, "val"),
+        )
+
+
+class DFCStack(DFCBase):
+    """The paper's detectable FC stack (Algorithm 2 as published)."""
+
+    SEMANTICS = "stack"
+    DRAIN_OP = POP
+
+    def _alloc_structure(self) -> None:
+        self.mem.alloc_line("top", **{"0": NIL, "1": NIL})
+
+    def _extra_volatile(self) -> Dict[str, Any]:
+        return dict(pushList=[0] * self.N, popList=[0] * self.N)
+
+    def _gc_roots(self):
+        c_epoch = self.mem.read("cEpoch", "v")
+        return [self.mem.read("top", self._top_entry(c_epoch))], ()
+
+    def _route(self, i: int, op_name: str) -> None:
+        vol = self.vol
+        if op_name == PUSH:  # L94
+            self._t_push += 1  # L95
+            vol["pushList"][self._t_push] = i  # L96
+        else:
+            self._t_pop += 1  # L98
+            vol["popList"][self._t_pop] = i  # L99
+
+    # ---------------------------------------------------------------- Reduce
+    def reduce(self, t: int) -> Generator:
+        """Algorithm 2, lines 86-113 (push/pop pair elimination)."""
+        m = self.mem
+        vol = self.vol
+        self._t_push = self._t_pop = -1  # L87
+        yield from self._collect(t)  # L88-101
+        t_push, t_pop = self._t_push, self._t_pop
         while t_push != -1 and t_pop != -1:  # L102: eliminate pairs
             c_push = vol["pushList"][t_push]  # L103
             c_pop = vol["popList"][t_pop]  # L104
@@ -229,71 +396,7 @@ class DFCStack:
                     self.pool.deallocate(temp_head)  # L75
         yield
         m.write("top", self._next_top_entry(c_epoch), head)  # L76
-        for i in range(self.N):  # L77
-            v_op = vol["vColl"][i]  # L78
-            if v_op is not BOT:  # L79
-                yield
-                m.pwb(t, ("ann", i, v_op), tag="combine")
-        yield
-        m.pwb(t, "top", tag="combine")  # L80
-        yield
-        m.pfence(t, tag="combine")
-        yield
-        m.write("cEpoch", "v", c_epoch + 1)  # L81
-        yield
-        m.pwb(t, "cEpoch", tag="combine")  # L82
-        yield
-        m.pfence(t, tag="combine")
-        yield
-        m.write("cEpoch", "v", c_epoch + 2)  # L83
-        yield
-        self.vol["cLock"] = 0  # L84
-        self.phases += 1
-        return  # L85
-
-    # --------------------------------------------------------------- Recover
-    def recover(self, t: int) -> Generator:
-        """Algorithm 1, lines 26-43."""
-        m = self.mem
-        yield
-        if self.vol["rLock"] == 0:  # L27: rLock.CAS(0,1)
-            self.vol["rLock"] = 1
-            yield
-            c_epoch = m.read("cEpoch", "v")
-            if c_epoch % 2 == 1:  # L28
-                c_epoch += 1
-                yield
-                m.write("cEpoch", "v", c_epoch)  # L29
-                yield
-                m.pwb(t, "cEpoch", tag="recover")  # L30
-                yield
-                m.pfence(t, tag="recover")
-            yield
-            active = m.read("top", self._top_entry(c_epoch))
-            self.pool.garbage_collect([active])  # L31
-            for i in range(self.N):  # L32
-                yield
-                v_op = m.read(("valid", i), "v")  # L33
-                lsb = v_op & 1
-                yield
-                op_epoch = m.read(("ann", i, lsb), "epoch")  # L34
-                if (v_op >> 1) & 1 == 0:  # L35
-                    yield
-                    m.write(("valid", i), "v", 2 | lsb)  # L36
-                if op_epoch == c_epoch:  # L37
-                    yield
-                    m.write(("ann", i, lsb), "val", BOT)  # L38
-            yield from self.combine(t)  # L39
-            yield
-            self.vol["rLock"] = 2  # L40
-        else:
-            while True:  # L42
-                yield
-                if self.vol["rLock"] != 1:
-                    break
-        yield
-        lsb = m.read(("valid", t), "v") & 1
-        return m.read(("ann", t, lsb), "val")  # L43
+        yield from self._publish(t, c_epoch, ("top",))  # L77-85
 
     # ------------------------------------------------------------ inspection
     def peek_stack(self):
@@ -302,12 +405,5 @@ class DFCStack:
         head = self.mem.read("top", self._top_entry(c_epoch))
         return self.pool.walk(head)
 
-    def active_announcement(self, t: int):
-        """(name, param, val) of thread t's active announcement (helper)."""
-        lsb = self.mem.read(("valid", t), "v") & 1
-        ann = ("ann", t, lsb)
-        return (
-            self.mem.read(ann, "name"),
-            self.mem.read(ann, "param"),
-            self.mem.read(ann, "val"),
-        )
+    def snapshot(self):
+        return self.peek_stack()

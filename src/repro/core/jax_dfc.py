@@ -1,7 +1,23 @@
-"""TPU-native DFC: the paper's combiner as a data-parallel JAX op.
+"""TPU-native DFC: the paper's combiners as data-parallel JAX ops.
+
+All three of the paper's structures — LIFO stack, FIFO queue, double-ended
+queue — are expressed as array-backed states with double-buffered root
+pointers and a one-pass vectorized ``combine``:
+
+  * stack: ``values[capacity]`` + two alternating ``size`` pointers,
+  * queue: a ring ``values[capacity]`` + double-buffered ``(head, tail)``
+    absolute counters (``ends[2, 2]``); slot = counter % capacity,
+  * deque: the same ring with double-buffered ``(left, right)`` counters —
+    the window [left, right) grows left on pushL and right on pushR.
+
+A combine phase only writes ring slots *outside* the committed window and
+publishes by writing the inactive counter pair with an epoch bump of +2
+(contract: capacity >= committed size + lanes), so a crash mid-combine
+leaves the committed state intact — exactly the paper's alternating-root
+crash-consistency argument.
 
 The paper's combiner walks an announcement array sequentially, eliminating
-push/pop pairs and applying the surplus to a linked-list stack.  On TPU the
+push/pop pairs and applying the surplus to a linked-list structure.  Here the
 same *semantic combining* is done in one vectorized pass over the
 announcement lanes:
 
@@ -34,10 +50,17 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-# op codes
+# op codes (stack/queue: enq==push, deq==pop)
 OP_NONE = 0
 OP_PUSH = 1
 OP_POP = 2
+OP_ENQ = OP_PUSH
+OP_DEQ = OP_POP
+# deque op codes
+OP_PUSHL = 1
+OP_POPL = 2
+OP_PUSHR = 3
+OP_POPR = 4
 # response kinds
 R_NONE = 0
 R_ACK = 1
@@ -180,3 +203,321 @@ def sequential_reference(stack_list, ops, params):
         else:
             kinds[i] = R_EMPTY
     return stack, responses, kinds
+
+
+# ======================================================================= queue
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QueueState:
+    """Ring-backed DFC queue with double-buffered (head, tail) counters.
+
+    ``ends[b] = (head, tail)`` are absolute (monotone) counters; the occupied
+    window is [head, tail), slot index = counter % capacity.
+    """
+
+    values: jax.Array  # f32[capacity] ring
+    ends: jax.Array  # i32[2, 2] — two alternating (head, tail) pairs
+    epoch: jax.Array  # i32[]  — cEpoch (always even between phases)
+
+    @property
+    def active_idx(self) -> jax.Array:
+        return (self.epoch // 2) % 2
+
+    def active_ends(self) -> jax.Array:
+        return self.ends[self.active_idx]
+
+    def active_size(self) -> jax.Array:
+        e = self.active_ends()
+        return e[1] - e[0]
+
+
+def init_queue(capacity: int, dtype=jnp.float32) -> QueueState:
+    return QueueState(
+        values=jnp.zeros((capacity,), dtype=dtype),
+        ends=jnp.zeros((2, 2), dtype=jnp.int32),
+        epoch=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def combine_queue(
+    state: QueueState, ops: jax.Array, params: jax.Array
+) -> Tuple[QueueState, jax.Array, jax.Array]:
+    """One DFC queue combining phase over N announcement lanes.
+
+    Linearization witness (shared with ``sequential_reference_queue`` and the
+    Pallas kernel): dequeues drain the committed window FIFO; once drained,
+    deq rank size+k pairs with enq rank k (two-sided elimination — the value
+    flows announcement-to-announcement); surplus enqueues append in rank
+    order; deqs beyond every enqueue return EMPTY.
+
+    Returns (new_state, responses f32[N], kinds i32[N]).
+    """
+    n = ops.shape[0]
+    cap = state.values.shape[0]
+    ends = state.active_ends()
+    head, tail = ends[0], ends[1]
+    size = tail - head
+
+    is_enq = ops == OP_ENQ
+    is_deq = ops == OP_DEQ
+    enq_rank = jnp.where(is_enq, jnp.cumsum(is_enq) - 1, -1)
+    deq_rank = jnp.where(is_deq, jnp.cumsum(is_deq) - 1, -1)
+    p_total = jnp.sum(is_enq)
+    q_total = jnp.sum(is_deq)
+    n_from_q = jnp.minimum(q_total, size)  # deqs served from the ring
+    n_elim = jnp.minimum(jnp.maximum(q_total - size, 0), p_total)
+
+    # --- deqs served FIFO from the committed window -------------------------
+    served = is_deq & (deq_rank < size)
+    ring_val = state.values[(head + jnp.clip(deq_rank, 0, None)) % cap].astype(
+        jnp.float32
+    )
+
+    # --- drained: deq rank size+k pairs with enq rank k ---------------------
+    enq_by_rank = _onehot_route(enq_rank, params.astype(jnp.float32), n)
+    paired = is_deq & (deq_rank >= size) & (deq_rank - size < n_elim)
+    pair_val = enq_by_rank[jnp.clip(deq_rank - size, 0, n - 1)]
+    empty = is_deq & (deq_rank >= size + n_elim)
+
+    # --- surplus enqs append at the tail ------------------------------------
+    surplus_enq = is_enq & (enq_rank >= n_elim)
+    n_enq_surplus = p_total - n_elim
+    seg_idx = jnp.where(surplus_enq, enq_rank - n_elim, n)
+    segment = _onehot_route(seg_idx, params.astype(state.values.dtype), n)
+    pos = (tail + jnp.arange(n)) % cap
+    write = jnp.arange(n) < n_enq_surplus
+    new_values = state.values.at[jnp.where(write, pos, cap)].set(
+        segment, mode="drop"
+    )
+
+    # --- responses -----------------------------------------------------------
+    kinds = jnp.full((n,), R_NONE, dtype=jnp.int32)
+    kinds = jnp.where(is_enq, R_ACK, kinds)
+    kinds = jnp.where(served | paired, R_VALUE, kinds)
+    kinds = jnp.where(empty, R_EMPTY, kinds)
+    responses = jnp.zeros((n,), dtype=jnp.float32)
+    responses = jnp.where(served, ring_val, responses)
+    responses = jnp.where(paired, pair_val, responses)
+
+    # --- publish: write the inactive (head, tail), bump epoch by 2 -----------
+    new_ends = jnp.stack([head + n_from_q, tail + n_enq_surplus])
+    inactive = (state.epoch // 2 + 1) % 2
+    new_state = QueueState(
+        values=new_values,
+        ends=state.ends.at[inactive].set(new_ends),
+        epoch=state.epoch + 2,
+    )
+    return new_state, responses, kinds
+
+
+combine_queue_jit = jax.jit(combine_queue)
+
+
+def sequential_reference_queue(queue_list, ops, params):
+    """Canonical queue linearization witness in pure Python (test oracle)."""
+    n = len(ops)
+    enqs = [i for i in range(n) if ops[i] == OP_ENQ]
+    deqs = [i for i in range(n) if ops[i] == OP_DEQ]
+    responses = [0.0] * n
+    kinds = [R_NONE] * n
+    q = list(queue_list)
+    for i in enqs:
+        kinds[i] = R_ACK
+    di = 0
+    while di < len(deqs) and q:  # serve from the committed queue
+        responses[deqs[di]] = q.pop(0)
+        kinds[deqs[di]] = R_VALUE
+        di += 1
+    ei = 0
+    while di < len(deqs) and ei < len(enqs):  # eliminated pairs
+        responses[deqs[di]] = float(params[enqs[ei]])
+        kinds[deqs[di]] = R_VALUE
+        di += 1
+        ei += 1
+    while di < len(deqs):
+        kinds[deqs[di]] = R_EMPTY
+        di += 1
+    for i in enqs[ei:]:  # surplus enqueues
+        q.append(float(params[i]))
+    return q, responses, kinds
+
+
+# ======================================================================= deque
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DequeState:
+    """Ring-backed DFC deque with double-buffered (left, right) counters.
+
+    ``ends[b] = (left, right)``; the occupied window is [left, right), slot
+    index = counter % capacity (counters may go negative — Python-style
+    modulo keeps slots in range).
+    """
+
+    values: jax.Array  # f32[capacity] ring
+    ends: jax.Array  # i32[2, 2] — two alternating (left, right) pairs
+    epoch: jax.Array  # i32[]
+
+    @property
+    def active_idx(self) -> jax.Array:
+        return (self.epoch // 2) % 2
+
+    def active_ends(self) -> jax.Array:
+        return self.ends[self.active_idx]
+
+    def active_size(self) -> jax.Array:
+        e = self.active_ends()
+        return e[1] - e[0]
+
+
+def init_deque(capacity: int, dtype=jnp.float32) -> DequeState:
+    return DequeState(
+        values=jnp.zeros((capacity,), dtype=dtype),
+        ends=jnp.zeros((2, 2), dtype=jnp.int32),
+        epoch=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def combine_deque(
+    state: DequeState, ops: jax.Array, params: jax.Array
+) -> Tuple[DequeState, jax.Array, jax.Array]:
+    """One DFC deque combining phase over N announcement lanes.
+
+    Linearization witness (shared with ``sequential_reference_deque`` and the
+    Pallas kernel): same-side eliminated pairs first (pushL_k;popL_k and
+    pushR_k;popR_k adjacent — state untouched), then the LEFT surplus in rank
+    order, then the RIGHT surplus in rank order.  Right surplus pops may
+    therefore consume values pushed left in the same phase.
+
+    Returns (new_state, responses f32[N], kinds i32[N]).
+    """
+    n = ops.shape[0]
+    cap = state.values.shape[0]
+    ends = state.active_ends()
+    left, right = ends[0], ends[1]
+    size = right - left
+
+    is_pl = ops == OP_PUSHL
+    is_ql = ops == OP_POPL
+    is_pr = ops == OP_PUSHR
+    is_qr = ops == OP_POPR
+    pl_rank = jnp.where(is_pl, jnp.cumsum(is_pl) - 1, -1)
+    ql_rank = jnp.where(is_ql, jnp.cumsum(is_ql) - 1, -1)
+    pr_rank = jnp.where(is_pr, jnp.cumsum(is_pr) - 1, -1)
+    qr_rank = jnp.where(is_qr, jnp.cumsum(is_qr) - 1, -1)
+    npl, nql = jnp.sum(is_pl), jnp.sum(is_ql)
+    npr, nqr = jnp.sum(is_pr), jnp.sum(is_qr)
+    nl_elim = jnp.minimum(npl, nql)
+    nr_elim = jnp.minimum(npr, nqr)
+
+    # --- same-side elimination: pop_k gets push_k's param -------------------
+    f32params = params.astype(jnp.float32)
+    pl_by_rank = _onehot_route(pl_rank, f32params, n)
+    pr_by_rank = _onehot_route(pr_rank, f32params, n)
+    eliml = is_ql & (ql_rank < nl_elim)
+    elimr = is_qr & (qr_rank < nr_elim)
+    eliml_val = pl_by_rank[jnp.clip(ql_rank, 0, n - 1)]
+    elimr_val = pr_by_rank[jnp.clip(qr_rank, 0, n - 1)]
+
+    # --- left surplus (pushes XOR pops) -------------------------------------
+    sl = jnp.maximum(npl - nl_elim, 0)  # surplus pushes left
+    tl = jnp.maximum(nql - nl_elim, 0)  # surplus pops left
+    surplus_pl = is_pl & (pl_rank >= nl_elim)
+    seg_l = _onehot_route(
+        jnp.where(surplus_pl, pl_rank - nl_elim, n), params.astype(state.values.dtype), n
+    )
+    # push j lands at slot left-1-j (later pushes further left)
+    posl = (left - 1 - jnp.arange(n)) % cap
+    vals1 = state.values.at[jnp.where(jnp.arange(n) < sl, posl, cap)].set(
+        seg_l, mode="drop"
+    )
+    dl = jnp.minimum(tl, size)  # left pops consume the committed front
+    surplus_ql = is_ql & (ql_rank >= nl_elim)
+    kl = ql_rank - nl_elim
+    lpop_ok = surplus_ql & (kl < size)
+    lpop_val = state.values[(left + jnp.clip(kl, 0, None)) % cap].astype(jnp.float32)
+    size_after = size + sl - dl  # window after the left surplus
+
+    # --- right surplus (pushes XOR pops), applied after the left ------------
+    sr = jnp.maximum(npr - nr_elim, 0)
+    tr = jnp.maximum(nqr - nr_elim, 0)
+    surplus_pr = is_pr & (pr_rank >= nr_elim)
+    seg_r = _onehot_route(
+        jnp.where(surplus_pr, pr_rank - nr_elim, n), params.astype(state.values.dtype), n
+    )
+    posr = (right + jnp.arange(n)) % cap
+    new_values = vals1.at[jnp.where(jnp.arange(n) < sr, posr, cap)].set(
+        seg_r, mode="drop"
+    )
+    dr = jnp.minimum(tr, size_after)
+    surplus_qr = is_qr & (qr_rank >= nr_elim)
+    kr = qr_rank - nr_elim
+    rpop_ok = surplus_qr & (kr < size_after)
+    # right pop k reads slot right-1-k: committed when k < size, otherwise a
+    # value pushed left in this phase (vals1 holds both)
+    rpop_val = vals1[(right - 1 - jnp.clip(kr, 0, None)) % cap].astype(jnp.float32)
+
+    # --- responses -----------------------------------------------------------
+    kinds = jnp.full((n,), R_NONE, dtype=jnp.int32)
+    kinds = jnp.where(is_pl | is_pr, R_ACK, kinds)
+    kinds = jnp.where(eliml | elimr | lpop_ok | rpop_ok, R_VALUE, kinds)
+    kinds = jnp.where(surplus_ql & ~lpop_ok, R_EMPTY, kinds)
+    kinds = jnp.where(surplus_qr & ~rpop_ok, R_EMPTY, kinds)
+    responses = jnp.zeros((n,), dtype=jnp.float32)
+    responses = jnp.where(eliml, eliml_val, responses)
+    responses = jnp.where(elimr, elimr_val, responses)
+    responses = jnp.where(lpop_ok, lpop_val, responses)
+    responses = jnp.where(rpop_ok, rpop_val, responses)
+
+    # --- publish: write the inactive (left, right), bump epoch by 2 ----------
+    new_ends = jnp.stack([left - sl + dl, right + sr - dr])
+    inactive = (state.epoch // 2 + 1) % 2
+    new_state = DequeState(
+        values=new_values,
+        ends=state.ends.at[inactive].set(new_ends),
+        epoch=state.epoch + 2,
+    )
+    return new_state, responses, kinds
+
+
+combine_deque_jit = jax.jit(combine_deque)
+
+
+def sequential_reference_deque(deque_list, ops, params):
+    """Canonical deque linearization witness in pure Python (test oracle)."""
+    n = len(ops)
+    pl = [i for i in range(n) if ops[i] == OP_PUSHL]
+    ql = [i for i in range(n) if ops[i] == OP_POPL]
+    pr = [i for i in range(n) if ops[i] == OP_PUSHR]
+    qr = [i for i in range(n) if ops[i] == OP_POPR]
+    nl = min(len(pl), len(ql))
+    nr = min(len(pr), len(qr))
+    responses = [0.0] * n
+    kinds = [R_NONE] * n
+    d = list(deque_list)
+    for k in range(nl):  # same-side eliminated pairs
+        kinds[pl[k]] = R_ACK
+        kinds[ql[k]] = R_VALUE
+        responses[ql[k]] = float(params[pl[k]])
+    for k in range(nr):
+        kinds[pr[k]] = R_ACK
+        kinds[qr[k]] = R_VALUE
+        responses[qr[k]] = float(params[pr[k]])
+    for i in pl[nl:]:  # left surplus first…
+        d.insert(0, float(params[i]))
+        kinds[i] = R_ACK
+    for i in ql[nl:]:
+        if d:
+            responses[i] = d.pop(0)
+            kinds[i] = R_VALUE
+        else:
+            kinds[i] = R_EMPTY
+    for i in pr[nr:]:  # …then right surplus
+        d.append(float(params[i]))
+        kinds[i] = R_ACK
+    for i in qr[nr:]:
+        if d:
+            responses[i] = d.pop()
+            kinds[i] = R_VALUE
+        else:
+            kinds[i] = R_EMPTY
+    return d, responses, kinds

@@ -1,28 +1,42 @@
-"""Pallas TPU kernel for the DFC combining phase (paper Algorithm 2, REDUCE).
+"""Pallas TPU kernels for the DFC combining phase (paper Algorithm 2, REDUCE).
 
 One program instance processes a whole announcement batch of N lanes plus a
-window of the stack top.  The batch sizes the paper cares about (N = number
-of threads/workers, up to a few thousand) fit a single VMEM block, so the
-kernel is a single-grid fused pass:
+window of the structure's active end(s).  The batch sizes the paper cares
+about (N = number of threads/workers, up to a few thousand) fit a single
+VMEM block, so each kernel is a single-grid fused pass:
 
-  * prefix sums over the push/pop lane masks (VPU),
-  * all value routing (push->pop elimination pairing, surplus compaction)
-    expressed as one-hot f32 matmuls so it runs on the MXU — the TPU-native
-    replacement for the paper's pointer-walking sequential combiner,
-  * the stack-top window is read for surplus pops and the new segment is
-    produced for surplus pushes; the caller splices it into the full stack
-    array with a dynamic_update_slice.
+  * prefix sums over the op lane masks (VPU),
+  * all value routing (elimination pairing, surplus compaction) expressed as
+    one-hot f32 matmuls so it runs on the MXU — the TPU-native replacement
+    for the paper's pointer-walking sequential combiner,
+  * end windows are read for surplus removals and new segments are produced
+    for surplus insertions; the caller splices them into the full array
+    (stack: dynamic_update_slice above the committed top; queue/deque:
+    masked ring scatter outside the committed window).
 
-Inputs (all VMEM blocks):
+Three kernels, one per structure:
+
+``dfc_reduce_kernel`` — LIFO stack (one-sided):
   ops_ref      i32[N]    op codes (0 none, 1 push, 2 pop)
   params_ref   f32[N]    push arguments
   window_ref   f32[N]    stack[top-N : top] (zero-padded below), caller-built
   size_ref     i32[1]    current committed size (for EMPTY detection)
-Outputs:
-  resp_ref     f32[N]    response values
-  kind_ref     i32[N]    response kinds (0 none, 1 ack, 2 value, 3 empty)
-  segment_ref  f32[N]    surplus-push values, rank-compacted from index 0
-  counts_ref   i32[4]    (n_push_surplus, n_popped, n_elim, q_total)
+  -> resp f32[N], kind i32[N], segment f32[N],
+     counts i32[4] = (n_push_surplus, n_popped, n_elim, q_total)
+
+``dfc_queue_reduce_kernel`` — FIFO queue (two-sided: consumes at the head,
+appends at the tail, eliminates enq/deq pairs once the window drains):
+  window_ref   f32[N]    queue[head : head+N] front window (zero-padded)
+  -> resp, kind, segment (tail-append values, rank-compacted),
+     counts i32[4] = (n_enq_surplus, n_from_q, n_elim, q_total)
+
+``dfc_deque_reduce_kernel`` — deque (two-sided reduce in one pass: same-side
+pair elimination, then the left surplus, then the right surplus; right pops
+may consume same-phase left pushes via the in-register seg_l):
+  window_l_ref f32[N]    deque[left : left+N] seen from the left
+  window_r_ref f32[N]    deque[right-1 : right-1-N] seen from the right
+  -> resp, kind, seg_l (left-prepend values), seg_r (right-append values),
+     counts i32[8] = (sl, dl, sr, dr, nl_elim, nr_elim, size_after, 0)
 """
 
 from __future__ import annotations
@@ -35,6 +49,12 @@ from jax.experimental import pallas as pl
 
 OP_PUSH = 1
 OP_POP = 2
+OP_ENQ = OP_PUSH
+OP_DEQ = OP_POP
+OP_PUSHL = 1
+OP_POPL = 2
+OP_PUSHR = 3
+OP_POPR = 4
 R_NONE = 0
 R_ACK = 1
 R_VALUE = 2
@@ -46,6 +66,15 @@ def _route(src_idx, vals, n):
     onehot = (src_idx[None, :] == jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)).astype(
         jnp.float32
     )
+    return jnp.dot(onehot, vals.astype(jnp.float32), preferred_element_type=jnp.float32)
+
+
+def _gather(vals, idx, n):
+    """out[i] = vals[clip(idx[i])] — one-hot MXU matmul gather."""
+    onehot = (
+        jnp.clip(idx, 0, n - 1)[:, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    ).astype(jnp.float32)
     return jnp.dot(onehot, vals.astype(jnp.float32), preferred_element_type=jnp.float32)
 
 
@@ -108,6 +137,149 @@ def dfc_reduce_kernel(ops_ref, params_ref, window_ref, size_ref, resp_ref, kind_
     counts_ref[3] = q_total
 
 
+def dfc_queue_reduce_kernel(
+    ops_ref, params_ref, window_ref, size_ref, resp_ref, kind_ref, segment_ref, counts_ref
+):
+    n = ops_ref.shape[0]
+    ops = ops_ref[:]
+    params = params_ref[:].astype(jnp.float32)
+    window = window_ref[:].astype(jnp.float32)  # window[j] = j-th from head
+    size = size_ref[0]
+
+    is_enq = ops == OP_ENQ
+    is_deq = ops == OP_DEQ
+    enq_rank = jnp.where(is_enq, jnp.cumsum(is_enq.astype(jnp.int32)) - 1, -1)
+    deq_rank = jnp.where(is_deq, jnp.cumsum(is_deq.astype(jnp.int32)) - 1, -1)
+    p_total = jnp.sum(is_enq.astype(jnp.int32))
+    q_total = jnp.sum(is_deq.astype(jnp.int32))
+    n_from_q = jnp.minimum(q_total, size)
+    n_elim = jnp.minimum(jnp.maximum(q_total - size, 0), p_total)
+
+    # deqs served FIFO from the front window
+    served = is_deq & (deq_rank < size)
+    ring_val = _gather(window, deq_rank, n)
+
+    # drained: deq rank size+k pairs with enq rank k (two-sided elimination)
+    enq_by_rank = _route(enq_rank, params, n)
+    paired = is_deq & (deq_rank >= size) & (deq_rank - size < n_elim)
+    pair_val = _gather(enq_by_rank, deq_rank - size, n)
+    empty = is_deq & (deq_rank >= size + n_elim)
+
+    # surplus enqs, rank-compacted into the tail-append segment
+    surplus_enq = is_enq & (enq_rank >= n_elim)
+    seg_idx = jnp.where(surplus_enq, enq_rank - n_elim, n)
+    segment = _route(seg_idx, params, n)
+
+    kinds = jnp.full((n,), R_NONE, dtype=jnp.int32)
+    kinds = jnp.where(is_enq, R_ACK, kinds)
+    kinds = jnp.where(served | paired, R_VALUE, kinds)
+    kinds = jnp.where(empty, R_EMPTY, kinds)
+    resp = jnp.zeros((n,), dtype=jnp.float32)
+    resp = jnp.where(served, ring_val, resp)
+    resp = jnp.where(paired, pair_val, resp)
+
+    resp_ref[:] = resp
+    kind_ref[:] = kinds
+    segment_ref[:] = segment
+    counts_ref[0] = jnp.maximum(p_total - n_elim, 0)
+    counts_ref[1] = n_from_q
+    counts_ref[2] = n_elim
+    counts_ref[3] = q_total
+
+
+def dfc_deque_reduce_kernel(
+    ops_ref,
+    params_ref,
+    window_l_ref,
+    window_r_ref,
+    size_ref,
+    resp_ref,
+    kind_ref,
+    seg_l_ref,
+    seg_r_ref,
+    counts_ref,
+):
+    n = ops_ref.shape[0]
+    ops = ops_ref[:]
+    params = params_ref[:].astype(jnp.float32)
+    window_l = window_l_ref[:].astype(jnp.float32)  # j-th from the left end
+    window_r = window_r_ref[:].astype(jnp.float32)  # j-th from the right end
+    size = size_ref[0]
+
+    is_pl = ops == OP_PUSHL
+    is_ql = ops == OP_POPL
+    is_pr = ops == OP_PUSHR
+    is_qr = ops == OP_POPR
+    pl_rank = jnp.where(is_pl, jnp.cumsum(is_pl.astype(jnp.int32)) - 1, -1)
+    ql_rank = jnp.where(is_ql, jnp.cumsum(is_ql.astype(jnp.int32)) - 1, -1)
+    pr_rank = jnp.where(is_pr, jnp.cumsum(is_pr.astype(jnp.int32)) - 1, -1)
+    qr_rank = jnp.where(is_qr, jnp.cumsum(is_qr.astype(jnp.int32)) - 1, -1)
+    npl = jnp.sum(is_pl.astype(jnp.int32))
+    nql = jnp.sum(is_ql.astype(jnp.int32))
+    npr = jnp.sum(is_pr.astype(jnp.int32))
+    nqr = jnp.sum(is_qr.astype(jnp.int32))
+    nl_elim = jnp.minimum(npl, nql)
+    nr_elim = jnp.minimum(npr, nqr)
+
+    # same-side elimination: pop_k gets push_k's param
+    pl_by_rank = _route(pl_rank, params, n)
+    pr_by_rank = _route(pr_rank, params, n)
+    eliml = is_ql & (ql_rank < nl_elim)
+    elimr = is_qr & (qr_rank < nr_elim)
+    eliml_val = _gather(pl_by_rank, ql_rank, n)
+    elimr_val = _gather(pr_by_rank, qr_rank, n)
+
+    # left surplus (pushes XOR pops), applied first
+    sl = jnp.maximum(npl - nl_elim, 0)
+    tl = jnp.maximum(nql - nl_elim, 0)
+    surplus_pl = is_pl & (pl_rank >= nl_elim)
+    seg_l = _route(jnp.where(surplus_pl, pl_rank - nl_elim, n), params, n)
+    dl = jnp.minimum(tl, size)
+    surplus_ql = is_ql & (ql_rank >= nl_elim)
+    kl = ql_rank - nl_elim
+    lpop_ok = surplus_ql & (kl < size)
+    lpop_val = _gather(window_l, kl, n)
+    size_after = size + sl - dl
+
+    # right surplus, applied after the left; right pop k reads the committed
+    # window when k < size, else a value pushed left in this phase
+    sr = jnp.maximum(npr - nr_elim, 0)
+    tr = jnp.maximum(nqr - nr_elim, 0)
+    surplus_pr = is_pr & (pr_rank >= nr_elim)
+    seg_r = _route(jnp.where(surplus_pr, pr_rank - nr_elim, n), params, n)
+    dr = jnp.minimum(tr, size_after)
+    surplus_qr = is_qr & (qr_rank >= nr_elim)
+    kr = qr_rank - nr_elim
+    rpop_ok = surplus_qr & (kr < size_after)
+    rpop_val = jnp.where(
+        kr < size, _gather(window_r, kr, n), _gather(seg_l, kr - size, n)
+    )
+
+    kinds = jnp.full((n,), R_NONE, dtype=jnp.int32)
+    kinds = jnp.where(is_pl | is_pr, R_ACK, kinds)
+    kinds = jnp.where(eliml | elimr | lpop_ok | rpop_ok, R_VALUE, kinds)
+    kinds = jnp.where(surplus_ql & ~lpop_ok, R_EMPTY, kinds)
+    kinds = jnp.where(surplus_qr & ~rpop_ok, R_EMPTY, kinds)
+    resp = jnp.zeros((n,), dtype=jnp.float32)
+    resp = jnp.where(eliml, eliml_val, resp)
+    resp = jnp.where(elimr, elimr_val, resp)
+    resp = jnp.where(lpop_ok, lpop_val, resp)
+    resp = jnp.where(rpop_ok, rpop_val, resp)
+
+    resp_ref[:] = resp
+    kind_ref[:] = kinds
+    seg_l_ref[:] = seg_l
+    seg_r_ref[:] = seg_r
+    counts_ref[0] = sl
+    counts_ref[1] = dl
+    counts_ref[2] = sr
+    counts_ref[3] = dr
+    counts_ref[4] = nl_elim
+    counts_ref[5] = nr_elim
+    counts_ref[6] = size_after
+    counts_ref[7] = 0
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def dfc_reduce_call(ops, params, window, size, *, interpret: bool = True):
     n = ops.shape[0]
@@ -133,3 +305,62 @@ def dfc_reduce_call(ops, params, window, size, *, interpret: bool = True):
         ),
         interpret=interpret,
     )(ops, params, window, jnp.asarray(size, jnp.int32).reshape(1))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dfc_queue_reduce_call(ops, params, window, size, *, interpret: bool = True):
+    n = ops.shape[0]
+    return pl.pallas_call(
+        dfc_queue_reduce_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),  # responses
+            jax.ShapeDtypeStruct((n,), jnp.int32),  # kinds
+            jax.ShapeDtypeStruct((n,), jnp.float32),  # tail-append segment
+            jax.ShapeDtypeStruct((4,), jnp.int32),  # counts
+        ),
+        in_specs=[
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((4,), lambda: (0,)),
+        ),
+        interpret=interpret,
+    )(ops, params, window, jnp.asarray(size, jnp.int32).reshape(1))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dfc_deque_reduce_call(
+    ops, params, window_l, window_r, size, *, interpret: bool = True
+):
+    n = ops.shape[0]
+    return pl.pallas_call(
+        dfc_deque_reduce_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),  # responses
+            jax.ShapeDtypeStruct((n,), jnp.int32),  # kinds
+            jax.ShapeDtypeStruct((n,), jnp.float32),  # seg_l (left prepends)
+            jax.ShapeDtypeStruct((n,), jnp.float32),  # seg_r (right appends)
+            jax.ShapeDtypeStruct((8,), jnp.int32),  # counts
+        ),
+        in_specs=[
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((n,), lambda: (0,)),
+            pl.BlockSpec((8,), lambda: (0,)),
+        ),
+        interpret=interpret,
+    )(ops, params, window_l, window_r, jnp.asarray(size, jnp.int32).reshape(1))

@@ -1,8 +1,9 @@
-"""Jitted public wrapper: full DFC combine step using the Pallas kernel.
+"""Jitted public wrappers: full DFC combine steps using the Pallas kernels.
 
-Splices the kernel outputs (responses / surplus segment / counts) into the
-array-backed double-buffered stack state.  ``backend`` selects the Pallas
-kernel (compiled for TPU, interpret-mode on CPU) or the pure-jnp oracle.
+Splice the kernel outputs (responses / surplus segments / counts) into the
+array-backed double-buffered structure states (stack, queue, deque).
+``backend`` selects the Pallas kernel (compiled for TPU via ``pallas_tpu``,
+interpret-mode via ``pallas``) or the pure-jnp oracle (``ref``).
 """
 
 from __future__ import annotations
@@ -12,9 +13,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.jax_dfc import StackState
-from repro.kernels.dfc_reduce.kernel import dfc_reduce_call
-from repro.kernels.dfc_reduce.ref import dfc_reduce_ref
+from repro.core.jax_dfc import DequeState, QueueState, StackState
+from repro.kernels.dfc_reduce.kernel import (
+    dfc_deque_reduce_call,
+    dfc_queue_reduce_call,
+    dfc_reduce_call,
+)
+from repro.kernels.dfc_reduce.ref import (
+    dfc_deque_reduce_ref,
+    dfc_queue_reduce_ref,
+    dfc_reduce_ref,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
@@ -55,6 +64,94 @@ def dfc_combine_step(state: StackState, ops, params, *, backend: str = "ref"):
     new_state = StackState(
         values=new_values,
         size=state.size.at[inactive].set(new_size_val),
+        epoch=state.epoch + 2,
+    )
+    return new_state, resp, kinds
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def dfc_queue_combine_step(state: QueueState, ops, params, *, backend: str = "ref"):
+    """Queue combine phase: front window -> kernel -> masked ring splice."""
+    n = ops.shape[0]
+    cap = state.values.shape[0]
+    ends = state.active_ends()
+    head, tail = ends[0], ends[1]
+    size = tail - head
+
+    lanes = jnp.arange(n)
+    window = jnp.where(lanes < size, state.values[(head + lanes) % cap], 0.0)
+    window = window.astype(jnp.float32)
+
+    if backend == "pallas":
+        resp, kinds, segment, counts = dfc_queue_reduce_call(
+            ops, params, window, size, interpret=True
+        )
+    elif backend == "pallas_tpu":
+        resp, kinds, segment, counts = dfc_queue_reduce_call(
+            ops, params, window, size, interpret=False
+        )
+    else:
+        resp, kinds, segment, counts = dfc_queue_reduce_ref(ops, params, window, size)
+
+    n_enq_surplus, n_from_q = counts[0], counts[1]
+    pos = (tail + lanes) % cap
+    new_values = state.values.at[
+        jnp.where(lanes < n_enq_surplus, pos, cap)
+    ].set(segment.astype(state.values.dtype), mode="drop")
+
+    inactive = (state.epoch // 2 + 1) % 2
+    new_ends = jnp.stack([head + n_from_q, tail + n_enq_surplus])
+    new_state = QueueState(
+        values=new_values,
+        ends=state.ends.at[inactive].set(new_ends),
+        epoch=state.epoch + 2,
+    )
+    return new_state, resp, kinds
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def dfc_deque_combine_step(state: DequeState, ops, params, *, backend: str = "ref"):
+    """Deque combine phase: end windows -> two-sided kernel -> ring splices."""
+    n = ops.shape[0]
+    cap = state.values.shape[0]
+    ends = state.active_ends()
+    left, right = ends[0], ends[1]
+    size = right - left
+
+    lanes = jnp.arange(n)
+    window_l = jnp.where(lanes < size, state.values[(left + lanes) % cap], 0.0)
+    window_r = jnp.where(lanes < size, state.values[(right - 1 - lanes) % cap], 0.0)
+    window_l = window_l.astype(jnp.float32)
+    window_r = window_r.astype(jnp.float32)
+
+    if backend == "pallas":
+        resp, kinds, seg_l, seg_r, counts = dfc_deque_reduce_call(
+            ops, params, window_l, window_r, size, interpret=True
+        )
+    elif backend == "pallas_tpu":
+        resp, kinds, seg_l, seg_r, counts = dfc_deque_reduce_call(
+            ops, params, window_l, window_r, size, interpret=False
+        )
+    else:
+        resp, kinds, seg_l, seg_r, counts = dfc_deque_reduce_ref(
+            ops, params, window_l, window_r, size
+        )
+
+    sl, dl, sr, dr = counts[0], counts[1], counts[2], counts[3]
+    posl = (left - 1 - lanes) % cap
+    new_values = state.values.at[jnp.where(lanes < sl, posl, cap)].set(
+        seg_l.astype(state.values.dtype), mode="drop"
+    )
+    posr = (right + lanes) % cap
+    new_values = new_values.at[jnp.where(lanes < sr, posr, cap)].set(
+        seg_r.astype(state.values.dtype), mode="drop"
+    )
+
+    inactive = (state.epoch // 2 + 1) % 2
+    new_ends = jnp.stack([left - sl + dl, right + sr - dr])
+    new_state = DequeState(
+        values=new_values,
+        ends=state.ends.at[inactive].set(new_ends),
         epoch=state.epoch + 2,
     )
     return new_state, resp, kinds

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the dfc_reduce kernel (same signature/outputs)."""
+"""Pure-jnp oracles for the dfc_reduce kernels (same signatures/outputs)."""
 
 from __future__ import annotations
 
@@ -6,8 +6,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dfc_reduce.kernel import (
+    OP_DEQ,
+    OP_ENQ,
     OP_POP,
+    OP_POPL,
+    OP_POPR,
     OP_PUSH,
+    OP_PUSHL,
+    OP_PUSHR,
     R_ACK,
     R_EMPTY,
     R_NONE,
@@ -63,3 +69,124 @@ def dfc_reduce_ref(ops, params, window, size):
         ]
     ).astype(jnp.int32)
     return resp, kinds, segment, counts
+
+
+def dfc_queue_reduce_ref(ops, params, window, size):
+    n = ops.shape[0]
+    params = params.astype(jnp.float32)
+    window = window.astype(jnp.float32)
+    size = jnp.asarray(size, jnp.int32).reshape(())
+
+    is_enq = ops == OP_ENQ
+    is_deq = ops == OP_DEQ
+    enq_rank = jnp.where(is_enq, jnp.cumsum(is_enq) - 1, -1)
+    deq_rank = jnp.where(is_deq, jnp.cumsum(is_deq) - 1, -1)
+    p_total = jnp.sum(is_enq)
+    q_total = jnp.sum(is_deq)
+    n_from_q = jnp.minimum(q_total, size)
+    n_elim = jnp.minimum(jnp.maximum(q_total - size, 0), p_total)
+
+    served = is_deq & (deq_rank < size)
+    ring_val = window[jnp.clip(deq_rank, 0, n - 1)]
+
+    enq_by_rank = jnp.zeros((n,), jnp.float32).at[
+        jnp.where(is_enq, enq_rank, n)
+    ].add(params, mode="drop")
+    paired = is_deq & (deq_rank >= size) & (deq_rank - size < n_elim)
+    pair_val = enq_by_rank[jnp.clip(deq_rank - size, 0, n - 1)]
+    empty = is_deq & (deq_rank >= size + n_elim)
+
+    surplus_enq = is_enq & (enq_rank >= n_elim)
+    segment = jnp.zeros((n,), jnp.float32).at[
+        jnp.where(surplus_enq, enq_rank - n_elim, n)
+    ].add(params, mode="drop")
+
+    kinds = jnp.full((n,), R_NONE, dtype=jnp.int32)
+    kinds = jnp.where(is_enq, R_ACK, kinds)
+    kinds = jnp.where(served | paired, R_VALUE, kinds)
+    kinds = jnp.where(empty, R_EMPTY, kinds)
+    resp = jnp.zeros((n,), jnp.float32)
+    resp = jnp.where(served, ring_val, resp)
+    resp = jnp.where(paired, pair_val, resp)
+
+    counts = jnp.stack(
+        [jnp.maximum(p_total - n_elim, 0), n_from_q, n_elim, q_total]
+    ).astype(jnp.int32)
+    return resp, kinds, segment, counts
+
+
+def dfc_deque_reduce_ref(ops, params, window_l, window_r, size):
+    n = ops.shape[0]
+    params = params.astype(jnp.float32)
+    window_l = window_l.astype(jnp.float32)
+    window_r = window_r.astype(jnp.float32)
+    size = jnp.asarray(size, jnp.int32).reshape(())
+
+    is_pl = ops == OP_PUSHL
+    is_ql = ops == OP_POPL
+    is_pr = ops == OP_PUSHR
+    is_qr = ops == OP_POPR
+    pl_rank = jnp.where(is_pl, jnp.cumsum(is_pl) - 1, -1)
+    ql_rank = jnp.where(is_ql, jnp.cumsum(is_ql) - 1, -1)
+    pr_rank = jnp.where(is_pr, jnp.cumsum(is_pr) - 1, -1)
+    qr_rank = jnp.where(is_qr, jnp.cumsum(is_qr) - 1, -1)
+    npl, nql = jnp.sum(is_pl), jnp.sum(is_ql)
+    npr, nqr = jnp.sum(is_pr), jnp.sum(is_qr)
+    nl_elim = jnp.minimum(npl, nql)
+    nr_elim = jnp.minimum(npr, nqr)
+
+    pl_by_rank = jnp.zeros((n,), jnp.float32).at[
+        jnp.where(is_pl, pl_rank, n)
+    ].add(params, mode="drop")
+    pr_by_rank = jnp.zeros((n,), jnp.float32).at[
+        jnp.where(is_pr, pr_rank, n)
+    ].add(params, mode="drop")
+    eliml = is_ql & (ql_rank < nl_elim)
+    elimr = is_qr & (qr_rank < nr_elim)
+    eliml_val = pl_by_rank[jnp.clip(ql_rank, 0, n - 1)]
+    elimr_val = pr_by_rank[jnp.clip(qr_rank, 0, n - 1)]
+
+    sl = jnp.maximum(npl - nl_elim, 0)
+    tl = jnp.maximum(nql - nl_elim, 0)
+    surplus_pl = is_pl & (pl_rank >= nl_elim)
+    seg_l = jnp.zeros((n,), jnp.float32).at[
+        jnp.where(surplus_pl, pl_rank - nl_elim, n)
+    ].add(params, mode="drop")
+    dl = jnp.minimum(tl, size)
+    surplus_ql = is_ql & (ql_rank >= nl_elim)
+    kl = ql_rank - nl_elim
+    lpop_ok = surplus_ql & (kl < size)
+    lpop_val = window_l[jnp.clip(kl, 0, n - 1)]
+    size_after = size + sl - dl
+
+    sr = jnp.maximum(npr - nr_elim, 0)
+    tr = jnp.maximum(nqr - nr_elim, 0)
+    surplus_pr = is_pr & (pr_rank >= nr_elim)
+    seg_r = jnp.zeros((n,), jnp.float32).at[
+        jnp.where(surplus_pr, pr_rank - nr_elim, n)
+    ].add(params, mode="drop")
+    dr = jnp.minimum(tr, size_after)
+    surplus_qr = is_qr & (qr_rank >= nr_elim)
+    kr = qr_rank - nr_elim
+    rpop_ok = surplus_qr & (kr < size_after)
+    rpop_val = jnp.where(
+        kr < size,
+        window_r[jnp.clip(kr, 0, n - 1)],
+        seg_l[jnp.clip(kr - size, 0, n - 1)],
+    )
+
+    kinds = jnp.full((n,), R_NONE, dtype=jnp.int32)
+    kinds = jnp.where(is_pl | is_pr, R_ACK, kinds)
+    kinds = jnp.where(eliml | elimr | lpop_ok | rpop_ok, R_VALUE, kinds)
+    kinds = jnp.where(surplus_ql & ~lpop_ok, R_EMPTY, kinds)
+    kinds = jnp.where(surplus_qr & ~rpop_ok, R_EMPTY, kinds)
+    resp = jnp.zeros((n,), jnp.float32)
+    resp = jnp.where(eliml, eliml_val, resp)
+    resp = jnp.where(elimr, elimr_val, resp)
+    resp = jnp.where(lpop_ok, lpop_val, resp)
+    resp = jnp.where(rpop_ok, rpop_val, resp)
+
+    counts = jnp.stack(
+        [sl, dl, sr, dr, nl_elim, nr_elim, size_after, jnp.zeros((), jnp.int32)]
+    ).astype(jnp.int32)
+    return resp, kinds, seg_l, seg_r, counts

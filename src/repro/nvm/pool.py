@@ -69,21 +69,34 @@ class BitmapTree:
 
 
 class NodePool:
-    """NVM-resident node pool managed by a volatile :class:`BitmapTree`."""
+    """NVM-resident node pool managed by a volatile :class:`BitmapTree`.
 
-    def __init__(self, mem: NVMemory, capacity: int = 4096, name: str = "pool"):
+    ``extra_fields`` adds named pointer fields beyond ``next`` to every node
+    line (the deque's doubly-linked nodes carry a ``prev``); a node still
+    occupies a single cache line, so one pwb persists all of its fields.
+    """
+
+    def __init__(
+        self,
+        mem: NVMemory,
+        capacity: int = 4096,
+        name: str = "pool",
+        extra_fields: tuple = (),
+    ):
         self.mem = mem
         self.capacity = capacity
         self.name = name
+        self.extra_fields = tuple(extra_fields)
         self.bitmap = BitmapTree(capacity)
+        extras = {f: NIL for f in self.extra_fields}
         for i in range(capacity):
-            mem.alloc_line(self._line(i), param=BOT, next=NIL)
+            mem.alloc_line(self._line(i), param=BOT, next=NIL, **extras)
 
     def _line(self, idx: int) -> Hashable:
         return (self.name, idx)
 
     # ------------------------------------------------------------ allocation
-    def allocate(self, param, nxt: int) -> int:
+    def allocate(self, param, nxt: int, **extras) -> int:
         """AllocateNode(param, head): volatile bitmap claim + node field writes.
 
         The *caller* is responsible for pwb'ing the node line (paper line 62).
@@ -91,6 +104,8 @@ class NodePool:
         idx = self.bitmap.alloc()
         self.mem.write(self._line(idx), "param", param)
         self.mem.write(self._line(idx), "next", nxt)
+        for f, v in extras.items():
+            self.mem.write(self._line(idx), f, v)
         return idx
 
     def deallocate(self, idx: int) -> None:
@@ -104,36 +119,56 @@ class NodePool:
     def next(self, idx: int) -> int:
         return self.mem.read(self._line(idx), "next")
 
+    def get(self, idx: int, field: str):
+        return self.mem.read(self._line(idx), field)
+
+    def set(self, idx: int, field: str, value) -> None:
+        self.mem.write(self._line(idx), field, value)
+
     def line_of(self, idx: int) -> Hashable:
         return self._line(idx)
 
     # ------------------------------------------------------------------- GC
-    def garbage_collect(self, roots: Iterable[int]) -> int:
+    def garbage_collect(self, roots: Iterable[int], stops: Iterable[int] = ()) -> int:
         """Recovery GC cycle (paper §4): rebuild the volatile bitmap by
         marking the nodes reachable from ``roots`` (the active top) used and
         everything else free.  Runs single-threaded under the recovery lock.
+
+        ``stops`` bounds each walk: a node in ``stops`` is marked live but its
+        ``next`` is not followed.  The queue/deque need this — the committed
+        tail's ``next`` may hold a dangling link written by a combine phase
+        that never published.
+
         Returns the number of live nodes."""
         self.bitmap.clear()
+        stop_set = set(stops)
         live = 0
         for root in roots:
             idx = root
             while idx != NIL and idx is not BOT:
                 if self.bitmap.is_used(idx):  # shared tail already marked
                     break
-                self.bitmap.free  # no-op ref for readability
                 w, b = divmod(idx, WORD_BITS)
                 self.bitmap.leaves[w] |= 1 << b
                 if self.bitmap.leaves[w] == (1 << WORD_BITS) - 1:
                     self.bitmap.root |= 1 << w
                 live += 1
+                if idx in stop_set:
+                    break
                 idx = self.next(idx)
         return live
 
-    def walk(self, head: int) -> List:
-        """Return [param, ...] from head to bottom (test helper)."""
+    def walk(self, head: int, stop: Optional[int] = None) -> List:
+        """Return [param, ...] from head following ``next`` (test helper).
+
+        ``stop`` (inclusive) bounds the walk the same way GC ``stops`` do —
+        required when walking a queue/deque whose committed tail may carry a
+        stale ``next``."""
         out = []
         idx = head
         while idx != NIL and idx is not BOT:
             out.append(self.param(idx))
+            if stop is not None and idx == stop:
+                break
             idx = self.next(idx)
         return out

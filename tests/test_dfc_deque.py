@@ -1,0 +1,168 @@
+"""DFC double-ended queue: crash-free behaviour + crash-sweeping durable
+linearizability and detectability (paper's deque, sequential layer)."""
+
+import numpy as np
+import pytest
+
+from repro.core.dfc import ACK, BOT, EMPTY, INIT, POPL, POPR, PUSHL, PUSHR
+from repro.core.dfc_deque import DFCDeque
+from repro.core.harness import (
+    check_durable_linearizability,
+    run_with_crash,
+    total_steps,
+)
+from repro.core.linearize import is_linearizable
+from repro.core.sim import History, Scheduler, workload_gen
+from repro.nvm.memory import CrashMode, NVMemory
+
+# one push (pushL) and one pop (popR) in flight on thread 0, with both-end
+# concurrency from threads 1-2 — the sweep below crashes at EVERY scheduler
+# step, so every yield point of both ops is hit.
+SMALL = [
+    [(PUSHL, 11), (POPR, None)],
+    [(PUSHR, 22), (PUSHL, 23)],
+    [(POPL, None), (PUSHR, 33)],
+]
+
+
+def run_workload(n_threads, per_thread_ops, seed=0):
+    mem = NVMemory()
+    d = DFCDeque(mem, n_threads)
+    sched = Scheduler(seed=seed)
+    hist = History()
+    gens = {
+        t: workload_gen(d, sched, hist, t, per_thread_ops[t])
+        for t in range(n_threads)
+    }
+    sched.run(gens)
+    return d, hist, mem
+
+
+# ------------------------------------------------------------- crash-free
+def test_single_thread_both_ends():
+    ops = [[
+        (PUSHL, 1), (PUSHR, 2), (PUSHL, 3),  # deque: 3 1 2
+        (POPR, None), (POPL, None), (POPL, None), (POPL, None),
+    ]]
+    d, hist, _ = run_workload(1, ops)
+    values = [o["value"] for o in hist.ops]
+    assert values == [ACK, ACK, ACK, 2, 3, 1, EMPTY]
+    assert d.peek_deque() == []
+
+
+def test_pop_empty_both_ends():
+    d, hist, _ = run_workload(2, [[(POPL, None)], [(POPR, None)]])
+    assert all(o["value"] == EMPTY for o in hist.ops)
+
+
+def test_stack_mode_lifo():
+    """pushL/popL only == the stack; pushR/popR only == a right stack."""
+    ops = [[(PUSHL, 1), (PUSHL, 2), (POPL, None), (POPL, None)]]
+    _, hist, _ = run_workload(1, ops)
+    assert [o["value"] for o in hist.ops] == [ACK, ACK, 2, 1]
+    ops = [[(PUSHR, 1), (PUSHR, 2), (POPR, None), (POPR, None)]]
+    _, hist, _ = run_workload(1, ops)
+    assert [o["value"] for o in hist.ops] == [ACK, ACK, 2, 1]
+
+
+def test_queue_mode_fifo():
+    """pushR + popL == FIFO queue (and the mirror image)."""
+    ops = [[(PUSHR, 1), (PUSHR, 2), (POPL, None), (POPL, None)]]
+    _, hist, _ = run_workload(1, ops)
+    assert [o["value"] for o in hist.ops] == [ACK, ACK, 1, 2]
+    ops = [[(PUSHL, 1), (PUSHL, 2), (POPR, None), (POPR, None)]]
+    _, hist, _ = run_workload(1, ops)
+    assert [o["value"] for o in hist.ops] == [ACK, ACK, 1, 2]
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_concurrent_mixed_ends_linearizable(seed):
+    workloads = [
+        [(PUSHL, 100 + seed), (POPR, None)],
+        [(PUSHR, 200 + seed), (POPL, None)],
+        [(PUSHL, 300 + seed), (PUSHR, 400 + seed)],
+        [(POPR, None)],
+    ]
+    d, hist, _ = run_workload(4, workloads, seed=seed)
+    assert is_linearizable(hist.ops, semantics="deque")
+    pushed = {o["param"] for o in hist.ops if o["name"] in (PUSHL, PUSHR)}
+    popped = {
+        o["value"]
+        for o in hist.ops
+        if o["name"] in (POPL, POPR) and o["value"] != EMPTY
+    }
+    remaining = set(d.peek_deque())
+    assert popped | remaining == pushed
+    assert popped & remaining == set()
+
+
+def test_same_side_elimination_fires():
+    n = 8
+    ops = [[(PUSHL, t)] if t % 2 == 0 else [(POPL, None)] for t in range(n)]
+    d, hist, mem = run_workload(n, ops, seed=3)
+    pushed = {o["param"] for o in hist.ops if o["name"] == PUSHL}
+    popped = {o["value"] for o in hist.ops if o["name"] == POPL and o["value"] != EMPTY}
+    assert set(d.peek_deque()) == pushed - popped
+    assert mem.stats.pwb.get("combine", 0) < 2 * n
+
+
+# ----------------------------------------------------------------- crash sweep
+def _sweep(workloads, seed, mode, stride=1):
+    steps = total_steps(workloads, seed=seed, structure=DFCDeque)
+    failures = []
+    outcomes = set()
+    for k in range(1, steps, stride):
+        res = run_with_crash(
+            workloads, crash_at=k, seed=seed, mode=mode, structure=DFCDeque
+        )
+        assert res.crashed
+        for tid, effect in res.took_effect.items():
+            outcomes.add(effect)
+            if effect:
+                assert res.recovered[tid] is not BOT
+                assert res.recovered[tid] != INIT
+        if not check_durable_linearizability(res):
+            failures.append(k)
+    assert not failures, f"non-linearizable effective history at crash points {failures}"
+    return outcomes
+
+
+@pytest.mark.parametrize("mode", [CrashMode.MIN, CrashMode.MAX])
+def test_exhaustive_crash_sweep_every_step(mode):
+    """Every yield step of an in-flight pushL and popR (thread 0's ops)."""
+    outcomes = _sweep(SMALL, seed=0, mode=mode, stride=1)
+    assert outcomes == {True, False}  # detectability fires both ways
+
+
+def test_random_eviction_crash_sweep():
+    _sweep(SMALL, seed=1, mode=CrashMode.RANDOM, stride=2)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_crash_sweep_larger(seed):
+    workloads = [
+        [(PUSHL if (t + i) % 2 else PUSHR, 100 * t + i) for i in range(2)]
+        + [(POPL if t % 2 else POPR, None)]
+        for t in range(4)
+    ]
+    _sweep(workloads, seed=seed, mode=CrashMode.RANDOM, stride=7)
+
+
+def test_double_crash_during_recovery():
+    steps = total_steps(SMALL, seed=2, structure=DFCDeque)
+    for k in range(5, steps, 11):
+        for rk in (3, 29):
+            res = run_with_crash(
+                SMALL,
+                crash_at=k,
+                seed=2,
+                mode=CrashMode.RANDOM,
+                recovery_crash_at=rk,
+                structure=DFCDeque,
+            )
+            assert check_durable_linearizability(res)
+
+
+def test_epoch_fixed_to_even_after_recovery():
+    res = run_with_crash(SMALL, crash_at=40, seed=0, mode=CrashMode.MIN, structure=DFCDeque)
+    assert res.mem.read("cEpoch", "v") % 2 == 0

@@ -1,7 +1,6 @@
 """Hypothesis property tests on the paper-faithful DFC stack's invariants."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _compat import hypothesis, st
 
 from repro.core.baselines import run_dfc_counts
 from repro.core.dfc import ACK, EMPTY, POP, PUSH, DFCStack

@@ -1,0 +1,160 @@
+"""DFC FIFO queue: crash-free behaviour + crash-sweeping durable
+linearizability and detectability (paper's queue, sequential layer)."""
+
+import numpy as np
+import pytest
+
+from repro.core.dfc import ACK, BOT, DEQ, EMPTY, ENQ, INIT
+from repro.core.dfc_queue import DFCQueue
+from repro.core.harness import (
+    check_durable_linearizability,
+    run_with_crash,
+    total_steps,
+)
+from repro.core.linearize import is_linearizable
+from repro.core.sim import History, Scheduler, workload_gen
+from repro.nvm.memory import CrashMode, NVMemory
+
+# one enq and one deq in flight on thread 0, concurrency from threads 1-2 —
+# the sweep below crashes at EVERY scheduler step, so every yield point of
+# both ops (announce writes, fences, valid-bit flips, combiner steps) is hit.
+SMALL = [
+    [(ENQ, 11), (DEQ, None)],
+    [(ENQ, 22), (ENQ, 23)],
+    [(DEQ, None), (ENQ, 33)],
+]
+
+
+def run_workload(n_threads, per_thread_ops, seed=0):
+    mem = NVMemory()
+    q = DFCQueue(mem, n_threads)
+    sched = Scheduler(seed=seed)
+    hist = History()
+    gens = {
+        t: workload_gen(q, sched, hist, t, per_thread_ops[t])
+        for t in range(n_threads)
+    }
+    sched.run(gens)
+    return q, hist, mem
+
+
+# ------------------------------------------------------------ crash-free FIFO
+def test_single_thread_fifo_order():
+    ops = [[(ENQ, 10), (ENQ, 20), (ENQ, 30), (DEQ, None), (DEQ, None), (ENQ, 40), (DEQ, None), (DEQ, None), (DEQ, None)]]
+    q, hist, _ = run_workload(1, ops)
+    values = [o["value"] for o in hist.ops]
+    assert values == [ACK, ACK, ACK, 10, 20, ACK, 30, 40, EMPTY]
+    assert q.peek_queue() == []
+
+
+def test_deq_empty_returns_empty():
+    q, hist, _ = run_workload(2, [[(DEQ, None)], [(DEQ, None)]])
+    assert all(o["value"] == EMPTY for o in hist.ops)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_concurrent_enq_deq_linearizable(seed):
+    n = 4
+    ops = [[(ENQ, 100 * t + i) for i in range(2)] + [(DEQ, None)] for t in range(n)]
+    q, hist, _ = run_workload(n, ops, seed=seed)
+    assert is_linearizable(hist.ops, semantics="queue")
+    enqueued = {o["param"] for o in hist.ops if o["name"] == ENQ}
+    dequeued = {o["value"] for o in hist.ops if o["name"] == DEQ and o["value"] != EMPTY}
+    remaining = set(q.peek_queue())
+    assert dequeued | remaining == enqueued
+    assert dequeued & remaining == set()
+
+
+def test_two_sided_elimination_fires():
+    """Once the queue drains, enq/deq pairs must resolve announcement-to-
+    announcement without touching the structure."""
+    n = 8
+    ops = [[(ENQ, t)] if t % 2 == 0 else [(DEQ, None)] for t in range(n)]
+    q, hist, mem = run_workload(n, ops, seed=3)
+    enqueued = {o["param"] for o in hist.ops if o["name"] == ENQ}
+    dequeued = {o["value"] for o in hist.ops if o["name"] == DEQ and o["value"] != EMPTY}
+    assert set(q.peek_queue()) == enqueued - dequeued
+    combine_pwbs = mem.stats.pwb.get("combine", 0)
+    assert combine_pwbs < 2 * sum(len(o) for o in ops)
+
+
+def test_announce_path_cost_matches_stack():
+    _, _, mem = run_workload(2, [[(ENQ, 1)], [(DEQ, None)]])
+    assert mem.stats.pwb["announce"] == 2 * 2
+    assert mem.stats.pfence["announce"] == 2 * 2
+
+
+# ----------------------------------------------------------------- crash sweep
+def _sweep(workloads, seed, mode, stride=1):
+    steps = total_steps(workloads, seed=seed, structure=DFCQueue)
+    failures = []
+    outcomes = set()
+    for k in range(1, steps, stride):
+        res = run_with_crash(
+            workloads, crash_at=k, seed=seed, mode=mode, structure=DFCQueue
+        )
+        assert res.crashed
+        # detectability: a taken-effect op's response was computed by (or
+        # before) Recover; a not-taken-effect op left no visible trace that
+        # matches its announcement.  The linearizability check validates the
+        # reported responses against FIFO semantics.
+        for tid, effect in res.took_effect.items():
+            outcomes.add(effect)
+            if effect:
+                assert res.recovered[tid] is not BOT
+                assert res.recovered[tid] != INIT
+        if not check_durable_linearizability(res):
+            failures.append(k)
+    assert not failures, f"non-linearizable effective history at crash points {failures}"
+    return outcomes
+
+
+@pytest.mark.parametrize("mode", [CrashMode.MIN, CrashMode.MAX])
+def test_exhaustive_crash_sweep_every_step(mode):
+    """Every yield step of an in-flight enq and deq (thread 0's ops)."""
+    outcomes = _sweep(SMALL, seed=0, mode=mode, stride=1)
+    assert outcomes == {True, False}  # detectability fires both ways
+
+
+def test_random_eviction_crash_sweep():
+    _sweep(SMALL, seed=1, mode=CrashMode.RANDOM, stride=2)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_crash_sweep_larger(seed):
+    workloads = [
+        [(ENQ, 100 * t + i) for i in range(2)] + [(DEQ, None)] for t in range(4)
+    ]
+    _sweep(workloads, seed=seed, mode=CrashMode.RANDOM, stride=7)
+
+
+def test_double_crash_during_recovery():
+    steps = total_steps(SMALL, seed=2, structure=DFCQueue)
+    for k in range(5, steps, 11):
+        for rk in (3, 29):
+            res = run_with_crash(
+                SMALL,
+                crash_at=k,
+                seed=2,
+                mode=CrashMode.RANDOM,
+                recovery_crash_at=rk,
+                structure=DFCQueue,
+            )
+            assert check_durable_linearizability(res)
+
+
+def test_epoch_fixed_to_even_after_recovery():
+    res = run_with_crash(SMALL, crash_at=40, seed=0, mode=CrashMode.MIN, structure=DFCQueue)
+    assert res.mem.read("cEpoch", "v") % 2 == 0
+
+
+def test_recovered_queue_is_fifo_consistent():
+    """After recovery the queue contents drain in FIFO order consistent with
+    some linearization of the effective history (checked via the drain)."""
+    workloads = [[(ENQ, 7 * t + i) for i in range(3)] for t in range(3)]
+    steps = total_steps(workloads, seed=4, structure=DFCQueue)
+    for k in range(10, steps, 13):
+        res = run_with_crash(
+            workloads, crash_at=k, seed=4, mode=CrashMode.RANDOM, structure=DFCQueue
+        )
+        assert check_durable_linearizability(res)

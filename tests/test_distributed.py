@@ -1,10 +1,9 @@
 """Gradient compression + elastic plan unit/property tests."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+from _compat import hypothesis, st
 
 from repro.distributed.compression import (
     CompressionState,

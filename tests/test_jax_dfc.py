@@ -1,12 +1,11 @@
 """Vectorized JAX DFC combine: semantics vs the sequential oracle, Pallas
 kernel vs pure-jnp ref (interpret mode), and hypothesis property tests."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _compat import hypothesis, st
 
 from repro.core.jax_dfc import (
     OP_NONE,

@@ -1,0 +1,336 @@
+"""Vectorized JAX DFC queue/deque combine: semantics vs the sequential
+oracles, Pallas kernels vs pure-jnp refs (interpret mode), property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _compat import hypothesis, st
+
+from repro.core.jax_dfc import (
+    OP_DEQ,
+    OP_ENQ,
+    OP_NONE,
+    OP_POPL,
+    OP_POPR,
+    OP_PUSHL,
+    OP_PUSHR,
+    R_ACK,
+    R_EMPTY,
+    R_NONE,
+    R_VALUE,
+    combine_deque,
+    combine_queue,
+    init_deque,
+    init_queue,
+    sequential_reference_deque,
+    sequential_reference_queue,
+)
+from repro.kernels.dfc_reduce.ops import dfc_deque_combine_step, dfc_queue_combine_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+LANE_COUNTS = (1, 7, 64, 256)
+
+
+def _ring_contents(state):
+    cap = state.values.shape[0]
+    e = state.active_ends()
+    lo, hi = int(e[0]), int(e[1])
+    return [float(state.values[i % cap]) for i in range(lo, hi)]
+
+
+def apply_queue_batches(batches, capacity, via="jnp"):
+    state = init_queue(capacity)
+    ref = []
+    for ops, params in batches:
+        ops_a = jnp.asarray(ops, jnp.int32)
+        par_a = jnp.asarray(params, jnp.float32)
+        if via == "jnp":
+            state, resp, kinds = combine_queue(state, ops_a, par_a)
+        else:
+            state, resp, kinds = dfc_queue_combine_step(state, ops_a, par_a, backend=via)
+        ref, ref_resp, ref_kinds = sequential_reference_queue(ref, ops, params)
+        np.testing.assert_array_equal(np.asarray(kinds), ref_kinds)
+        np.testing.assert_allclose(
+            np.asarray(resp), np.asarray(ref_resp, np.float32), rtol=1e-6
+        )
+    np.testing.assert_allclose(_ring_contents(state), ref)
+    assert int(state.epoch) == 2 * len(batches)
+    return state
+
+
+def apply_deque_batches(batches, capacity, via="jnp"):
+    state = init_deque(capacity)
+    ref = []
+    for ops, params in batches:
+        ops_a = jnp.asarray(ops, jnp.int32)
+        par_a = jnp.asarray(params, jnp.float32)
+        if via == "jnp":
+            state, resp, kinds = combine_deque(state, ops_a, par_a)
+        else:
+            state, resp, kinds = dfc_deque_combine_step(state, ops_a, par_a, backend=via)
+        ref, ref_resp, ref_kinds = sequential_reference_deque(ref, ops, params)
+        np.testing.assert_array_equal(np.asarray(kinds), ref_kinds)
+        np.testing.assert_allclose(
+            np.asarray(resp), np.asarray(ref_resp, np.float32), rtol=1e-6
+        )
+    np.testing.assert_allclose(_ring_contents(state), ref)
+    assert int(state.epoch) == 2 * len(batches)
+    return state
+
+
+# ------------------------------------------------------------------ queue
+@pytest.mark.parametrize("n", LANE_COUNTS)
+def test_queue_all_enq(n):
+    apply_queue_batches([([OP_ENQ] * n, list(range(1, n + 1)))], capacity=2 * n + 8)
+
+
+@pytest.mark.parametrize("n", LANE_COUNTS)
+def test_queue_all_deq_empty(n):
+    state = init_queue(2 * n)
+    _, resp, kinds = combine_queue(
+        state, jnp.full((n,), OP_DEQ, jnp.int32), jnp.zeros(n)
+    )
+    assert all(k == R_EMPTY for k in np.asarray(kinds))
+
+
+def test_queue_fifo_across_batches():
+    apply_queue_batches(
+        [
+            ([OP_ENQ] * 4, [1, 2, 3, 4]),
+            ([OP_DEQ] * 2 + [OP_NONE] * 2, [0] * 4),
+            ([OP_ENQ, OP_DEQ, OP_DEQ, OP_DEQ], [9, 0, 0, 0]),
+        ],
+        capacity=64,
+    )
+
+
+def test_queue_two_sided_elimination():
+    """Deqs beyond the committed size are served directly from same-batch
+    enqs (announcement-to-announcement), FIFO by rank."""
+    ops = [OP_DEQ, OP_ENQ, OP_DEQ, OP_ENQ]
+    state = init_queue(32)
+    new_state, resp, kinds = combine_queue(
+        state, jnp.asarray(ops, jnp.int32), jnp.asarray([0, 5.0, 0, 7.0], jnp.float32)
+    )
+    assert list(np.asarray(kinds)) == [R_VALUE, R_ACK, R_VALUE, R_ACK]
+    assert list(np.asarray(resp)[[0, 2]]) == [5.0, 7.0]
+    # fully eliminated: the ring was never touched
+    assert int(new_state.active_size()) == 0
+    np.testing.assert_array_equal(np.asarray(new_state.values), 0.0)
+
+
+def test_queue_ring_wraps():
+    """head/tail counters advance monotonically; slots wrap mod capacity."""
+    n, cap = 8, 16  # contract: capacity >= committed size + lanes
+    batches = []
+    for r in range(6):  # 6 rounds of enq-then-deq churns the window around
+        batches.append(([OP_ENQ] * n, [float(10 * r + i) for i in range(n)]))
+        batches.append(([OP_DEQ] * n, [0.0] * n))
+    state = apply_queue_batches(batches, capacity=cap)
+    assert int(state.active_ends()[0]) == 6 * n  # counters, not slots
+
+
+def test_queue_full_capacity():
+    """Fill the ring to capacity (size + lanes == capacity edge)."""
+    n = 8
+    cap = 3 * n
+    state = apply_queue_batches(
+        [
+            ([OP_ENQ] * n, [float(i) for i in range(n)]),
+            ([OP_ENQ] * n, [float(100 + i) for i in range(n)]),
+            ([OP_DEQ] * n, [0.0] * n),
+            ([OP_ENQ] * n, [float(200 + i) for i in range(n)]),
+        ],
+        capacity=cap,
+    )
+    assert int(state.active_size()) == 2 * n
+
+
+def test_queue_committed_window_never_overwritten():
+    """Crash-consistency invariant of the double-buffered (head, tail): a
+    combine only writes ring slots outside the committed window."""
+    cap = 32
+    state = init_queue(cap)
+    state, _, _ = combine_queue(
+        state, jnp.full((4,), OP_ENQ, jnp.int32), jnp.arange(1.0, 5.0)
+    )
+    committed = np.asarray(state.values).copy()
+    e = state.active_ends()
+    lo, hi = int(e[0]), int(e[1])
+    window_slots = [i % cap for i in range(lo, hi)]
+    # a mixed batch (deqs + enqs) must leave the committed slots bit-identical
+    state2, _, _ = combine_queue(
+        state,
+        jnp.asarray([OP_DEQ, OP_ENQ, OP_ENQ, OP_DEQ], jnp.int32),
+        jnp.asarray([0.0, 9.0, 8.0, 0.0], jnp.float32),
+    )
+    after = np.asarray(state2.values)
+    np.testing.assert_array_equal(after[window_slots], committed[window_slots])
+    # the previous (head, tail) pair is still intact in the inactive buffer
+    prev = state2.ends[(int(state2.epoch) // 2 + 1) % 2]
+    assert (int(prev[0]), int(prev[1])) == (lo, hi)
+
+
+@pytest.mark.parametrize("n", LANE_COUNTS)
+@pytest.mark.parametrize("via", ["jnp", "pallas"])
+def test_queue_random_mix_matches_oracle(n, via):
+    rng = np.random.default_rng(n)
+    batches = []
+    for _ in range(3):
+        ops = rng.integers(0, 3, n).tolist()
+        params = (rng.random(n) * 100).round(2).tolist()
+        batches.append((ops, params))
+    apply_queue_batches(batches, capacity=4 * n + 8, via=via)
+
+
+# ------------------------------------------------------------------ deque
+@pytest.mark.parametrize("n", LANE_COUNTS)
+def test_deque_all_push_both_ends(n):
+    ops = [(OP_PUSHL if i % 2 else OP_PUSHR) for i in range(n)]
+    apply_deque_batches([(ops, list(range(1, n + 1)))], capacity=2 * n + 8)
+
+
+@pytest.mark.parametrize("n", LANE_COUNTS)
+def test_deque_all_pop_empty(n):
+    ops = [(OP_POPL if i % 2 else OP_POPR) for i in range(n)]
+    state = init_deque(2 * n)
+    _, resp, kinds = combine_deque(
+        state, jnp.asarray(ops, jnp.int32), jnp.zeros(n)
+    )
+    assert all(k == R_EMPTY for k in np.asarray(kinds))
+
+
+def test_deque_same_side_elimination():
+    ops = [OP_PUSHL, OP_POPL, OP_PUSHR, OP_POPR]
+    state = init_deque(32)
+    state, resp, kinds = combine_deque(
+        state,
+        jnp.asarray(ops, jnp.int32),
+        jnp.asarray([5.0, 0, 7.0, 0], jnp.float32),
+    )
+    assert list(np.asarray(kinds)) == [R_ACK, R_VALUE, R_ACK, R_VALUE]
+    assert list(np.asarray(resp)[[1, 3]]) == [5.0, 7.0]
+    assert int(state.active_size()) == 0
+
+
+def test_deque_right_pops_consume_left_pushes():
+    """The canonical witness applies the left surplus first, so a right pop
+    can return a value pushed left in the same phase."""
+    ops = [OP_PUSHL, OP_POPR, OP_POPR]
+    state = init_deque(32)
+    state, _, _ = combine_deque(
+        state, jnp.asarray([OP_PUSHR], jnp.int32), jnp.asarray([1.0], jnp.float32)
+    )
+    state, resp, kinds = combine_deque(
+        state, jnp.asarray(ops, jnp.int32), jnp.asarray([2.0, 0, 0], jnp.float32)
+    )
+    assert list(np.asarray(kinds)) == [R_ACK, R_VALUE, R_VALUE]
+    assert list(np.asarray(resp)[[1, 2]]) == [1.0, 2.0]  # committed, then pushed-left
+
+
+def test_deque_window_grows_left():
+    n = 4
+    state = apply_deque_batches(
+        [([OP_PUSHL] * n, [1.0, 2.0, 3.0, 4.0])], capacity=16
+    )
+    assert int(state.active_ends()[0]) == -n  # left counter went negative
+
+
+def test_deque_committed_window_never_overwritten():
+    cap = 32
+    state = init_deque(cap)
+    ops0 = [OP_PUSHL, OP_PUSHR, OP_PUSHL, OP_PUSHR]
+    state, _, _ = combine_deque(
+        state, jnp.asarray(ops0, jnp.int32), jnp.arange(1.0, 5.0)
+    )
+    committed = np.asarray(state.values).copy()
+    e = state.active_ends()
+    lo, hi = int(e[0]), int(e[1])
+    window_slots = [i % cap for i in range(lo, hi)]
+    state2, _, _ = combine_deque(
+        state,
+        jnp.asarray([OP_PUSHL, OP_POPR, OP_PUSHR, OP_POPL], jnp.int32),
+        jnp.asarray([9.0, 0.0, 8.0, 0.0], jnp.float32),
+    )
+    after = np.asarray(state2.values)
+    np.testing.assert_array_equal(after[window_slots], committed[window_slots])
+    prev = state2.ends[(int(state2.epoch) // 2 + 1) % 2]
+    assert (int(prev[0]), int(prev[1])) == (lo, hi)
+
+
+@pytest.mark.parametrize("n", LANE_COUNTS)
+@pytest.mark.parametrize("via", ["jnp", "pallas"])
+def test_deque_random_mix_matches_oracle(n, via):
+    rng = np.random.default_rng(1000 + n)
+    batches = []
+    for _ in range(3):
+        ops = rng.integers(0, 5, n).tolist()
+        params = (rng.random(n) * 100).round(2).tolist()
+        batches.append((ops, params))
+    apply_deque_batches(batches, capacity=4 * n + 8, via=via)
+
+
+# ------------------------------------------------------------------ properties
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(
+    st.lists(
+        st.tuples(st.integers(0, 2), st.floats(1.0, 1e4)),
+        min_size=1,
+        max_size=24,
+    ),
+    st.integers(0, 3),
+)
+def test_property_queue_matches_sequential_witness(lanes, n_batches):
+    ops = [o for o, _ in lanes]
+    params = [p for _, p in lanes]
+    batches = [(ops, params)] * (n_batches + 1)
+    apply_queue_batches(batches, capacity=max(128, 32 * len(lanes)))
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(
+    st.lists(
+        st.tuples(st.integers(0, 4), st.floats(1.0, 1e4)),
+        min_size=1,
+        max_size=24,
+    ),
+    st.integers(0, 3),
+)
+def test_property_deque_matches_sequential_witness(lanes, n_batches):
+    ops = [o for o, _ in lanes]
+    params = [p for _, p in lanes]
+    batches = [(ops, params)] * (n_batches + 1)
+    apply_deque_batches(batches, capacity=max(128, 32 * len(lanes)))
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(st.data())
+def test_property_deque_conservation(data):
+    """Across arbitrary batches: pushed = popped + remaining (multisets)."""
+    rng_ops = data.draw(
+        st.lists(
+            st.lists(st.integers(0, 4), min_size=4, max_size=16),
+            min_size=1,
+            max_size=4,
+        )
+    )
+    state = init_deque(512)
+    uid = 1.0
+    pushed, popped = [], []
+    for ops in rng_ops:
+        params = []
+        for o in ops:
+            is_push = o in (OP_PUSHL, OP_PUSHR)
+            params.append(uid if is_push else 0.0)
+            if is_push:
+                pushed.append(uid)
+                uid += 1.0
+        state, resp, kinds = combine_deque(
+            state, jnp.asarray(ops, jnp.int32), jnp.asarray(params, jnp.float32)
+        )
+        popped += [
+            float(v) for v, k in zip(np.asarray(resp), np.asarray(kinds)) if k == R_VALUE
+        ]
+    assert sorted(popped + _ring_contents(state)) == sorted(pushed)

@@ -1,11 +1,10 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _compat import hypothesis, st
 
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ops import chunked_attention

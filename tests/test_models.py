@@ -41,6 +41,11 @@ def cfgs():
             name="moe", family="moe", n_layers=2, d_model=32, n_heads=4,
             n_kv_heads=4, d_ff=64, vocab=V, n_experts=4, top_k=2, moe_dff=48,
             dense_residual=True, remat="none", dtype="float32",
+            # decode == forward only when nothing overflows the capacity
+            # buffer: full-sequence dispatch drops overflow assignments,
+            # per-token decode (tiny T) never does.  2.5 * T*k/e covers the
+            # worst routing imbalance at B=2, S=12.
+            capacity_factor=2.5,
         ),
         "ssm": ModelConfig(
             name="ssm", family="ssm", n_layers=3, d_model=32, n_heads=1,
