@@ -1,0 +1,122 @@
+"""Sharded DFC runtime: throughput and pwb/op as shard count and skew vary.
+
+The multi-object analogue of the paper's Figure 3: flat combining amortizes
+persistence over the ops of a phase; sharding amortizes the *dispatch* over
+many objects while keeping per-shard persistence proportional to touched
+shards only.  Skewed (Zipf) traffic concentrates ops on few shards — fewer
+epoch commits per phase, better pwb/op, worse parallelism; uniform traffic
+spreads them.
+
+Emits ``name,value,derived`` rows via ``emit`` and (when run as a script)
+writes the full result set to ``BENCH_sharded.json``.  ``--smoke`` runs a
+seconds-scale subset on CPU jax — wired into CI so the subsystem cannot rot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+from repro.checkpoint.dfc_checkpoint import SimFS
+from repro.runtime.dfc_shard import R_OVERFLOW, ShardedDFCRuntime, zipf_keys
+
+
+def _one_config(kind, n_shards, skew, batch, phases, results, emit):
+    rng = np.random.default_rng(0)
+    lanes = batch
+    capacity = batch * (phases + 2)
+
+    # volatile throughput of the fused jitted step
+    rt = ShardedDFCRuntime(kind, n_shards, capacity, lanes)
+    batches = [
+        (
+            zipf_keys(rng, batch, 4096, skew),
+            rng.integers(1, 3, batch),
+            rng.random(batch).astype(np.float32),
+        )
+        for _ in range(phases)
+    ]
+    rt.step(*batches[0])  # compile
+    t0 = time.perf_counter()
+    for keys, ops, params in batches[1:]:
+        resp, kinds = rt.step(keys, ops, params)
+    jax.block_until_ready(resp)
+    dt = time.perf_counter() - t0
+    ops_s = (phases - 1) * batch / dt
+
+    # durable pwb/op over the announcement fabric
+    root = Path(tempfile.mkdtemp(prefix="dfc_bench_sharded_"))
+    try:
+        fs = SimFS(root)
+        drt = ShardedDFCRuntime(kind, n_shards, capacity, lanes, fs=fs, n_threads=1)
+        applied = 0
+        for i, (keys, ops, params) in enumerate(batches[: max(3, phases // 4)]):
+            drt.announce(0, keys, ops, params, token=i + 1)
+            drt.combine_phase()
+            kinds = np.asarray(drt.read_responses(0)["kinds"])
+            applied += int(np.sum(kinds != R_OVERFLOW))
+        pwb_op = fs.stats["pwb"] / max(applied, 1)
+        pfence_op = fs.stats["pfence"] / max(applied, 1)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    touched = int(np.sum(np.asarray(drt.meta["phases"]) > 0))
+    name = f"sharded_{kind}_s{n_shards}_skew{skew:g}"
+    emit(name, f"{ops_s:.0f}", f"ops/s,pwb/op={pwb_op:.2f},touched={touched}")
+    results.append(
+        {
+            "kind": kind,
+            "n_shards": n_shards,
+            "skew": skew,
+            "batch": batch,
+            "ops_per_s": ops_s,
+            "pwb_per_op": pwb_op,
+            "pfence_per_op": pfence_op,
+            "touched_shards": touched,
+        }
+    )
+
+
+def run(emit, smoke: bool = False):
+    results = []
+    if smoke:
+        grid = [("queue", 4, 0.0), ("queue", 4, 1.2), ("stack", 8, 1.2), ("deque", 8, 0.0)]
+        batch, phases = 64, 6
+    else:
+        grid = [
+            (kind, s, skew)
+            for kind in ("stack", "queue", "deque")
+            for s in (1, 4, 16, 64)
+            for skew in (0.0, 0.8, 1.2)
+        ]
+        batch, phases = 256, 20
+    for kind, n_shards, skew in grid:
+        _one_config(kind, n_shards, skew, batch, phases, results, emit)
+    return results
+
+
+def main(emit, smoke: bool = True):
+    """Benchmark-harness entry point (smoke-sized by default: run.py and CI
+    both call this; the full grid is `python bench_sharded.py` without
+    --smoke)."""
+    return run(emit, smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="seconds-scale CI subset")
+    ap.add_argument(
+        "--out", default="BENCH_sharded.json", help="JSON results path"
+    )
+    args = ap.parse_args()
+    rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)
+    Path(args.out).write_text(json.dumps(rows, indent=2) + "\n")
+    print(f"# wrote {args.out} ({len(rows)} configs)")

@@ -6,33 +6,39 @@ Prints ``name,value,derived`` CSV.  Figures:
   fig4   combining phases per op            bench_phases
   jax    vectorized combine timings         bench_jax_combine
   ckpt   DFC-Checkpoint combining           bench_checkpoint
+  shard  sharded multi-object runtime       bench_sharded (smoke grid)
   roofline  per-cell fractions (from dry-run artifacts, if present)
+
+Every ``benchmarks/bench_*.py`` module is discovered from ONE registry
+(``discover_benches``) built from the directory contents, so adding a bench
+file is all it takes to get it run — the list here can no longer drift.
+Contract: each bench module exposes ``main(emit)``.
 """
 
 from __future__ import annotations
 
+import importlib
 import sys
 import time
+from pathlib import Path
+
+
+def discover_benches():
+    """The single bench registry: every bench_*.py next to this file."""
+    here = Path(__file__).resolve().parent
+    if str(here.parent) not in sys.path:  # `python benchmarks/run.py` puts
+        sys.path.insert(0, str(here.parent))  # benchmarks/ itself first
+    names = sorted(p.stem for p in here.glob("bench_*.py"))
+    return [(name, importlib.import_module(f"benchmarks.{name}")) for name in names]
 
 
 def main() -> None:
     def emit(name, value, derived=""):
         print(f"{name},{value},{derived}", flush=True)
 
-    from benchmarks import (
-        bench_checkpoint,
-        bench_jax_combine,
-        bench_persistence,
-        bench_phases,
-        bench_throughput,
-    )
-
     t0 = time.time()
-    bench_persistence.main(emit)
-    bench_throughput.main(emit)
-    bench_phases.main(emit)
-    bench_jax_combine.main(emit)
-    bench_checkpoint.main(emit)
+    for name, module in discover_benches():
+        module.main(emit)
     try:
         from benchmarks import roofline
 

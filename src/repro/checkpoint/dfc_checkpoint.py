@@ -336,6 +336,52 @@ class DFCCheckpointManager:
         ]
         return leaves, man
 
+    # ------------------------------------------------- DFC structure states
+    # The manager's combine() persists any pytree; these wrappers add the
+    # structure-aware layer for the array-backed DFC states of
+    # ``repro.core.jax_dfc``: the buffer is persisted ALONGSIDE its
+    # double-buffered root counters — ``size[2]`` for the stack,
+    # ``ends[2, 2]`` = (head, tail) / (left, right) for the ring-backed queue
+    # and deque — under the same two-increment epoch commit, and the manifest
+    # records the kind so ``load_structure`` can rebuild the typed state.
+    def combine_structure(self, state, extra_meta: Optional[Dict] = None) -> List[int]:
+        """Persist a StackState / QueueState / DequeState for every ready
+        announcement (same elimination + two-increment commit as combine)."""
+        from repro.core.jax_dfc import struct_kind
+
+        kind = struct_kind(state)
+        meta = dict(extra_meta or {})
+        meta["struct"] = kind
+        meta["struct_epoch"] = int(state.epoch)
+        if kind == "stack":
+            meta["committed_size"] = int(state.active_size())
+        else:
+            ends = state.active_ends()
+            meta["committed_ends"] = [int(ends[0]), int(ends[1])]
+        return self.combine(state, extra_meta=meta)
+
+    def load_structure(self):
+        """Rebuild the committed structure state (typed) from the active
+        slot.  Returns (state, manifest) or (None, None)."""
+        from repro.core.jax_dfc import STRUCTS
+
+        import jax.numpy as jnp
+
+        leaves, man = self.load_active()
+        if leaves is None:
+            return None, None
+        kind = man["meta"].get("struct")
+        if kind is None:
+            raise ValueError("active checkpoint was not written by combine_structure")
+        fresh = STRUCTS[kind].init(1)
+        treedef = jax.tree_util.tree_structure(fresh)
+        return (
+            jax.tree_util.tree_unflatten(
+                treedef, [jnp.asarray(leaf) for leaf in leaves]
+            ),
+            man,
+        )
+
 
 def io_bytes(data: bytes):
     import io

@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -521,3 +521,82 @@ def sequential_reference_deque(deque_list, ops, params):
         else:
             kinds[i] = R_EMPTY
     return d, responses, kinds
+
+
+# ================================================================== registry
+@dataclasses.dataclass(frozen=True)
+class StructSpec:
+    """One of the paper's structures, as seen by multi-object runtimes.
+
+    ``init``/``combine``/``reference`` are the single-object entry points
+    above; ``n_opcodes`` bounds the valid op-code range [0, n_opcodes) so a
+    router can generate well-formed random workloads per structure.
+    """
+
+    kind: str
+    state_cls: type
+    init: Callable[..., Any]
+    combine: Callable[..., Any]
+    reference: Callable[..., Any]
+    n_opcodes: int
+
+
+STRUCTS: Dict[str, StructSpec] = {
+    "stack": StructSpec(
+        "stack", StackState, init_stack, combine, sequential_reference, 3
+    ),
+    "queue": StructSpec(
+        "queue",
+        QueueState,
+        init_queue,
+        combine_queue,
+        sequential_reference_queue,
+        3,
+    ),
+    "deque": StructSpec(
+        "deque",
+        DequeState,
+        init_deque,
+        combine_deque,
+        sequential_reference_deque,
+        5,
+    ),
+}
+
+
+def struct_kind(state) -> str:
+    """Structure kind of a (possibly shard-stacked) state pytree."""
+    for kind, spec in STRUCTS.items():
+        if isinstance(state, spec.state_cls):
+            return kind
+    raise TypeError(f"not a DFC structure state: {type(state)!r}")
+
+
+# ============================================================ shard stacking
+def replicate_state(state, n_shards: int):
+    """Stack ``n_shards`` copies of a freshly-initialized state into one
+    pytree with a leading shard axis on every leaf (``vmap``-ready)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.broadcast_to(leaf, (n_shards,) + leaf.shape), state
+    )
+
+
+def init_sharded(kind: str, n_shards: int, capacity: int, dtype=jnp.float32):
+    """``n_shards`` homogeneous DFC objects as one stacked pytree.
+
+    Leaf shapes: stack ``values[S, cap] / size[S, 2] / epoch[S]``; queue and
+    deque ``values[S, cap] / ends[S, 2, 2] / epoch[S]``.  Each shard keeps its
+    own epoch, so shards commit (and recover) independently.
+    """
+    return replicate_state(STRUCTS[kind].init(capacity, dtype), n_shards)
+
+
+def shard_slice(state, s: int):
+    """Extract shard ``s`` of a stacked state as a single-object state."""
+    return jax.tree_util.tree_map(lambda leaf: leaf[s], state)
+
+
+def stack_shards(shard_states):
+    """Inverse of ``shard_slice`` over all shards: list of single-object
+    states -> one stacked state."""
+    return jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *shard_states)

@@ -37,6 +37,12 @@ may consume same-phase left pushes via the in-register seg_l):
   window_r_ref f32[N]    deque[right-1 : right-1-N] seen from the right
   -> resp, kind, seg_l (left-prepend values), seg_r (right-append values),
      counts i32[8] = (sl, dl, sr, dr, nl_elim, nr_elim, size_after, 0)
+
+Sharded grid variants (``dfc_*_reduce_grid_call``): the same math over a
+stacked batch — inputs carry a leading shard axis ``[S, N]`` (sizes ``[S]``),
+``grid=(S,)``, and each program instance runs ONE shard's combining phase.
+The combine math itself is shared (``_*_reduce_math``) between the
+single-object kernels and the grid kernels, so the two paths cannot drift.
 """
 
 from __future__ import annotations
@@ -78,12 +84,11 @@ def _gather(vals, idx, n):
     return jnp.dot(onehot, vals.astype(jnp.float32), preferred_element_type=jnp.float32)
 
 
-def dfc_reduce_kernel(ops_ref, params_ref, window_ref, size_ref, resp_ref, kind_ref, segment_ref, counts_ref):
-    n = ops_ref.shape[0]
-    ops = ops_ref[:]
-    params = params_ref[:].astype(jnp.float32)
-    window = window_ref[:].astype(jnp.float32)
-    size = size_ref[0]
+# ------------------------------------------------------------- shared math
+def _stack_reduce_math(ops, params, window, size):
+    n = ops.shape[0]
+    params = params.astype(jnp.float32)
+    window = window.astype(jnp.float32)
 
     is_push = ops == OP_PUSH
     is_pop = ops == OP_POP
@@ -93,13 +98,9 @@ def dfc_reduce_kernel(ops_ref, params_ref, window_ref, size_ref, resp_ref, kind_
     q_total = jnp.sum(is_pop.astype(jnp.int32))
     n_elim = jnp.minimum(p_total, q_total)
 
-    # elimination pairing: pop_k <- push_k.param (one-hot route + gather-route)
+    # elimination pairing: pop_k <- push_k.param (one-hot route + gather)
     push_by_rank = _route(push_rank, params, n)
-    pop_gather = (
-        jnp.clip(pop_rank, 0, n - 1)[:, None]
-        == jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
-    ).astype(jnp.float32)
-    elim_pop_val = jnp.dot(pop_gather, push_by_rank, preferred_element_type=jnp.float32)
+    elim_pop_val = _gather(push_by_rank, pop_rank, n)
 
     # surplus push compaction into the segment
     surplus_push = is_push & (push_rank >= n_elim)
@@ -111,11 +112,7 @@ def dfc_reduce_kernel(ops_ref, params_ref, window_ref, size_ref, resp_ref, kind_
     depth = pop_rank - n_elim
     win_src = n - 1 - depth  # index into the window
     pop_ok = surplus_pop & (win_src >= 0) & (depth < size)
-    win_gather = (
-        jnp.clip(win_src, 0, n - 1)[:, None]
-        == jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
-    ).astype(jnp.float32)
-    stack_val = jnp.dot(win_gather, window, preferred_element_type=jnp.float32)
+    stack_val = _gather(window, win_src, n)
 
     kinds = jnp.full((n,), R_NONE, dtype=jnp.int32)
     kinds = jnp.where(is_push, R_ACK, kinds)
@@ -126,25 +123,16 @@ def dfc_reduce_kernel(ops_ref, params_ref, window_ref, size_ref, resp_ref, kind_
     resp = jnp.where(is_pop & (pop_rank < n_elim), elim_pop_val, resp)
     resp = jnp.where(pop_ok, stack_val, resp)
 
-    resp_ref[:] = resp
-    kind_ref[:] = kinds
-    segment_ref[:] = segment
     n_push_surplus = jnp.maximum(p_total - n_elim, 0)
     n_popped = jnp.minimum(jnp.maximum(q_total - n_elim, 0), size)
-    counts_ref[0] = n_push_surplus
-    counts_ref[1] = n_popped
-    counts_ref[2] = n_elim
-    counts_ref[3] = q_total
+    counts = jnp.stack([n_push_surplus, n_popped, n_elim, q_total]).astype(jnp.int32)
+    return resp, kinds, segment, counts
 
 
-def dfc_queue_reduce_kernel(
-    ops_ref, params_ref, window_ref, size_ref, resp_ref, kind_ref, segment_ref, counts_ref
-):
-    n = ops_ref.shape[0]
-    ops = ops_ref[:]
-    params = params_ref[:].astype(jnp.float32)
-    window = window_ref[:].astype(jnp.float32)  # window[j] = j-th from head
-    size = size_ref[0]
+def _queue_reduce_math(ops, params, window, size):
+    n = ops.shape[0]
+    params = params.astype(jnp.float32)
+    window = window.astype(jnp.float32)  # window[j] = j-th from head
 
     is_enq = ops == OP_ENQ
     is_deq = ops == OP_DEQ
@@ -178,33 +166,17 @@ def dfc_queue_reduce_kernel(
     resp = jnp.where(served, ring_val, resp)
     resp = jnp.where(paired, pair_val, resp)
 
-    resp_ref[:] = resp
-    kind_ref[:] = kinds
-    segment_ref[:] = segment
-    counts_ref[0] = jnp.maximum(p_total - n_elim, 0)
-    counts_ref[1] = n_from_q
-    counts_ref[2] = n_elim
-    counts_ref[3] = q_total
+    counts = jnp.stack(
+        [jnp.maximum(p_total - n_elim, 0), n_from_q, n_elim, q_total]
+    ).astype(jnp.int32)
+    return resp, kinds, segment, counts
 
 
-def dfc_deque_reduce_kernel(
-    ops_ref,
-    params_ref,
-    window_l_ref,
-    window_r_ref,
-    size_ref,
-    resp_ref,
-    kind_ref,
-    seg_l_ref,
-    seg_r_ref,
-    counts_ref,
-):
-    n = ops_ref.shape[0]
-    ops = ops_ref[:]
-    params = params_ref[:].astype(jnp.float32)
-    window_l = window_l_ref[:].astype(jnp.float32)  # j-th from the left end
-    window_r = window_r_ref[:].astype(jnp.float32)  # j-th from the right end
-    size = size_ref[0]
+def _deque_reduce_math(ops, params, window_l, window_r, size):
+    n = ops.shape[0]
+    params = params.astype(jnp.float32)
+    window_l = window_l.astype(jnp.float32)  # j-th from the left end
+    window_r = window_r.astype(jnp.float32)  # j-th from the right end
 
     is_pl = ops == OP_PUSHL
     is_ql = ops == OP_POPL
@@ -266,18 +238,55 @@ def dfc_deque_reduce_kernel(
     resp = jnp.where(lpop_ok, lpop_val, resp)
     resp = jnp.where(rpop_ok, rpop_val, resp)
 
+    counts = jnp.stack(
+        [sl, dl, sr, dr, nl_elim, nr_elim, size_after, jnp.zeros((), jnp.int32)]
+    ).astype(jnp.int32)
+    return resp, kinds, seg_l, seg_r, counts
+
+
+# ------------------------------------------------------- single-object kernels
+def dfc_reduce_kernel(ops_ref, params_ref, window_ref, size_ref, resp_ref, kind_ref, segment_ref, counts_ref):
+    resp, kinds, segment, counts = _stack_reduce_math(
+        ops_ref[:], params_ref[:], window_ref[:], size_ref[0]
+    )
+    resp_ref[:] = resp
+    kind_ref[:] = kinds
+    segment_ref[:] = segment
+    counts_ref[:] = counts
+
+
+def dfc_queue_reduce_kernel(
+    ops_ref, params_ref, window_ref, size_ref, resp_ref, kind_ref, segment_ref, counts_ref
+):
+    resp, kinds, segment, counts = _queue_reduce_math(
+        ops_ref[:], params_ref[:], window_ref[:], size_ref[0]
+    )
+    resp_ref[:] = resp
+    kind_ref[:] = kinds
+    segment_ref[:] = segment
+    counts_ref[:] = counts
+
+
+def dfc_deque_reduce_kernel(
+    ops_ref,
+    params_ref,
+    window_l_ref,
+    window_r_ref,
+    size_ref,
+    resp_ref,
+    kind_ref,
+    seg_l_ref,
+    seg_r_ref,
+    counts_ref,
+):
+    resp, kinds, seg_l, seg_r, counts = _deque_reduce_math(
+        ops_ref[:], params_ref[:], window_l_ref[:], window_r_ref[:], size_ref[0]
+    )
     resp_ref[:] = resp
     kind_ref[:] = kinds
     seg_l_ref[:] = seg_l
     seg_r_ref[:] = seg_r
-    counts_ref[0] = sl
-    counts_ref[1] = dl
-    counts_ref[2] = sr
-    counts_ref[3] = dr
-    counts_ref[4] = nl_elim
-    counts_ref[5] = nr_elim
-    counts_ref[6] = size_after
-    counts_ref[7] = 0
+    counts_ref[:] = counts
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -364,3 +373,151 @@ def dfc_deque_reduce_call(
         ),
         interpret=interpret,
     )(ops, params, window_l, window_r, jnp.asarray(size, jnp.int32).reshape(1))
+
+
+# ------------------------------------------------------------ sharded (grid)
+def dfc_reduce_grid_kernel(
+    ops_ref, params_ref, window_ref, size_ref, resp_ref, kind_ref, segment_ref, counts_ref
+):
+    resp, kinds, segment, counts = _stack_reduce_math(
+        ops_ref[0, :], params_ref[0, :], window_ref[0, :], size_ref[0]
+    )
+    resp_ref[0, :] = resp
+    kind_ref[0, :] = kinds
+    segment_ref[0, :] = segment
+    counts_ref[0, :] = counts
+
+
+def dfc_queue_reduce_grid_kernel(
+    ops_ref, params_ref, window_ref, size_ref, resp_ref, kind_ref, segment_ref, counts_ref
+):
+    resp, kinds, segment, counts = _queue_reduce_math(
+        ops_ref[0, :], params_ref[0, :], window_ref[0, :], size_ref[0]
+    )
+    resp_ref[0, :] = resp
+    kind_ref[0, :] = kinds
+    segment_ref[0, :] = segment
+    counts_ref[0, :] = counts
+
+
+def dfc_deque_reduce_grid_kernel(
+    ops_ref,
+    params_ref,
+    window_l_ref,
+    window_r_ref,
+    size_ref,
+    resp_ref,
+    kind_ref,
+    seg_l_ref,
+    seg_r_ref,
+    counts_ref,
+):
+    resp, kinds, seg_l, seg_r, counts = _deque_reduce_math(
+        ops_ref[0, :], params_ref[0, :], window_l_ref[0, :], window_r_ref[0, :], size_ref[0]
+    )
+    resp_ref[0, :] = resp
+    kind_ref[0, :] = kinds
+    seg_l_ref[0, :] = seg_l
+    seg_r_ref[0, :] = seg_r
+    counts_ref[0, :] = counts
+
+
+def _row_spec(n):
+    return pl.BlockSpec((1, n), lambda s: (s, 0))
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1,), lambda s: (s,))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dfc_reduce_grid_call(ops, params, windows, sizes, *, interpret: bool = True):
+    """All shards' stack combines in ONE pallas dispatch: grid=(S,), program
+    instance s runs shard s's combining phase over its [N]-lane row."""
+    s, n = ops.shape
+    return pl.pallas_call(
+        dfc_reduce_grid_kernel,
+        grid=(s,),
+        out_shape=(
+            jax.ShapeDtypeStruct((s, n), jnp.float32),  # responses
+            jax.ShapeDtypeStruct((s, n), jnp.int32),  # kinds
+            jax.ShapeDtypeStruct((s, n), jnp.float32),  # segments
+            jax.ShapeDtypeStruct((s, 4), jnp.int32),  # counts
+        ),
+        in_specs=[
+            _row_spec(n),
+            _row_spec(n),
+            _row_spec(n),
+            _scalar_spec(),
+        ],
+        out_specs=(
+            _row_spec(n),
+            _row_spec(n),
+            _row_spec(n),
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        ),
+        interpret=interpret,
+    )(ops, params, windows, sizes.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dfc_queue_reduce_grid_call(ops, params, windows, sizes, *, interpret: bool = True):
+    """All shards' queue combines in one dispatch (see dfc_reduce_grid_call)."""
+    s, n = ops.shape
+    return pl.pallas_call(
+        dfc_queue_reduce_grid_kernel,
+        grid=(s,),
+        out_shape=(
+            jax.ShapeDtypeStruct((s, n), jnp.float32),
+            jax.ShapeDtypeStruct((s, n), jnp.int32),
+            jax.ShapeDtypeStruct((s, n), jnp.float32),
+            jax.ShapeDtypeStruct((s, 4), jnp.int32),
+        ),
+        in_specs=[
+            _row_spec(n),
+            _row_spec(n),
+            _row_spec(n),
+            _scalar_spec(),
+        ],
+        out_specs=(
+            _row_spec(n),
+            _row_spec(n),
+            _row_spec(n),
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        ),
+        interpret=interpret,
+    )(ops, params, windows, sizes.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dfc_deque_reduce_grid_call(
+    ops, params, windows_l, windows_r, sizes, *, interpret: bool = True
+):
+    """All shards' deque combines in one dispatch (see dfc_reduce_grid_call)."""
+    s, n = ops.shape
+    return pl.pallas_call(
+        dfc_deque_reduce_grid_kernel,
+        grid=(s,),
+        out_shape=(
+            jax.ShapeDtypeStruct((s, n), jnp.float32),
+            jax.ShapeDtypeStruct((s, n), jnp.int32),
+            jax.ShapeDtypeStruct((s, n), jnp.float32),
+            jax.ShapeDtypeStruct((s, n), jnp.float32),
+            jax.ShapeDtypeStruct((s, 8), jnp.int32),
+        ),
+        in_specs=[
+            _row_spec(n),
+            _row_spec(n),
+            _row_spec(n),
+            _row_spec(n),
+            _scalar_spec(),
+        ],
+        out_specs=(
+            _row_spec(n),
+            _row_spec(n),
+            _row_spec(n),
+            _row_spec(n),
+            pl.BlockSpec((1, 8), lambda i: (i, 0)),
+        ),
+        interpret=interpret,
+    )(ops, params, windows_l, windows_r, sizes.astype(jnp.int32))

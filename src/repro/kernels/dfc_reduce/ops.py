@@ -4,6 +4,15 @@ Splice the kernel outputs (responses / surplus segments / counts) into the
 array-backed double-buffered structure states (stack, queue, deque).
 ``backend`` selects the Pallas kernel (compiled for TPU via ``pallas_tpu``,
 interpret-mode via ``pallas``) or the pure-jnp oracle (``ref``).
+
+Each structure factors into a window builder (read the committed end(s) of
+the array into the kernel's lane-sized window) and a splice (apply the
+kernel's surplus segments/counts back to the double-buffered state with an
+epoch bump of +2).  The sharded steps (``dfc_sharded_*_combine_step``) vmap
+the builder and the splice over a leading shard axis and run ALL shards'
+combining phases in one Pallas grid dispatch (grid=(S,), one program
+instance per shard) — the multi-object amortization the sharded runtime
+(`repro.runtime.dfc_shard`) is built on.
 """
 
 from __future__ import annotations
@@ -16,8 +25,11 @@ import jax.numpy as jnp
 from repro.core.jax_dfc import DequeState, QueueState, StackState
 from repro.kernels.dfc_reduce.kernel import (
     dfc_deque_reduce_call,
+    dfc_deque_reduce_grid_call,
     dfc_queue_reduce_call,
+    dfc_queue_reduce_grid_call,
     dfc_reduce_call,
+    dfc_reduce_grid_call,
 )
 from repro.kernels.dfc_reduce.ref import (
     dfc_deque_reduce_ref,
@@ -26,13 +38,11 @@ from repro.kernels.dfc_reduce.ref import (
 )
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
-def dfc_combine_step(state: StackState, ops, params, *, backend: str = "ref"):
-    n = ops.shape[0]
+# ------------------------------------------------------------------- stack
+def _stack_window(state: StackState, n: int):
+    """window = stack[top-n : top], zero-padded below the bottom."""
     cap = state.values.shape[0]
     old_size = state.active_size()
-
-    # window = stack[top-n : top], zero-padded below the bottom
     start = jnp.clip(old_size - n, 0, cap - n)
     raw = jax.lax.dynamic_slice(state.values, (start,), (n,))
     # when old_size < n the slice starts at 0 and the top is at old_size-1;
@@ -40,6 +50,32 @@ def dfc_combine_step(state: StackState, ops, params, *, backend: str = "ref"):
     shift = jnp.where(old_size >= n, 0, n - old_size)
     window = jnp.roll(raw, shift)
     window = jnp.where(jnp.arange(n) >= shift, window, 0.0)
+    return window, old_size
+
+
+def _stack_splice(state: StackState, segment, counts) -> StackState:
+    n = segment.shape[0]
+    cap = state.values.shape[0]
+    old_size = state.active_size()
+    n_push_surplus, n_popped = counts[0], counts[1]
+    new_values = jax.lax.dynamic_update_slice(
+        state.values, segment.astype(state.values.dtype), (jnp.clip(old_size, 0, cap - n),)
+    )
+    keep = (jnp.arange(cap) >= old_size) & (jnp.arange(cap) < old_size + n_push_surplus)
+    new_values = jnp.where(keep, new_values, state.values)
+
+    new_size_val = old_size + n_push_surplus - n_popped
+    inactive = (state.epoch // 2 + 1) % 2
+    return StackState(
+        values=new_values,
+        size=state.size.at[inactive].set(new_size_val),
+        epoch=state.epoch + 2,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def dfc_combine_step(state: StackState, ops, params, *, backend: str = "ref"):
+    window, old_size = _stack_window(state, ops.shape[0])
 
     if backend == "pallas":
         resp, kinds, segment, counts = dfc_reduce_call(
@@ -52,35 +88,45 @@ def dfc_combine_step(state: StackState, ops, params, *, backend: str = "ref"):
     else:
         resp, kinds, segment, counts = dfc_reduce_ref(ops, params, window, old_size)
 
-    n_push_surplus, n_popped = counts[0], counts[1]
-    new_values = jax.lax.dynamic_update_slice(
-        state.values, segment.astype(state.values.dtype), (jnp.clip(old_size, 0, cap - n),)
-    )
-    keep = (jnp.arange(cap) >= old_size) & (jnp.arange(cap) < old_size + n_push_surplus)
-    new_values = jnp.where(keep, new_values, state.values)
+    return _stack_splice(state, segment, counts), resp, kinds
 
-    new_size_val = old_size + n_push_surplus - n_popped
+
+# ------------------------------------------------------------------- queue
+def _queue_window(state: QueueState, n: int):
+    """Front window: queue[head : head+n], zero-padded past the tail."""
+    cap = state.values.shape[0]
+    ends = state.active_ends()
+    head, size = ends[0], ends[1] - ends[0]
+    lanes = jnp.arange(n)
+    window = jnp.where(lanes < size, state.values[(head + lanes) % cap], 0.0)
+    return window.astype(jnp.float32), size
+
+
+def _queue_splice(state: QueueState, segment, counts) -> QueueState:
+    n = segment.shape[0]
+    cap = state.values.shape[0]
+    ends = state.active_ends()
+    head, tail = ends[0], ends[1]
+    n_enq_surplus, n_from_q = counts[0], counts[1]
+    lanes = jnp.arange(n)
+    pos = (tail + lanes) % cap
+    new_values = state.values.at[
+        jnp.where(lanes < n_enq_surplus, pos, cap)
+    ].set(segment.astype(state.values.dtype), mode="drop")
+
     inactive = (state.epoch // 2 + 1) % 2
-    new_state = StackState(
+    new_ends = jnp.stack([head + n_from_q, tail + n_enq_surplus])
+    return QueueState(
         values=new_values,
-        size=state.size.at[inactive].set(new_size_val),
+        ends=state.ends.at[inactive].set(new_ends),
         epoch=state.epoch + 2,
     )
-    return new_state, resp, kinds
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
 def dfc_queue_combine_step(state: QueueState, ops, params, *, backend: str = "ref"):
     """Queue combine phase: front window -> kernel -> masked ring splice."""
-    n = ops.shape[0]
-    cap = state.values.shape[0]
-    ends = state.active_ends()
-    head, tail = ends[0], ends[1]
-    size = tail - head
-
-    lanes = jnp.arange(n)
-    window = jnp.where(lanes < size, state.values[(head + lanes) % cap], 0.0)
-    window = window.astype(jnp.float32)
+    window, size = _queue_window(state, ops.shape[0])
 
     if backend == "pallas":
         resp, kinds, segment, counts = dfc_queue_reduce_call(
@@ -93,36 +139,51 @@ def dfc_queue_combine_step(state: QueueState, ops, params, *, backend: str = "re
     else:
         resp, kinds, segment, counts = dfc_queue_reduce_ref(ops, params, window, size)
 
-    n_enq_surplus, n_from_q = counts[0], counts[1]
-    pos = (tail + lanes) % cap
-    new_values = state.values.at[
-        jnp.where(lanes < n_enq_surplus, pos, cap)
-    ].set(segment.astype(state.values.dtype), mode="drop")
+    return _queue_splice(state, segment, counts), resp, kinds
+
+
+# ------------------------------------------------------------------- deque
+def _deque_windows(state: DequeState, n: int):
+    """End windows seen from the left and from the right."""
+    cap = state.values.shape[0]
+    ends = state.active_ends()
+    left, right = ends[0], ends[1]
+    size = right - left
+    lanes = jnp.arange(n)
+    window_l = jnp.where(lanes < size, state.values[(left + lanes) % cap], 0.0)
+    window_r = jnp.where(lanes < size, state.values[(right - 1 - lanes) % cap], 0.0)
+    return window_l.astype(jnp.float32), window_r.astype(jnp.float32), size
+
+
+def _deque_splice(state: DequeState, seg_l, seg_r, counts) -> DequeState:
+    n = seg_l.shape[0]
+    cap = state.values.shape[0]
+    ends = state.active_ends()
+    left, right = ends[0], ends[1]
+    sl, dl, sr, dr = counts[0], counts[1], counts[2], counts[3]
+    lanes = jnp.arange(n)
+    posl = (left - 1 - lanes) % cap
+    new_values = state.values.at[jnp.where(lanes < sl, posl, cap)].set(
+        seg_l.astype(state.values.dtype), mode="drop"
+    )
+    posr = (right + lanes) % cap
+    new_values = new_values.at[jnp.where(lanes < sr, posr, cap)].set(
+        seg_r.astype(state.values.dtype), mode="drop"
+    )
 
     inactive = (state.epoch // 2 + 1) % 2
-    new_ends = jnp.stack([head + n_from_q, tail + n_enq_surplus])
-    new_state = QueueState(
+    new_ends = jnp.stack([left - sl + dl, right + sr - dr])
+    return DequeState(
         values=new_values,
         ends=state.ends.at[inactive].set(new_ends),
         epoch=state.epoch + 2,
     )
-    return new_state, resp, kinds
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
 def dfc_deque_combine_step(state: DequeState, ops, params, *, backend: str = "ref"):
     """Deque combine phase: end windows -> two-sided kernel -> ring splices."""
-    n = ops.shape[0]
-    cap = state.values.shape[0]
-    ends = state.active_ends()
-    left, right = ends[0], ends[1]
-    size = right - left
-
-    lanes = jnp.arange(n)
-    window_l = jnp.where(lanes < size, state.values[(left + lanes) % cap], 0.0)
-    window_r = jnp.where(lanes < size, state.values[(right - 1 - lanes) % cap], 0.0)
-    window_l = window_l.astype(jnp.float32)
-    window_r = window_r.astype(jnp.float32)
+    window_l, window_r, size = _deque_windows(state, ops.shape[0])
 
     if backend == "pallas":
         resp, kinds, seg_l, seg_r, counts = dfc_deque_reduce_call(
@@ -137,21 +198,85 @@ def dfc_deque_combine_step(state: DequeState, ops, params, *, backend: str = "re
             ops, params, window_l, window_r, size
         )
 
-    sl, dl, sr, dr = counts[0], counts[1], counts[2], counts[3]
-    posl = (left - 1 - lanes) % cap
-    new_values = state.values.at[jnp.where(lanes < sl, posl, cap)].set(
-        seg_l.astype(state.values.dtype), mode="drop"
-    )
-    posr = (right + lanes) % cap
-    new_values = new_values.at[jnp.where(lanes < sr, posr, cap)].set(
-        seg_r.astype(state.values.dtype), mode="drop"
-    )
+    return _deque_splice(state, seg_l, seg_r, counts), resp, kinds
 
-    inactive = (state.epoch // 2 + 1) % 2
-    new_ends = jnp.stack([left - sl + dl, right + sr - dr])
-    new_state = DequeState(
-        values=new_values,
-        ends=state.ends.at[inactive].set(new_ends),
-        epoch=state.epoch + 2,
-    )
-    return new_state, resp, kinds
+
+# ----------------------------------------------------------------- sharded
+# All shards' combining phases in one dispatch.  States are shard-stacked
+# pytrees (leading S axis on every leaf, see ``repro.core.jax_dfc``); ops and
+# params are [S, N] per-shard announcement matrices.
+@functools.partial(jax.jit, static_argnames=("backend",))
+def dfc_sharded_combine_step(state: StackState, ops, params, *, backend: str = "ref"):
+    """Sharded stack combine: one grid dispatch, program instance = shard."""
+    n = ops.shape[1]
+    windows, sizes = jax.vmap(_stack_window, in_axes=(0, None))(state, n)
+
+    if backend == "pallas":
+        resp, kinds, segments, counts = dfc_reduce_grid_call(
+            ops, params, windows, sizes, interpret=True
+        )
+    elif backend == "pallas_tpu":
+        resp, kinds, segments, counts = dfc_reduce_grid_call(
+            ops, params, windows, sizes, interpret=False
+        )
+    else:
+        resp, kinds, segments, counts = jax.vmap(dfc_reduce_ref)(
+            ops, params, windows, sizes
+        )
+
+    return jax.vmap(_stack_splice)(state, segments, counts), resp, kinds
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def dfc_sharded_queue_combine_step(
+    state: QueueState, ops, params, *, backend: str = "ref"
+):
+    """Sharded queue combine: one grid dispatch, program instance = shard."""
+    n = ops.shape[1]
+    windows, sizes = jax.vmap(_queue_window, in_axes=(0, None))(state, n)
+
+    if backend == "pallas":
+        resp, kinds, segments, counts = dfc_queue_reduce_grid_call(
+            ops, params, windows, sizes, interpret=True
+        )
+    elif backend == "pallas_tpu":
+        resp, kinds, segments, counts = dfc_queue_reduce_grid_call(
+            ops, params, windows, sizes, interpret=False
+        )
+    else:
+        resp, kinds, segments, counts = jax.vmap(dfc_queue_reduce_ref)(
+            ops, params, windows, sizes
+        )
+
+    return jax.vmap(_queue_splice)(state, segments, counts), resp, kinds
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def dfc_sharded_deque_combine_step(
+    state: DequeState, ops, params, *, backend: str = "ref"
+):
+    """Sharded deque combine: one grid dispatch, program instance = shard."""
+    n = ops.shape[1]
+    windows_l, windows_r, sizes = jax.vmap(_deque_windows, in_axes=(0, None))(state, n)
+
+    if backend == "pallas":
+        resp, kinds, segs_l, segs_r, counts = dfc_deque_reduce_grid_call(
+            ops, params, windows_l, windows_r, sizes, interpret=True
+        )
+    elif backend == "pallas_tpu":
+        resp, kinds, segs_l, segs_r, counts = dfc_deque_reduce_grid_call(
+            ops, params, windows_l, windows_r, sizes, interpret=False
+        )
+    else:
+        resp, kinds, segs_l, segs_r, counts = jax.vmap(dfc_deque_reduce_ref)(
+            ops, params, windows_l, windows_r, sizes
+        )
+
+    return jax.vmap(_deque_splice)(state, segs_l, segs_r, counts), resp, kinds
+
+
+SHARDED_COMBINE_STEPS = {
+    "stack": dfc_sharded_combine_step,
+    "queue": dfc_sharded_queue_combine_step,
+    "deque": dfc_sharded_deque_combine_step,
+}

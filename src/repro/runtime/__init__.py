@@ -1,3 +1,25 @@
+from repro.runtime.dfc_shard import (
+    R_OVERFLOW,
+    OpVerdict,
+    ShardedDFCRuntime,
+    route_batch,
+    sequential_sharded_reference,
+    shard_of_keys,
+    shard_of_keys_host,
+    sharded_step,
+    zipf_keys,
+)
 from repro.runtime.train_loop import TrainRuntime
 
-__all__ = ["TrainRuntime"]
+__all__ = [
+    "R_OVERFLOW",
+    "OpVerdict",
+    "ShardedDFCRuntime",
+    "TrainRuntime",
+    "route_batch",
+    "sequential_sharded_reference",
+    "shard_of_keys",
+    "shard_of_keys_host",
+    "sharded_step",
+    "zipf_keys",
+]

@@ -1,0 +1,591 @@
+"""Sharded multi-object DFC runtime: one announcement fabric, many objects.
+
+The paper's Figure-3 result is that flat combining amortizes the expensive
+persistence instructions (pwb/pfence) across every op announced in a phase.
+This runtime amortizes across *objects* too, the way a serving tier shards
+traffic: ``n_shards`` homogeneous DFC structures (stack / queue / deque) live
+behind ONE announcement fabric, a key->shard router buckets each announced
+batch into per-shard op lists, and a single fused dispatch runs every
+shard's combining phase at once (``vmap`` for the jnp backend, a Pallas grid
+— one program instance per shard — for the kernel backends).
+
+State layout (see ``repro.core.jax_dfc.init_sharded``): every leaf of the
+structure state carries a leading shard axis, so the whole runtime is one
+stacked pytree — ``values[S, cap]``, ``size[S, 2]`` / ``ends[S, 2, 2]``, and
+crucially ``epoch[S]``: per-shard epochs.  Shards commit independently; a
+combine phase only advances the epoch of shards that actually received ops,
+so persistence work scales with touched shards, not with ``n_shards``.
+
+Routing determinism: the shard of a key is a pure function of the key
+(multiplicative hashing), and the lane of an op within its shard is its
+*batch-order rank* among the ops routed there (an exclusive prefix sum over
+the shard one-hot matrix).  Both are order-preserving and independent of
+array layout or backend, so the routed per-shard op lists — and therefore
+the combined linearization — are bit-identical across jnp / Pallas backends
+and across host replays: the flat batch order IS the announcement order.
+Overflowing ops (rank >= lanes) are cleanly rejected with ``R_OVERFLOW``
+before touching any shard, so one hot shard can never corrupt a neighbor.
+
+Persistence (``SimFS``-backed, pwb=write / pfence=fsync): per-thread
+double-buffered announcements exactly like the paper's ``tAnn`` (ann{0,1} +
+valid selector), per-shard double-buffered state slots selected by epoch
+parity, and a per-shard TWO-INCREMENT epoch commit (persist v+1, publish
+v+2 unsynced).  One phase orders its persistence as:
+
+  1. pwb the new state of every TOUCHED shard into its inactive slot,
+  2. pwb every combined announcement's responses (+ per-op shard targets),
+  3. ONE pfence over all of it,
+  4. per touched shard: pwb cEpoch=v+1, pfence, pwb cEpoch=v+2.
+
+A crash anywhere leaves every shard either at its old committed state or its
+new one; ``recover`` rebuilds all shards from their active slots and reports,
+for every thread and every announced op, whether it took effect (its shard's
+durable epoch reached the recorded target) — ops of shards that missed their
+commit are reported not-applied and can be re-announced, giving exactly-once
+semantics per op across the whole fabric.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import io
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.dfc_checkpoint import BOT, SimFS
+from repro.core.jax_dfc import (
+    OP_NONE,
+    R_NONE,
+    STRUCTS,
+    init_sharded,
+    shard_slice,
+    stack_shards,
+)
+from repro.kernels.dfc_reduce.ops import SHARDED_COMBINE_STEPS
+
+# runtime-level response kind: op rejected because its shard's announcement
+# lanes were full this phase — never applied, safe to re-announce.
+R_OVERFLOW = 4
+
+_HASH_MULT = 2654435761  # Knuth multiplicative hashing constant
+
+
+# ===================================================================== router
+def shard_of_keys(keys, n_shards: int):
+    """shard(key): multiplicative hash, identical on host and device."""
+    k = jnp.asarray(keys).astype(jnp.uint32)
+    h = k * jnp.uint32(_HASH_MULT)
+    h = h ^ (h >> jnp.uint32(16))
+    return (h % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def shard_of_keys_host(keys, n_shards: int) -> np.ndarray:
+    """NumPy twin of ``shard_of_keys`` for oracles and drivers."""
+    k = np.asarray(keys).astype(np.uint32)
+    h = k * np.uint32(_HASH_MULT)
+    h = h ^ (h >> np.uint32(16))
+    return (h % np.uint32(n_shards)).astype(np.int32)
+
+
+def zipf_keys(rng, n: int, universe: int, skew: float) -> np.ndarray:
+    """Zipfian key draw over a finite universe (skew=0 -> uniform) — the
+    serving-style workload used by the traffic driver and benchmarks."""
+    ranks = np.arange(1, universe + 1, dtype=np.float64)
+    p = ranks ** (-skew) if skew > 0 else np.ones(universe)
+    p /= p.sum()
+    return rng.choice(universe, size=n, p=p)
+
+
+@functools.partial(jax.jit, static_argnames=("n_shards", "lanes"))
+def route_batch(keys, ops, params, *, n_shards: int, lanes: int):
+    """Bucket a flat announced batch into per-shard op lists.
+
+    Returns ``(shard_ops i32[S, L], shard_params f32[S, L], shard i32[B],
+    lane i32[B], ok bool[B], overflow bool[B])``.  Lane assignment is the
+    op's batch-order rank among ops routed to its shard (stable: an exclusive
+    segment prefix sum over the shard one-hot matrix), so per-shard op lists
+    preserve announcement order deterministically.  Ops ranked past ``lanes``
+    overflow: they are dropped before touching any per-shard list.  OP_NONE
+    lanes are never routed.
+    """
+    b = ops.shape[0]
+    shard = shard_of_keys(keys, n_shards)
+    active = ops != OP_NONE
+    s_eff = jnp.where(active, shard, n_shards)  # n_shards == routed nowhere
+
+    # stable rank of op j within its shard: exclusive prefix sum per segment
+    onehot = (s_eff[None, :] == jnp.arange(n_shards)[:, None]).astype(jnp.int32)
+    rank_mat = jnp.cumsum(onehot, axis=1) - 1  # [S, B]
+    lane = rank_mat[jnp.clip(s_eff, 0, n_shards - 1), jnp.arange(b)]
+
+    ok = active & (lane < lanes)
+    overflow = active & (lane >= lanes)
+
+    # scatter into the per-shard announcement matrices; dest is injective
+    # over ok lanes, so the scatter is order-independent (deterministic)
+    dest = jnp.where(ok, s_eff * lanes + lane, n_shards * lanes)
+    flat_ops = (
+        jnp.full((n_shards * lanes,), OP_NONE, jnp.int32)
+        .at[dest]
+        .set(ops.astype(jnp.int32), mode="drop")
+    )
+    flat_params = (
+        jnp.zeros((n_shards * lanes,), jnp.float32)
+        .at[dest]
+        .set(params.astype(jnp.float32), mode="drop")
+    )
+    return (
+        flat_ops.reshape(n_shards, lanes),
+        flat_params.reshape(n_shards, lanes),
+        shard,
+        lane,
+        ok,
+        overflow,
+    )
+
+
+# ============================================================ fused step (jit)
+def _vmap_combine(kind: str):
+    return jax.vmap(STRUCTS[kind].combine)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "n_shards", "lanes", "backend")
+)
+def sharded_step(
+    state, keys, ops, params, meta, *, kind: str, n_shards: int, lanes: int,
+    backend: str = "jnp",
+):
+    """One fused end-to-end phase: route -> all-shard combine -> epoch publish.
+
+    ``meta`` is the per-shard combiner metadata ``{"phases": i32[S],
+    "ops_combined": i32[S]}``; untouched shards keep their old state (and old
+    epoch — no phantom phases), touched shards publish with a +2 epoch bump.
+    Returns ``(new_state, new_meta, responses f32[B], kinds i32[B])`` where
+    ``kinds`` uses the combine-level codes plus ``R_OVERFLOW``.
+    """
+    shard_ops, shard_params, shard, lane, ok, overflow = route_batch(
+        keys, ops, params, n_shards=n_shards, lanes=lanes
+    )
+
+    if backend == "jnp":
+        combined, s_resp, s_kinds = _vmap_combine(kind)(state, shard_ops, shard_params)
+    else:
+        combined, s_resp, s_kinds = SHARDED_COMBINE_STEPS[kind](
+            state, shard_ops, shard_params, backend=backend
+        )
+
+    # only shards that received ops publish; the rest keep state AND epoch
+    touched = jnp.any(shard_ops != OP_NONE, axis=1)  # bool[S]
+
+    def _select(new_leaf, old_leaf):
+        t = touched.reshape((n_shards,) + (1,) * (new_leaf.ndim - 1))
+        return jnp.where(t, new_leaf, old_leaf)
+
+    new_state = jax.tree_util.tree_map(_select, combined, state)
+    new_meta = {
+        "phases": meta["phases"] + touched.astype(jnp.int32),
+        "ops_combined": meta["ops_combined"]
+        + jnp.sum(
+            (shard_ops != OP_NONE).astype(jnp.int32), axis=1
+        ),
+    }
+
+    # gather responses back to flat batch order
+    s = jnp.clip(shard, 0, n_shards - 1)
+    ln = jnp.clip(lane, 0, lanes - 1)
+    responses = jnp.where(ok, s_resp[s, ln], 0.0)
+    kinds = jnp.where(ok, s_kinds[s, ln], R_NONE)
+    kinds = jnp.where(overflow, R_OVERFLOW, kinds)
+    return new_state, new_meta, responses, kinds
+
+
+# ============================================================== host oracle
+def sequential_sharded_reference(kind, shard_lists, keys, ops, params, lanes):
+    """Pure-Python witness of one sharded phase (test/bench oracle).
+
+    ``shard_lists`` is a list of per-shard Python structures; mutated in
+    place.  Returns (responses, kinds) in flat batch order, with overflow ops
+    reported as ``R_OVERFLOW`` and untouched.
+    """
+    n_shards = len(shard_lists)
+    ref = STRUCTS[kind].reference
+    shard = shard_of_keys_host(keys, n_shards)
+    b = len(ops)
+    responses = [0.0] * b
+    kinds = [R_NONE] * b
+    buckets: Dict[int, List[int]] = {}
+    for j in range(b):
+        if ops[j] == OP_NONE:
+            continue
+        s = int(shard[j])
+        rank = len(buckets.setdefault(s, []))
+        if rank >= lanes:
+            kinds[j] = R_OVERFLOW
+            continue
+        buckets[s].append(j)
+    for s, idxs in sorted(buckets.items()):
+        s_ops = [ops[j] for j in idxs]
+        s_par = [params[j] for j in idxs]
+        shard_lists[s], s_resp, s_kinds = ref(shard_lists[s], s_ops, s_par)
+        for r, (v, k) in zip(idxs, zip(s_resp, s_kinds)):
+            responses[r] = v
+            kinds[r] = k
+    return responses, kinds
+
+
+# ================================================================== runtime
+def _init_meta(n_shards: int):
+    return {
+        "phases": jnp.zeros((n_shards,), jnp.int32),
+        "ops_combined": jnp.zeros((n_shards,), jnp.int32),
+    }
+
+
+@dataclasses.dataclass
+class OpVerdict:
+    """Per-op detectability verdict reported by recovery."""
+
+    applied: bool
+    kind: Optional[int] = None
+    resp: Optional[float] = None
+    shard: Optional[int] = None
+
+
+class ShardedDFCRuntime:
+    """Many persistent DFC objects behind one announcement fabric.
+
+    Volatile fast path: ``step(keys, ops, params)`` — one jitted dispatch.
+    Durable path: threads ``announce`` batches; ``combine_phase`` combines
+    every ready announcement across all shards and commits per-shard;
+    ``recover`` rebuilds the fabric after a crash and reports per-thread,
+    per-op detectability verdicts.
+
+    Contract (inherited from the combine layer): per shard,
+    ``capacity >= committed size + lanes``.
+    """
+
+    def __init__(
+        self,
+        kind: str,
+        n_shards: int,
+        capacity: int,
+        lanes: int,
+        *,
+        backend: str = "jnp",
+        fs: Optional[SimFS] = None,
+        n_threads: int = 1,
+        state=None,
+        meta=None,
+    ):
+        if kind not in STRUCTS:
+            raise ValueError(f"unknown structure kind {kind!r}")
+        if lanes > capacity:
+            raise ValueError("lanes must be <= per-shard capacity")
+        self.kind = kind
+        self.n_shards = n_shards
+        self.capacity = capacity
+        self.lanes = lanes
+        self.backend = backend
+        self.fs = fs
+        self.n_threads = n_threads
+        self.state = init_sharded(kind, n_shards, capacity) if state is None else state
+        self.meta = _init_meta(n_shards) if meta is None else meta
+
+    # ------------------------------------------------------------- routing
+    def route(self, keys, ops, params):
+        return route_batch(
+            jnp.asarray(keys),
+            jnp.asarray(ops, jnp.int32),
+            jnp.asarray(params, jnp.float32),
+            n_shards=self.n_shards,
+            lanes=self.lanes,
+        )
+
+    # ------------------------------------------------------- volatile path
+    def step(self, keys, ops, params):
+        """One fused phase over a flat batch; returns (responses, kinds)."""
+        self.state, self.meta, resp, kinds = sharded_step(
+            self.state,
+            jnp.asarray(keys),
+            jnp.asarray(ops, jnp.int32),
+            jnp.asarray(params, jnp.float32),
+            self.meta,
+            kind=self.kind,
+            n_shards=self.n_shards,
+            lanes=self.lanes,
+            backend=self.backend,
+        )
+        return resp, kinds
+
+    # -------------------------------------------------------- announcements
+    def _ann_path(self, t: int, slot: int) -> str:
+        return f"tAnn/thread_{t}/ann{slot}.json"
+
+    def _valid_path(self, t: int) -> str:
+        return f"tAnn/thread_{t}/valid"
+
+    def _read_valid(self, t: int) -> int:
+        raw = self.fs.read(self._valid_path(t))
+        return int(raw.decode()) if raw else 0
+
+    def _read_ann(self, t: int, slot: int) -> Dict[str, Any]:
+        raw = self.fs.read(self._ann_path(t, slot))
+        return json.loads(raw.decode()) if raw else {"val": BOT, "token": -1}
+
+    def announce(self, thread: int, keys, ops, params, token: int) -> None:
+        """Thread-side announcement (paper lines 2-12): double-buffered
+        record + valid selector, parallel pwb/pfence, MSB publish."""
+        valid = self._read_valid(thread)
+        n_op = 1 - (valid & 1)
+        ann = {
+            "token": token,
+            "keys": [int(k) for k in np.asarray(keys)],
+            "ops": [int(o) for o in np.asarray(ops)],
+            "params": [float(p) for p in np.asarray(params)],
+            "val": BOT,
+        }
+        self.fs.write(self._ann_path(thread, n_op), json.dumps(ann).encode())
+        self.fs.fsync([self._ann_path(thread, n_op)])
+        self.fs.write(self._valid_path(thread), str(n_op).encode())
+        self.fs.fsync([self._valid_path(thread)])
+        self.fs.write(self._valid_path(thread), str(2 | n_op).encode())  # MSB
+
+    def ready_announcements(self) -> List[int]:
+        out = []
+        for t in range(self.n_threads):
+            v = self._read_valid(t)
+            if (v >> 1) & 1:
+                ann = self._read_ann(t, v & 1)
+                if ann.get("val") is BOT and ann.get("token", -1) >= 0:
+                    out.append(t)
+        return out
+
+    # ------------------------------------------------------ durable layout
+    def _epoch_path(self, s: int) -> str:
+        return f"shard_{s}/cEpoch"
+
+    def _slot_dir(self, s: int, epoch: int, nxt: bool) -> str:
+        return f"shard_{s}/slot{(epoch // 2 + (1 if nxt else 0)) % 2}"
+
+    def _read_shard_epoch(self, s: int) -> int:
+        raw = self.fs.read(self._epoch_path(s))
+        return int(raw.decode()) if raw else 0
+
+    def _persist_shard(self, s: int, epoch_target: int) -> List[str]:
+        """pwb shard ``s``'s post-combine state into its inactive slot."""
+        one = shard_slice(self.state, s)
+        slot = self._slot_dir(s, epoch_target - 2, nxt=True)
+        leaves, _ = jax.tree_util.tree_flatten(one)
+        files = []
+        meta = {
+            "kind": self.kind,
+            "epoch": epoch_target,
+            "leaves": [],
+            "phases": int(self.meta["phases"][s]),
+            "ops_combined": int(self.meta["ops_combined"][s]),
+        }
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            buf = io.BytesIO()
+            np.save(buf, arr)
+            rel = f"{slot}/leaf_{i}.npy"
+            self.fs.write(rel, buf.getvalue())
+            files.append(rel)
+            meta["leaves"].append(
+                {"file": f"leaf_{i}.npy", "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            )
+        rel = f"{slot}/meta.json"
+        self.fs.write(rel, json.dumps(meta).encode())
+        files.append(rel)
+        return files
+
+    # --------------------------------------------------------- combine phase
+    def combine_phase(self) -> List[int]:
+        """One durable combining phase over every ready announcement.
+
+        Concatenates the announced batches (announcement order = thread id
+        order — the combiner's walk over the announcement array), runs the
+        fused device step, persists every touched shard into its inactive
+        slot, writes responses + per-op commit targets into the combined
+        announcements, pfences ONCE, then commits each touched shard's epoch
+        with the two-increment protocol.  Returns the combined thread ids.
+        """
+        assert self.fs is not None, "combine_phase needs a SimFS"
+        ready = self.ready_announcements()
+        if not ready:
+            return []
+        anns = {t: self._read_ann(t, self._read_valid(t) & 1) for t in ready}
+        keys = np.concatenate([np.asarray(anns[t]["keys"], np.int64) for t in ready])
+        ops = np.concatenate([np.asarray(anns[t]["ops"], np.int32) for t in ready])
+        params = np.concatenate(
+            [np.asarray(anns[t]["params"], np.float32) for t in ready]
+        )
+
+        epochs_before = np.asarray(self.state.epoch)
+        resp, kinds = self.step(keys, ops, params)
+        resp = np.asarray(resp)
+        kinds = np.asarray(kinds)
+        epochs_after = np.asarray(self.state.epoch)
+        touched = [int(s) for s in np.nonzero(epochs_after != epochs_before)[0]]
+        shard = shard_of_keys_host(keys, self.n_shards)
+        targets = epochs_after[shard]  # per-op commit target (its shard)
+
+        files: List[str] = []
+        for s in touched:
+            files += self._persist_shard(s, int(epochs_after[s]))
+
+        # responses + per-op (shard, target) into the combined announcements
+        off = 0
+        for t in ready:
+            n_t = len(anns[t]["ops"])
+            sl = slice(off, off + n_t)
+            anns[t]["val"] = {
+                "resp": [float(v) for v in resp[sl]],
+                "kinds": [int(k) for k in kinds[sl]],
+                "shards": [int(s) for s in shard[sl]],
+                "targets": [int(e) for e in targets[sl]],
+            }
+            rel = self._ann_path(t, self._read_valid(t) & 1)
+            self.fs.write(rel, json.dumps(anns[t]).encode())
+            files.append(rel)
+            off += n_t
+
+        self.fs.fsync(files)  # ONE pfence for slots + responses
+        for s in touched:  # per-shard two-increment epoch commit
+            e = int(epochs_after[s])
+            self.fs.write(self._epoch_path(s), str(e - 1).encode())
+            self.fs.fsync([self._epoch_path(s)])
+            self.fs.write(self._epoch_path(s), str(e).encode())
+        return ready
+
+    def read_responses(self, thread: int) -> Optional[Dict[str, Any]]:
+        """A thread's combined announcement, or None while still pending.
+
+        Returns ``{"token", "resp", "kinds", "shards", "targets"}`` — the
+        durable response record written by the last combine_phase that
+        included this thread's announcement.
+        """
+        ann = self._read_ann(thread, self._read_valid(thread) & 1)
+        if ann.get("val") is BOT:
+            return None
+        return dict(ann["val"], token=ann["token"])
+
+    # -------------------------------------------------------------- recover
+    @classmethod
+    def recover(
+        cls,
+        fs: SimFS,
+        *,
+        kind: str,
+        n_shards: int,
+        capacity: int,
+        lanes: int,
+        backend: str = "jnp",
+        n_threads: int = 1,
+    ) -> Tuple["ShardedDFCRuntime", Dict[int, Dict[str, Any]]]:
+        """Recover every shard + per-thread/per-op detectability report.
+
+        Per shard: round an odd durable epoch up to even (finish the
+        interrupted second increment), garbage-collect the inactive slot,
+        and reload the active slot (or a fresh init when the shard never
+        committed).  Per announced op: applied iff its shard's committed
+        epoch reached the target recorded with the response; everything else
+        is reported not-applied and is safe to re-announce.
+        """
+        rt = cls(
+            kind, n_shards, capacity, lanes,
+            backend=backend, fs=fs, n_threads=n_threads,
+        )
+        shard_states = []
+        phases = np.zeros((n_shards,), np.int32)
+        ops_combined = np.zeros((n_shards,), np.int32)
+        committed_epochs = np.zeros((n_shards,), np.int64)
+        fresh = STRUCTS[kind].init(capacity)
+        for s in range(n_shards):
+            epoch = rt._read_shard_epoch(s)
+            if epoch % 2 == 1:  # crashed between the two increments
+                epoch += 1
+                fs.write(rt._epoch_path(s), str(epoch).encode())
+                fs.fsync([rt._epoch_path(s)])
+            committed_epochs[s] = epoch
+            active = rt._slot_dir(s, epoch, nxt=False)
+            inactive = rt._slot_dir(s, epoch, nxt=True)
+            meta_raw = fs.read_durable(f"{active}/meta.json")
+            live = {f"{active}/meta.json"}
+            if meta_raw:
+                meta = json.loads(meta_raw.decode())
+                live |= {f"{active}/{e['file']}" for e in meta["leaves"]}
+                leaves = [
+                    np.load(io.BytesIO(fs.read_durable(f"{active}/{e['file']}")))
+                    for e in meta["leaves"]
+                ]
+                treedef = jax.tree_util.tree_structure(fresh)
+                shard_states.append(
+                    jax.tree_util.tree_unflatten(
+                        treedef, [jnp.asarray(leaf) for leaf in leaves]
+                    )
+                )
+                phases[s] = meta.get("phases", 0)
+                ops_combined[s] = meta.get("ops_combined", 0)
+            else:
+                shard_states.append(fresh)
+            # GC: drop partial writes of the interrupted phase
+            for rel in list(fs.listdir(active)) + list(fs.listdir(inactive)):
+                if rel not in live:
+                    fs.delete(rel)
+
+        rt.state = stack_shards(shard_states)
+        rt.meta = {
+            "phases": jnp.asarray(phases),
+            "ops_combined": jnp.asarray(ops_combined),
+        }
+
+        report: Dict[int, Dict[str, Any]] = {}
+        for t in range(n_threads):
+            v = rt._read_valid(t)
+            lsb = v & 1
+            if (v >> 1) & 1 == 0:  # re-publish a half-written valid selector
+                fs.write(rt._valid_path(t), str(2 | lsb).encode())
+            ann = rt._read_ann(t, lsb)
+            if ann.get("token", -1) < 0:
+                report[t] = {"token": None, "ops": []}
+                continue
+            verdicts: List[OpVerdict] = []
+            val = ann.get("val")
+            n_ops = len(ann.get("ops", []))
+            if val is BOT:
+                verdicts = [OpVerdict(applied=False) for _ in range(n_ops)]
+            else:
+                for i in range(n_ops):
+                    s = val["shards"][i]
+                    k = val["kinds"][i]
+                    committed = committed_epochs[s] >= val["targets"][i]
+                    applied = bool(committed) and k != R_OVERFLOW and k != R_NONE
+                    verdicts.append(
+                        OpVerdict(
+                            applied=applied,
+                            kind=k if committed else None,
+                            resp=val["resp"][i] if committed else None,
+                            shard=s,
+                        )
+                    )
+            report[t] = {"token": ann["token"], "ops": verdicts}
+        return rt, report
+
+    # -------------------------------------------------------------- helpers
+    def shard_contents(self, s: int) -> List[float]:
+        """Committed contents of shard ``s`` (bottom-to-top / left-to-right)."""
+        one = shard_slice(self.state, s)
+        if self.kind == "stack":
+            top = int(one.active_size())
+            return [float(v) for v in np.asarray(one.values[:top])]
+        cap = one.values.shape[0]
+        e = one.active_ends()
+        return [float(one.values[i % cap]) for i in range(int(e[0]), int(e[1]))]

@@ -1,0 +1,398 @@
+"""Sharded multi-object DFC runtime: router determinism + edge cases, fused
+all-shard combine vs per-shard sequential oracles (all three structures, all
+backends), and a persistence-op crash sweep verifying that every announced op
+either took effect exactly once or is reported not-applied by recovery —
+including phases where only SOME shards committed."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.dfc_checkpoint import CrashNow, FaultInjector, SimFS
+from repro.core.jax_dfc import (
+    OP_ENQ,
+    OP_NONE,
+    R_ACK,
+    R_NONE,
+    STRUCTS,
+)
+from repro.runtime.dfc_shard import (
+    R_OVERFLOW,
+    ShardedDFCRuntime,
+    route_batch,
+    sequential_sharded_reference,
+    shard_of_keys,
+    shard_of_keys_host,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+KINDS = [("stack", 3), ("queue", 3), ("deque", 5)]
+S, CAP, LANES, THREADS, B = 8, 128, 12, 2, 8
+
+
+# ==================================================================== router
+def test_hash_host_device_agree():
+    keys = np.random.default_rng(0).integers(0, 2**31, 512)
+    np.testing.assert_array_equal(
+        np.asarray(shard_of_keys(jnp.asarray(keys), 8)), shard_of_keys_host(keys, 8)
+    )
+
+
+def test_router_stable_batch_order():
+    """Lane assignment within a shard is the op's batch-order rank."""
+    keys = jnp.asarray([5, 9, 5, 5, 9], jnp.int32)
+    ops = jnp.full((5,), OP_ENQ, jnp.int32)
+    params = jnp.arange(1.0, 6.0)
+    shard_ops, shard_params, shard, lane, ok, overflow = route_batch(
+        keys, ops, params, n_shards=4, lanes=4
+    )
+    s5 = int(shard_of_keys_host(np.asarray([5]), 4)[0])
+    s9 = int(shard_of_keys_host(np.asarray([9]), 4)[0])
+    assert s5 != s9  # the two keys spread for this shard count
+    # batch order preserved per shard
+    np.testing.assert_allclose(np.asarray(shard_params[s5, :3]), [1.0, 3.0, 4.0])
+    np.testing.assert_allclose(np.asarray(shard_params[s9, :2]), [2.0, 5.0])
+    assert list(np.asarray(lane)) == [0, 0, 1, 2, 1]
+    assert bool(jnp.all(ok)) and not bool(jnp.any(overflow))
+    # rerouting is bit-identical (deterministic)
+    again = route_batch(keys, ops, params, n_shards=4, lanes=4)
+    np.testing.assert_array_equal(np.asarray(shard_ops), np.asarray(again[0]))
+
+
+def test_router_none_lanes_not_routed():
+    keys = jnp.zeros((6,), jnp.int32)
+    ops = jnp.asarray([OP_NONE, OP_ENQ, OP_NONE, OP_ENQ, OP_NONE, OP_ENQ], jnp.int32)
+    shard_ops, _, _, _, ok, overflow = route_batch(
+        keys, ops, jnp.arange(6.0), n_shards=4, lanes=4
+    )
+    assert int(jnp.sum(shard_ops != OP_NONE)) == 3
+    assert list(np.asarray(ok)) == [False, True, False, True, False, True]
+    assert not bool(jnp.any(overflow))
+
+
+def test_empty_shards_keep_state_and_epoch():
+    """Shards that receive no ops in a batch advance neither state nor epoch."""
+    rt = ShardedDFCRuntime("stack", S, CAP, LANES)
+    key = 3
+    s_hot = int(shard_of_keys_host(np.asarray([key]), S)[0])
+    resp, kinds = rt.step([key] * 4, [1] * 4, [1.0, 2.0, 3.0, 4.0])
+    epochs = np.asarray(rt.state.epoch)
+    assert epochs[s_hot] == 2
+    assert all(epochs[s] == 0 for s in range(S) if s != s_hot)
+    assert all(rt.shard_contents(s) == [] for s in range(S) if s != s_hot)
+    assert int(rt.meta["phases"][s_hot]) == 1
+    assert int(np.sum(np.asarray(rt.meta["phases"]))) == 1
+
+
+@pytest.mark.parametrize("kind,opmax", KINDS)
+def test_all_ops_one_shard(kind, opmax):
+    """Everything hashing to one shard still matches the oracle."""
+    rng = np.random.default_rng(11)
+    rt = ShardedDFCRuntime(kind, S, CAP, LANES)
+    oracle = [[] for _ in range(S)]
+    for _ in range(3):
+        ops = rng.integers(1, opmax, LANES)
+        params = (rng.random(LANES) * 100).round(2)
+        keys = np.full((LANES,), 7)
+        resp, kinds = rt.step(keys, ops, params)
+        eresp, ekinds = sequential_sharded_reference(
+            kind, oracle, keys, ops.tolist(), params.tolist(), LANES
+        )
+        np.testing.assert_array_equal(np.asarray(kinds), ekinds)
+        np.testing.assert_allclose(np.asarray(resp), np.asarray(eresp, np.float32), rtol=1e-6)
+    s_hot = int(shard_of_keys_host(np.asarray([7]), S)[0])
+    for s in range(S):
+        np.testing.assert_allclose(rt.shard_contents(s), oracle[s])
+        if s != s_hot:
+            assert oracle[s] == []
+
+
+def test_overflow_fails_cleanly_neighbors_intact():
+    """A batch bigger than a shard's lanes: the eligible prefix is applied,
+    the rest report R_OVERFLOW, and other shards are untouched by the spill."""
+    rt = ShardedDFCRuntime("queue", S, CAP, lanes=4)
+    hot, cold = 7, 9
+    s_hot = int(shard_of_keys_host(np.asarray([hot]), S)[0])
+    s_cold = int(shard_of_keys_host(np.asarray([cold]), S)[0])
+    assert s_hot != s_cold
+    keys = [hot] * 10 + [cold]
+    ops = [OP_ENQ] * 11
+    params = [float(i) for i in range(1, 12)]
+    resp, kinds = rt.step(keys, ops, params)
+    kinds = list(np.asarray(kinds))
+    assert kinds[:4] == [R_ACK] * 4  # first `lanes` ops applied in batch order
+    assert kinds[4:10] == [R_OVERFLOW] * 6  # the spill is rejected...
+    assert kinds[10] == R_ACK
+    assert rt.shard_contents(s_hot) == [1.0, 2.0, 3.0, 4.0]
+    assert rt.shard_contents(s_cold) == [11.0]  # ...and never leaks next door
+    # a rejected op left no trace: re-announcing it applies exactly once
+    resp2, kinds2 = rt.step([hot], [OP_ENQ], [5.0])
+    assert list(np.asarray(kinds2)) == [R_ACK]
+    assert rt.shard_contents(s_hot) == [1.0, 2.0, 3.0, 4.0, 5.0]
+
+
+# ======================================================= fused combine (jit)
+@pytest.mark.parametrize("kind,opmax", KINDS)
+@pytest.mark.parametrize("backend", ["jnp", "ref", "pallas"])
+def test_sharded_step_matches_oracle_randomized(kind, opmax, backend):
+    """Acceptance: the jitted route->combine->publish step over 8 shards
+    matches the per-shard sequential oracles under a randomized op sweep."""
+    rng = np.random.default_rng(hash((kind, backend)) % 2**32)
+    rt = ShardedDFCRuntime(kind, S, 256, 32, backend=backend)
+    oracle = [[] for _ in range(S)]
+    for phase in range(4):
+        n = 48
+        keys = rng.integers(0, 1000, n)
+        ops = rng.integers(0, opmax, n)  # includes OP_NONE lanes
+        params = (rng.random(n) * 100).round(2)
+        resp, kinds = rt.step(keys, ops, params)
+        eresp, ekinds = sequential_sharded_reference(
+            kind, oracle, keys, ops.tolist(), params.tolist(), 32
+        )
+        np.testing.assert_array_equal(np.asarray(kinds), ekinds)
+        np.testing.assert_allclose(
+            np.asarray(resp), np.asarray(eresp, np.float32), rtol=1e-6
+        )
+    for s in range(S):
+        np.testing.assert_allclose(rt.shard_contents(s), oracle[s])
+    epochs = np.asarray(rt.state.epoch)
+    assert all(e % 2 == 0 for e in epochs)
+
+
+# ============================================================== crash sweep
+def _routed_bucket_lists(keys, ops, params, n_shards, lanes):
+    """Host routing: per-shard (op, param) lists + per-op (shard, overflow)."""
+    shard = shard_of_keys_host(keys, n_shards)
+    buckets = {s: [] for s in range(n_shards)}
+    meta = []
+    for j in range(len(ops)):
+        if ops[j] == OP_NONE:
+            meta.append((None, False))
+            continue
+        s = int(shard[j])
+        if len(buckets[s]) >= lanes:
+            meta.append((s, True))
+            continue
+        buckets[s].append((int(ops[j]), float(params[j])))
+        meta.append((s, False))
+    return buckets, meta
+
+
+def _run_sharded_with_crash(tmp_path, kind, opmax, crash_at, n_phases=3):
+    """Run ``n_phases`` announce+combine rounds, crash at persistence op
+    ``crash_at``; return everything needed for post-crash verification."""
+    inj = FaultInjector(crash_at=crash_at)
+    fs = SimFS(tmp_path, inj)
+    rt = ShardedDFCRuntime(kind, S, CAP, LANES, fs=fs, n_threads=THREADS)
+    rng = np.random.default_rng(hash(kind) % 2**32)
+    oracle = [[] for _ in range(S)]  # state after every COMPLETED phase
+    token = 0
+    by_token = {}  # token -> (thread, keys, ops, params)
+    completed = set()  # tokens of fully-committed phases
+    crashed = False
+    try:
+        for phase in range(n_phases):
+            phase_tokens = []
+            batches = []
+            for t in range(THREADS):
+                token += 1
+                keys = rng.integers(0, 1000, B)
+                ops = rng.integers(0, opmax, B)
+                params = (rng.random(B) * 100).round(2)
+                by_token[token] = (t, keys, ops, params)
+                batches.append((t, token, keys, ops, params))
+                phase_tokens.append(token)
+            for t, tok, keys, ops, params in batches:
+                rt.announce(t, keys, ops, params, token=tok)
+            rt.combine_phase()
+            # fully committed -> advance the oracle and check responses
+            flat_keys = np.concatenate([b[2] for b in batches])
+            flat_ops = np.concatenate([b[3] for b in batches])
+            flat_par = np.concatenate([b[4] for b in batches])
+            eresp, ekinds = sequential_sharded_reference(
+                kind, oracle, flat_keys, flat_ops.tolist(), flat_par.tolist(), LANES
+            )
+            off = 0
+            for t, tok, keys, ops, params in batches:
+                ann = rt._read_ann(t, rt._read_valid(t) & 1)
+                assert ann["token"] == tok and ann["val"] is not None
+                np.testing.assert_array_equal(
+                    ann["val"]["kinds"], ekinds[off : off + B]
+                )
+                np.testing.assert_allclose(
+                    ann["val"]["resp"],
+                    np.asarray(eresp[off : off + B], np.float32),
+                    rtol=1e-6,
+                )
+                off += B
+            completed.update(phase_tokens)
+    except CrashNow:
+        crashed = True
+    fs2 = fs.crash()
+    rt2, report = ShardedDFCRuntime.recover(
+        fs2, kind=kind, n_shards=S, capacity=CAP, lanes=LANES, n_threads=THREADS
+    )
+    return crashed, rt2, report, oracle, by_token, completed, inj.count
+
+
+def _verify_crash_outcome(kind, rt2, report, oracle, by_token, completed):
+    """Every announced op either took effect exactly once or is reported
+    not-applied; the recovered state is the oracle state of exactly the
+    applied ops."""
+    # which tokens does the report cover, and was that phase interrupted?
+    interrupted = {}
+    for t, r in report.items():
+        if r["token"] is None or r["token"] in completed:
+            continue
+        interrupted[t] = r["token"]
+    if interrupted:
+        # combine_phase concatenates ready announcements in thread order; an
+        # interrupted COMBINE saw every thread's phase announcement, an
+        # interrupted ANNOUNCE saw none (combine never ran)
+        verdicts = {t: report[t]["ops"] for t in interrupted}
+        flat_keys = np.concatenate([by_token[interrupted[t]][1] for t in sorted(interrupted)])
+        flat_ops = np.concatenate([by_token[interrupted[t]][2] for t in sorted(interrupted)])
+        flat_par = np.concatenate([by_token[interrupted[t]][3] for t in sorted(interrupted)])
+        flat_verdicts = []
+        for t in sorted(interrupted):
+            flat_verdicts += report[t]["ops"]
+        if len(flat_verdicts) == len(flat_ops) and len(interrupted) == THREADS:
+            buckets, meta = _routed_bucket_lists(flat_keys, flat_ops, flat_par, S, LANES)
+            # per-shard commit verdict must be all-or-nothing
+            shard_applied = {}
+            for (s, ovf), v in zip(meta, flat_verdicts):
+                if s is None or ovf:
+                    assert not v.applied
+                    continue
+                shard_applied.setdefault(s, v.applied)
+                assert shard_applied[s] == v.applied, "split verdict inside one shard"
+            # apply exactly the committed shards' op lists to the oracle
+            ref = STRUCTS[kind].reference
+            for s, items in buckets.items():
+                if items and shard_applied.get(s, False):
+                    ops_s = [o for o, _ in items]
+                    par_s = [p for _, p in items]
+                    oracle[s], _, _ = ref(oracle[s], ops_s, par_s)
+        else:
+            # interrupted during ANNOUNCE: combine never ran, nothing applied
+            assert all(not v.applied for vs in verdicts.values() for v in vs)
+    # recovered fabric == oracle with exactly the applied ops
+    for s in range(S):
+        np.testing.assert_allclose(rt2.shard_contents(s), oracle[s])
+    epochs = np.asarray(rt2.state.epoch)
+    assert all(int(e) % 2 == 0 for e in epochs)
+
+
+@pytest.mark.parametrize("kind,opmax", KINDS)
+def test_crash_sweep_exactly_once_or_not_applied(tmp_path, kind, opmax):
+    """Sweep crash points across every persistence op of the workload."""
+    # dry run to count persistence ops
+    crashed, *_, total = _run_sharded_with_crash(tmp_path / "dry", kind, opmax, None)
+    assert not crashed
+    assert total > 50
+    for k in range(1, total + 1, 5):
+        crashed, rt2, report, oracle, by_token, completed, _ = _run_sharded_with_crash(
+            tmp_path / f"k{k}", kind, opmax, k
+        )
+        assert crashed
+        _verify_crash_outcome(kind, rt2, report, oracle, by_token, completed)
+
+
+def test_crash_mid_epoch_commits_splits_shards(tmp_path):
+    """Crash between two shards' epoch commits: the committed shard's ops are
+    applied, the missed shard's ops are reported not-applied, and BOTH
+    recover to consistent states (one new, one old)."""
+    hot, cold = 7, 9  # two keys on different shards (see overflow test)
+    s_hot = int(shard_of_keys_host(np.asarray([hot]), S)[0])
+    s_cold = int(shard_of_keys_host(np.asarray([cold]), S)[0])
+    keys = np.asarray([hot, cold, hot, cold])
+    ops = np.asarray([OP_ENQ] * 4)
+    params = np.asarray([1.0, 2.0, 3.0, 4.0])
+
+    def run(crash_at):
+        inj = FaultInjector(crash_at=crash_at)
+        fs = SimFS(tmp_path / f"c{crash_at}", inj)
+        rt = ShardedDFCRuntime("queue", S, CAP, LANES, fs=fs, n_threads=1)
+        crashed = False
+        try:
+            rt.announce(0, keys, ops, params, token=1)
+            rt.combine_phase()
+        except CrashNow:
+            crashed = True
+        return crashed, inj.count, fs
+
+    # dry run: find the tick of the first epoch-commit write (2 shards touched
+    # -> last 6 ticks are the two commits: write, fsync, write each)
+    crashed, total, _ = run(None)
+    assert not crashed
+    first_commit_tick = total - 6
+    # crash INSIDE the second shard's commit: first shard committed, second not
+    crashed, _, fs = run(first_commit_tick + 4)
+    assert crashed
+    rt2, report = ShardedDFCRuntime.recover(
+        fs.crash(), kind="queue", n_shards=S, capacity=CAP, lanes=LANES, n_threads=1
+    )
+    verdicts = report[0]["ops"]
+    applied = {v.shard for v in verdicts if v.applied}
+    missed = {v.shard for v in verdicts if not v.applied}
+    assert len(applied) == 1 and len(missed) == 1  # split across the shards
+    assert applied | missed == {s_hot, s_cold}
+    (s_ok,) = applied
+    (s_no,) = missed
+    expect = {s_hot: [1.0, 3.0], s_cold: [2.0, 4.0]}
+    np.testing.assert_allclose(rt2.shard_contents(s_ok), expect[s_ok])
+    assert rt2.shard_contents(s_no) == []  # rolled back whole, not corrupted
+    # responses of the committed shard are durable and correct
+    for v in verdicts:
+        if v.applied:
+            assert v.kind == R_ACK
+
+
+def test_resume_after_crash_is_exactly_once(tmp_path):
+    """Re-announcing exactly the not-applied ops after recovery yields every
+    value in the fabric exactly once (no loss, no duplication)."""
+    rng = np.random.default_rng(5)
+    values = [float(v) for v in range(1, 2 * B + 1)]
+    keys = rng.integers(0, 1000, 2 * B)
+
+    for crash_at in range(1, 120, 7):
+        inj = FaultInjector(crash_at=crash_at)
+        fs = SimFS(tmp_path / f"k{crash_at}", inj)
+        rt = ShardedDFCRuntime("queue", S, CAP, LANES, fs=fs, n_threads=THREADS)
+        try:
+            for t in range(THREADS):
+                sl = slice(t * B, (t + 1) * B)
+                rt.announce(
+                    t, keys[sl], [OP_ENQ] * B, values[sl], token=t + 1
+                )
+            rt.combine_phase()
+        except CrashNow:
+            pass
+        rt2, report = ShardedDFCRuntime.recover(
+            fs.crash(), kind="queue", n_shards=S, capacity=CAP, lanes=LANES,
+            n_threads=THREADS,
+        )
+        # re-announce only what recovery reports as not applied
+        for t in range(THREADS):
+            sl = slice(t * B, (t + 1) * B)
+            r = report[t]
+            if r["token"] is None:  # announcement never surfaced
+                redo = list(range(B))
+            else:
+                assert r["token"] == t + 1
+                redo = (
+                    list(range(B))
+                    if not r["ops"]
+                    else [i for i, v in enumerate(r["ops"]) if not v.applied]
+                )
+            if redo:
+                rt2.step(
+                    np.asarray(keys[sl])[redo],
+                    [OP_ENQ] * len(redo),
+                    np.asarray(values[sl])[redo],
+                )
+        fabric = sorted(sum((rt2.shard_contents(s) for s in range(S)), []))
+        assert fabric == values, f"crash_at={crash_at}"
