@@ -1,0 +1,125 @@
+"""Dynamic resharding: pwb/op and throughput before / during / after.
+
+The reshard transaction (``split_shard`` / ``merge_shards``) buys routing
+balance with a burst of persistence work: a donor snapshot (via
+``combine_structure``), an intent record, the rewritten shard slots (merge),
+a routing-slot write, and two two-increment epoch commits.  This bench
+quantifies the trade under Zipf load on a durable fabric:
+
+  * BEFORE: skewed traffic concentrates on the hot shard — good pwb/op
+    (few touched shards per phase) but overflow grows with skew;
+  * DURING: one window that contains a split of the hottest shard (and, in
+    the full grid, a later merge of the two coldest) — pwb/op spikes by the
+    transaction cost;
+  * AFTER: the hot key range is spread over donor + new shard — overflow
+    drops, touched-shards/phase (and so pwb/op) rises slightly: the paper's
+    Figure-3 amortization traded against balance.
+
+Emits ``name,value,derived`` rows via ``emit`` and (as a script) writes the
+window-level result set to ``BENCH_reshard.json``.  ``--smoke`` runs a
+seconds-scale subset on CPU jax — wired into CI so resharding cannot rot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.checkpoint.dfc_checkpoint import SimFS
+from repro.runtime.dfc_shard import R_OVERFLOW, ShardedDFCRuntime, zipf_keys
+
+
+def _window(rt, fs, rng, batch, phases, token0):
+    """Drive ``phases`` durable announce+combine rounds; return metrics."""
+    pwb0, pf0 = fs.stats["pwb"], fs.stats["pfence"]
+    applied = overflow = 0
+    t0 = time.perf_counter()
+    for i in range(phases):
+        keys = zipf_keys(rng, batch, 4096, 1.2)
+        ops = rng.integers(1, 3, batch)
+        params = rng.random(batch).astype(np.float32)
+        rt.announce(0, keys, ops, params, token=token0 + i)
+        rt.combine_phase()
+        kinds = np.asarray(rt.read_responses(0)["kinds"])
+        applied += int(np.sum(kinds != R_OVERFLOW))
+        overflow += int(np.sum(kinds == R_OVERFLOW))
+    dt = time.perf_counter() - t0
+    return {
+        "ops_per_s": applied / dt,
+        "pwb_per_op": (fs.stats["pwb"] - pwb0) / max(applied, 1),
+        "pfence_per_op": (fs.stats["pfence"] - pf0) / max(applied, 1),
+        "overflow": overflow,
+        "n_shards": rt.n_shards,
+    }
+
+
+def _one_config(n_shards, batch, phases, do_merge, results, emit):
+    rng = np.random.default_rng(0)
+    lanes = batch // 2  # tight lanes so the hot shard visibly overflows
+    capacity = batch * (3 * phases + 2)
+    root = Path(tempfile.mkdtemp(prefix="dfc_bench_reshard_"))
+    try:
+        fs = SimFS(root)
+        rt = ShardedDFCRuntime(
+            "queue", n_shards, capacity, lanes, fs=fs, n_threads=1,
+            n_buckets=8 * n_shards,
+        )
+        windows = {}
+        windows["before"] = _window(rt, fs, rng, batch, phases, 1)
+
+        pwb0 = fs.stats["pwb"]
+        hot = int(np.argmax(np.asarray(rt.meta["ops_combined"])))
+        rt.split_shard(hot)
+        if do_merge:
+            sizes = rt.shard_sizes()
+            cold = np.argsort(sizes)[:2]
+            rt.merge_shards(int(cold[1]), int(cold[0]))
+        reshard_pwb = fs.stats["pwb"] - pwb0
+        windows["during"] = _window(rt, fs, rng, batch, phases, phases + 1)
+        windows["during"]["reshard_pwb"] = reshard_pwb
+        windows["after"] = _window(rt, fs, rng, batch, phases, 2 * phases + 1)
+
+        for w, m in windows.items():
+            name = f"reshard_s{n_shards}{'_merge' if do_merge else ''}_{w}"
+            emit(
+                name,
+                f"{m['ops_per_s']:.0f}",
+                f"ops/s,pwb/op={m['pwb_per_op']:.2f},overflow={m['overflow']}",
+            )
+            results.append(
+                dict(m, window=w, base_shards=n_shards, merge=do_merge, batch=batch)
+            )
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def run(emit, smoke: bool = False):
+    results = []
+    grid = [(4, False)] if smoke else [(4, False), (4, True), (16, False), (16, True)]
+    batch, phases = (64, 4) if smoke else (256, 10)
+    for n_shards, do_merge in grid:
+        _one_config(n_shards, batch, phases, do_merge, results, emit)
+    return results
+
+
+def main(emit, smoke: bool = True):
+    """Benchmark-harness entry point (smoke-sized by default: run.py and CI
+    both call this; the full grid is `python bench_reshard.py` without
+    --smoke)."""
+    return run(emit, smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="seconds-scale CI subset")
+    ap.add_argument("--out", default="BENCH_reshard.json", help="JSON results path")
+    args = ap.parse_args()
+    rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)
+    Path(args.out).write_text(json.dumps(rows, indent=2) + "\n")
+    print(f"# wrote {args.out} ({len(rows)} configs)")

@@ -7,7 +7,11 @@ Prints ``name,value,derived`` CSV.  Figures:
   jax    vectorized combine timings         bench_jax_combine
   ckpt   DFC-Checkpoint combining           bench_checkpoint
   shard  sharded multi-object runtime       bench_sharded (smoke grid)
+  reshard  split/merge before-during-after  bench_reshard (smoke grid)
   roofline  per-cell fractions (from dry-run artifacts, if present)
+
+The bench story (what each module measures, the BENCH_*.json schema) is
+documented in docs/benchmarks.md.
 
 Every ``benchmarks/bench_*.py`` module is discovered from ONE registry
 (``discover_benches``) built from the directory contents, so adding a bench

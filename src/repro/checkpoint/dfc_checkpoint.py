@@ -139,26 +139,35 @@ class DFCCheckpointManager:
     returns each worker's detectability verdict.
     """
 
-    def __init__(self, fs: SimFS, n_workers: int):
+    def __init__(self, fs: SimFS, n_workers: int, prefix: str = ""):
+        """``prefix`` roots every durable path of this manager under a
+        subdirectory of ``fs`` — multiple managers (e.g. a sharded fabric
+        plus its reshard donor-snapshot log) can then share ONE SimFS, so
+        fault injection sweeps tick through every manager's persistence ops.
+        """
         self.fs = fs
         self.n = n_workers
+        self.prefix = prefix if (not prefix or prefix.endswith("/")) else prefix + "/"
+
+    def _rel(self, rel: str) -> str:
+        return self.prefix + rel
 
     # ------------------------------------------------------------- epoch I/O
     def _read_epoch(self) -> int:
-        raw = self.fs.read("cEpoch")
+        raw = self.fs.read(self._rel("cEpoch"))
         return int(raw.decode()) if raw else 0
 
     def _write_epoch(self, v: int, sync: bool) -> None:
-        self.fs.write("cEpoch", str(v).encode())
+        self.fs.write(self._rel("cEpoch"), str(v).encode())
         if sync:
-            self.fs.fsync(["cEpoch"])
+            self.fs.fsync([self._rel("cEpoch")])
 
     # ---------------------------------------------------------- announcements
     def _ann_path(self, w: int, slot: int) -> str:
-        return f"tAnn/worker_{w}/ann{slot}.json"
+        return self._rel(f"tAnn/worker_{w}/ann{slot}.json")
 
     def _valid_path(self, w: int) -> str:
-        return f"tAnn/worker_{w}/valid"
+        return self._rel(f"tAnn/worker_{w}/valid")
 
     def _read_valid(self, w: int) -> int:
         raw = self.fs.read(self._valid_path(w))
@@ -195,7 +204,7 @@ class DFCCheckpointManager:
     # ---------------------------------------------------------------- combine
     def _slot_dir(self, epoch: int, nxt: bool) -> str:
         idx = (epoch // 2 + (1 if nxt else 0)) % 2
-        return f"top/slot{idx}"
+        return self._rel(f"top/slot{idx}")
 
     def combine(self, state_tree, extra_meta: Optional[Dict] = None) -> List[int]:
         """One combining phase: persist `state_tree` into the inactive slot

@@ -20,6 +20,26 @@ all three of the paper's structures — stack, FIFO queue (`dfc_queue`), and
 double-ended queue (`dfc_deque`) — via :class:`DFCBase`; only REDUCE/COMBINE
 (Algorithm 2) and the double-buffered root pointers differ per structure.
 
+Paper correspondence (mechanism -> pseudocode of arXiv:2012.12868):
+  * announce + publish:        Alg. 1 lines 2-12 (double-buffered ``ann``,
+                               2-bit ``valid``: LSB pfenced, MSB bare)
+  * combiner lock hand-off:    Alg. 1 (``cLock`` try-lock; losers spin on
+                               their response, then help-check)
+  * REDUCE + elimination:      Alg. 2 (collection lines 88-101; push/pop
+                               pair matching lines 102-110 — eliminated
+                               pairs never touch the persistent structure)
+  * one pfence per phase:      Alg. 2 line 80 (responses + new state drain
+                               under a single barrier)
+  * two-increment epoch:       Alg. 1 lines 81-83 — pwb+pfence ``cEpoch=v+1``
+                               then write ``v+2`` WITHOUT a fence; parity
+                               selects the live ``top`` entry
+  * recovery + verdicts:       Alg. 1 lines 26-43 (round odd epoch up,
+                               re-publish half-written ``valid`` selectors,
+                               re-execute ops of the crashed phase,
+                               per-thread detectability verdicts)
+  * node reclamation / GC:     §4 (volatile free-bitmap rebuilt by a
+                               recovery walk bounded by the committed roots)
+
 Deviations from the pseudocode (documented):
   * Initial announcements get ``epoch=-1, val=INIT, name=NONE`` instead of
     all-zero, so that threads which never announced an operation are not

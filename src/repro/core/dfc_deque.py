@@ -35,6 +35,18 @@ Combiner algorithm (one phase, lock held):
      and ``snapshot`` stop at the right end for the same reason).
   5. The phase publishes by writing the *inactive* left/right entries and
      committing with the shared two-increment epoch protocol.
+
+Paper correspondence (arXiv:2012.12868; shared skeleton cites are in
+``repro.core.dfc``):
+  * announce / valid / recovery skeleton: Alg. 1 lines 2-12 and 26-43 via
+    :class:`~repro.core.dfc.DFCBase`,
+  * elimination rule: the same-side instance of Alg. 2 lines 102-110 —
+    pushL_k pairs with popL_k (and pushR_k with popR_k); cross-side pairs
+    are NOT eliminated, they linearize through the structure (step 2),
+  * one pfence per phase / two-increment ``cEpoch`` commit: Alg. 2 line 80
+    and Alg. 1 lines 81-83 with the (left, right) double-buffered roots,
+  * deferred node reuse + bounded recovery GC walks: §4, extended to
+    doubly-linked nodes (walks bounded by the committed (left, right) pair).
 """
 
 from __future__ import annotations

@@ -38,6 +38,20 @@ Combiner algorithm (one phase, lock held):
 Linearization witness of a combined batch: dequeues served from the queue
 (FIFO order), then eliminated pairs (enq_k;deq_k adjacent), then surplus
 enqueues in collection order; EMPTY dequeues linearize at the drained point.
+
+Paper correspondence (arXiv:2012.12868; shared skeleton cites are in
+``repro.core.dfc``):
+  * announce / valid / recovery:  Alg. 1 lines 2-12 and 26-43, inherited
+    unchanged from :class:`~repro.core.dfc.DFCBase`,
+  * elimination rule: the queue analogue of Alg. 2 lines 102-110 — but
+    TWO-SIDED and drain-gated: a deq may only pair with an enq once the
+    committed queue is empty (pairing earlier would reorder FIFO),
+  * one pfence per phase / two-increment ``cEpoch`` commit: Alg. 2 line 80
+    and Alg. 1 lines 81-83, with the double-buffered root pair being
+    (head, tail) instead of the stack's single ``top``,
+  * deferred node reuse + bounded recovery GC walks: §4 — dequeued nodes
+    are freed only after the epoch commits, and the recovery walk stops at
+    the committed tail, so dangling links past it are unreachable.
 """
 
 from __future__ import annotations

@@ -572,6 +572,42 @@ def struct_kind(state) -> str:
     raise TypeError(f"not a DFC structure state: {type(state)!r}")
 
 
+# Stable integer codes for structure kinds, used wherever a kind has to live
+# in an array (the sharded runtime's per-shard ``kind`` metadata column) or
+# in compact durable records.  Codes are assigned in sorted-kind order so they
+# cannot drift as STRUCTS grows.
+KIND_CODES: Dict[str, int] = {kind: i for i, kind in enumerate(sorted(STRUCTS))}
+CODE_KINDS: Dict[int, str] = {i: kind for kind, i in KIND_CODES.items()}
+
+
+def state_from_contents(kind: str, contents, capacity: int, epoch: int):
+    """Build a committed single-object state holding exactly ``contents``.
+
+    Used by shard merges: the absorbing shard's post-merge state is rebuilt
+    from its merged value list (bottom-to-top for the stack, left-to-right
+    for the ring structures) at the given (even) epoch — the active buffer
+    selected by ``epoch`` holds the window [0, len(contents)).
+    """
+    spec = STRUCTS[kind]
+    n = len(contents)
+    if n > capacity:
+        raise ValueError(f"{n} values exceed capacity {capacity}")
+    state = spec.init(capacity)
+    values = state.values.at[: max(n, 0)].set(
+        jnp.asarray(contents, state.values.dtype)
+    ) if n else state.values
+    active = (epoch // 2) % 2
+    if kind == "stack":
+        return StackState(
+            values=values,
+            size=state.size.at[active].set(n),
+            epoch=jnp.asarray(epoch, jnp.int32),
+        )
+    ends = state.ends.at[active].set(jnp.asarray([0, n], jnp.int32))
+    cls = spec.state_cls
+    return cls(values=values, ends=ends, epoch=jnp.asarray(epoch, jnp.int32))
+
+
 # ============================================================ shard stacking
 def replicate_state(state, n_shards: int):
     """Stack ``n_shards`` copies of a freshly-initialized state into one

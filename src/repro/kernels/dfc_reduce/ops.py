@@ -280,3 +280,33 @@ SHARDED_COMBINE_STEPS = {
     "queue": dfc_sharded_queue_combine_step,
     "deque": dfc_sharded_deque_combine_step,
 }
+
+
+# ------------------------------------------------------------- heterogeneous
+def dfc_hetero_combine_step(groups, group_ops, group_params, *, backend="ref"):
+    """STRUCTS-dispatched combine over a heterogeneous shard fabric.
+
+    ``groups`` maps a structure kind to that kind's shard-stacked state;
+    ``group_ops`` / ``group_params`` hold the matching ``[S_kind, N]``
+    announcement matrices.  Program instances are grouped BY KIND: each kind
+    present gets exactly one dispatch — a ``vmap`` of its combine for the
+    ``jnp`` backend, or one Pallas grid call (``grid=(S_kind,)``, program
+    instance = shard) for the kernel backends — so a mixed stack/queue/deque
+    fabric costs one dispatch per kind, not per shard.
+
+    Returns ``{kind: (new_state, responses[S_kind, N], kinds[S_kind, N])}``.
+    Meant to be called inside an enclosing jit (it is not jitted itself).
+    """
+    from repro.core.jax_dfc import STRUCTS
+
+    out = {}
+    for kind in sorted(groups):
+        if backend == "jnp":
+            out[kind] = jax.vmap(STRUCTS[kind].combine)(
+                groups[kind], group_ops[kind], group_params[kind]
+            )
+        else:
+            out[kind] = SHARDED_COMBINE_STEPS[kind](
+                groups[kind], group_ops[kind], group_params[kind], backend=backend
+            )
+    return out

@@ -1,22 +1,232 @@
-"""Production serving launcher: batched prefill + decode.
+"""Production serving launcher: DFC request-queue tier + batched prefill/decode.
+
+The sharded DFC fabric (``repro.runtime.dfc_shard``) is mounted as the
+serving tier's REQUEST QUEUE — the ROADMAP's "request-queue tier" item:
+
+  * session ids are the routing keys; an arriving session is ENQUEUED into
+    its FIFO request shard, and each prefill round DEQUEUES up to ``--batch``
+    sessions into the model batch;
+  * the pool of free decode slots (KV-cache rows) is a LIFO **stack shard in
+    the same fabric** — a heterogeneous fabric in production position:
+    arrivals (queue enq) and slot releases (stack push) combine in ONE fused
+    phase;
+  * ``--durable`` runs the tier over the announce/combine persistence path
+    (SimFS-backed) and reports pwb/op — the paper's Figure-3 metric at the
+    serving tier;
+  * ``--reshard-backlog N`` splits a request shard whose backlog exceeds N
+    (crash-consistent: see ``ShardedDFCRuntime.split_shard``).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
-      --batch 4 --prompt-len 16 --gen 32
+      --batch 4 --prompt-len 16 --gen 32 --sessions 12
 """
 
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.dfc_checkpoint import SimFS
 from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.core.jax_dfc import OP_DEQ, OP_ENQ, OP_POP, OP_PUSH, R_VALUE
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.launch.tuned import apply_tuning
 from repro.models.model import init_params
+from repro.runtime.dfc_shard import _HASH_MULT, R_OVERFLOW, ShardedDFCRuntime
+
+
+class RequestQueueTier:
+    """Session admission over a heterogeneous DFC fabric.
+
+    ``n_queues`` FIFO request shards plus ONE stack shard (the free-slot
+    pool) behind a single router.  Bucket 0 of the routing table is pinned
+    to the pool shard; session ids are deterministically re-probed away from
+    it, so every session key lands on a request shard.  All tier traffic —
+    arrivals, slot pops, dequeues, releases — flows through the fabric's
+    fused combine, volatile (``step``) or durable (``announce`` /
+    ``combine_phase``).
+    """
+
+    def __init__(
+        self,
+        n_queues: int = 4,
+        slots: int = 4,
+        *,
+        capacity: int = 4096,
+        lanes: int = 64,
+        durable: bool = False,
+        fs: Optional[SimFS] = None,
+        reshard_backlog: Optional[int] = None,
+        n_buckets: Optional[int] = None,
+    ):
+        kinds = ["queue"] * n_queues + ["stack"]
+        n_shards = n_queues + 1
+        n_buckets = n_buckets or 4 * n_shards
+        self.pool_shard = n_queues
+        # bucket 0 -> pool stack; the rest round-robin over the request shards
+        table = np.asarray(
+            [self.pool_shard] + [b % n_queues for b in range(1, n_buckets)],
+            np.int32,
+        )
+        if durable and fs is None:
+            fs = SimFS(Path(tempfile.mkdtemp(prefix="dfc_serve_tier_")))
+        self.durable = durable
+        self.rt = ShardedDFCRuntime(
+            kinds, n_shards, capacity, lanes,
+            fs=fs if durable else None, n_threads=1,
+            n_buckets=n_buckets, table=table,
+        )
+        self.reshard_backlog = reshard_backlog
+        self._rep_keys: Dict[int, int] = {}
+        self._slot_retry: List[int] = []  # pool pushes that overflowed a phase
+        self._token = 0
+        self.stats = {"arrived": 0, "admitted": 0, "rejected": 0, "splits": 0}
+        # seed the slot pool (submit chunks pushes to the pool shard's lanes)
+        self.submit([], release_slots=list(range(slots)))
+        while self._slot_retry:
+            self.submit([])
+
+    # ------------------------------------------------------------ internals
+    def _key_for(self, shard: int) -> int:
+        if shard not in self._rep_keys:
+            self._rep_keys[shard] = self.rt.key_for_shard(shard)
+        return self._rep_keys[shard]
+
+    def _phase(self, keys, ops, params) -> Tuple[np.ndarray, np.ndarray]:
+        """One tier phase: fused volatile step, or announce+combine+read."""
+        if not self.durable:
+            resp, kinds = self.rt.step(keys, ops, params)
+            return np.asarray(resp), np.asarray(kinds)
+        self._token += 1
+        self.rt.announce(0, keys, ops, params, token=self._token)
+        self.rt.combine_phase()
+        val = self.rt.read_responses(0)
+        return np.asarray(val["resp"]), np.asarray(val["kinds"])
+
+    def session_key(self, sid: int) -> int:
+        """Deterministic key for a session id, re-probed off the pool shard
+        (so the id stays the key in spirit; collisions with bucket 0 hop)."""
+        if not 0 <= sid < (1 << 24):
+            # sids round-trip through the fabric's float32 values; past the
+            # f32 mantissa two sessions would silently collide
+            raise ValueError(f"session id {sid} must be in [0, 2^24)")
+        k = int(sid)
+        while int(self.rt.route_host([k])[0]) == self.pool_shard:
+            k = (k * _HASH_MULT + 1) % (1 << 31)
+        return k
+
+    def _queue_backlogs(self) -> Dict[int, int]:
+        """Committed backlog per request shard, straight from the fabric's
+        active root counters (no host-side shadow accounting to drift)."""
+        sizes = self.rt.shard_sizes()
+        return {
+            s: int(sizes[s])
+            for s in range(self.rt.n_shards)
+            if self.rt.kinds[s] == "queue"
+        }
+
+    # ------------------------------------------------------------- tier API
+    def submit(self, sids: Sequence[int], release_slots: Sequence[int] = ()) -> List[int]:
+        """Enqueue arriving sessions and return freed decode slots to the
+        pool — one mixed-kind combined phase.  Returns session ids that
+        overflowed their shard's lanes (re-submit next round).
+
+        Pool pushes all route to the single pool shard, so at most ``lanes``
+        of them fit per phase; the surplus — and any push the fabric rejects
+        with R_OVERFLOW — is carried in ``_slot_retry`` and retried on the
+        next submit, so a decode slot can never leak."""
+        pool = self._slot_retry + list(release_slots)
+        self._slot_retry = pool[self.rt.lanes :]
+        pool = pool[: self.rt.lanes]
+        keys = [self.session_key(s) for s in sids]
+        keys += [self._key_for(self.pool_shard)] * len(pool)
+        ops = [OP_ENQ] * len(sids) + [OP_PUSH] * len(pool)
+        params = [float(s) for s in sids] + [float(s) for s in pool]
+        if not ops:
+            return []
+        resp, kinds = self._phase(keys, ops, params)
+        rejected = [s for i, s in enumerate(sids) if kinds[i] == R_OVERFLOW]
+        for j, slot in enumerate(pool):
+            if kinds[len(sids) + j] == R_OVERFLOW:
+                self._slot_retry.append(slot)
+        self.stats["arrived"] += len(sids)
+        self.stats["rejected"] += len(rejected)
+        self._maybe_split()
+        return rejected
+
+    def admit(self, max_n: int) -> List[Tuple[int, int]]:
+        """Admit up to ``max_n`` sessions: pop free slots from the pool
+        stack, then dequeue that many sessions round-robin from the backlogged
+        request shards.  Returns ``[(session_id, slot), ...]``."""
+        if max_n <= 0:
+            return []
+        pool_key = self._key_for(self.pool_shard)
+        resp, kinds = self._phase(
+            [pool_key] * max_n, [OP_POP] * max_n, [0.0] * max_n
+        )
+        slots = [int(resp[i]) for i in range(max_n) if kinds[i] == R_VALUE]
+        if not slots:
+            return []
+        deqs: List[Tuple[int, int]] = []  # (shard, representative key)
+        budget = self._queue_backlogs()
+        while len(deqs) < len(slots):
+            ready = [s for s, n in sorted(budget.items()) if n > 0]
+            if not ready:
+                break
+            for s in ready:
+                if len(deqs) >= len(slots):
+                    break
+                deqs.append((s, self._key_for(s)))
+                budget[s] -= 1
+        if not deqs:
+            self.submit([], release_slots=slots)  # nothing queued: put back
+            return []
+        resp, kinds = self._phase(
+            [k for _, k in deqs], [OP_DEQ] * len(deqs), [0.0] * len(deqs)
+        )
+        admitted: List[Tuple[int, int]] = []
+        spare = list(slots)
+        for i, (shard, _) in enumerate(deqs):
+            if kinds[i] == R_VALUE:
+                admitted.append((int(resp[i]), spare.pop(0)))
+        if spare:
+            self.submit([], release_slots=spare)
+        self.stats["admitted"] += len(admitted)
+        return admitted
+
+    def backlog(self) -> int:
+        return sum(self._queue_backlogs().values())
+
+    def _maybe_split(self) -> None:
+        """Split the hottest request shard when its backlog crosses the
+        threshold (crash-consistent; new shard inherits half the buckets)."""
+        if self.reshard_backlog is None:
+            return
+        backlogs = self._queue_backlogs()
+        hot = max(backlogs, key=backlogs.get)
+        if backlogs[hot] < self.reshard_backlog:
+            return
+        try:
+            self.rt.split_shard(hot)
+        except ValueError:
+            return  # no spare bucket left on this shard
+        self._rep_keys.clear()  # table changed: representative keys stale
+        self.stats["splits"] += 1
+
+    def persistence_stats(self) -> Optional[Dict[str, float]]:
+        if not self.durable:
+            return None
+        ops = max(self.stats["arrived"] + self.stats["admitted"], 1)
+        return {
+            "pwb_per_op": self.rt.fs.stats["pwb"] / ops,
+            "pfence_per_op": self.rt.fs.stats["pfence"] / ops,
+        }
 
 
 def main():
@@ -27,6 +237,17 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--window", type=int, default=0)
+    ap.add_argument("--sessions", type=int, default=0,
+                    help="total sessions through the request-queue tier "
+                         "(default: one round of --batch)")
+    ap.add_argument("--arrival", type=int, default=0,
+                    help="arrivals per round (default: --batch)")
+    ap.add_argument("--queues", type=int, default=4,
+                    help="request-queue shards in the DFC fabric")
+    ap.add_argument("--durable", action="store_true",
+                    help="run the tier over the SimFS persistence path")
+    ap.add_argument("--reshard-backlog", type=int, default=0,
+                    help="split a request shard when its backlog exceeds N")
     args = ap.parse_args()
 
     cfg = apply_tuning(get_reduced(args.arch) if args.reduced else get_config(args.arch))
@@ -38,23 +259,68 @@ def main():
     prefill_step = jax.jit(make_prefill_step(cfg, max_len=max_len))
     serve_step = jax.jit(make_serve_step(cfg, window=args.window))
 
+    n_sessions = args.sessions or args.batch
+    arrival = args.arrival or args.batch
+    tier = RequestQueueTier(
+        n_queues=args.queues,
+        slots=args.batch,
+        lanes=max(arrival, args.batch) * 2,
+        durable=args.durable,
+        reshard_backlog=args.reshard_backlog or None,
+    )
+
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
-    )
-    last, cache = prefill_step(params, {"tokens": prompts})
-    tok = jnp.argmax(last[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    next_sid = 1
+    waiting: List[int] = []
+    completed = 0
+    decoded_tokens = 0
     t0 = time.perf_counter()
-    outs = [tok]
-    for _ in range(args.gen - 1):
-        out, cache = serve_step(params, cache, {"tokens": tok})
-        tok = out["next_token"][:, None].astype(jnp.int32)
-        outs.append(tok)
+    round_no = 0
+    while completed < n_sessions:
+        round_no += 1
+        # arrivals into the request-queue tier (+ any overflow retries)
+        fresh = list(range(next_sid, min(next_sid + arrival, n_sessions + 1)))
+        next_sid = next_sid + len(fresh)
+        waiting = tier.submit(waiting + fresh)
+
+        admitted = tier.admit(args.batch)
+        if not admitted:
+            continue
+        # prefill a fixed [batch, prompt_len] block; idle rows repeat row 0
+        sids = [sid for sid, _ in admitted]
+        rows = sids + [sids[0]] * (args.batch - len(sids))
+        prompts = jnp.asarray(
+            np.stack([
+                np.random.default_rng(sid).integers(0, cfg.vocab, args.prompt_len)
+                for sid in rows
+            ]),
+            jnp.int32,
+        )
+        last, cache = prefill_step(params, {"tokens": prompts})
+        tok = jnp.argmax(last[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        for _ in range(args.gen - 1):
+            out, cache = serve_step(params, cache, {"tokens": tok})
+            tok = out["next_token"][:, None].astype(jnp.int32)
+        jax.block_until_ready(tok)
+        decoded_tokens += args.gen * len(sids)
+        completed += len(sids)
+        # sessions finished: their decode slots go back through the fabric
+        tier.submit([], release_slots=[slot for _, slot in admitted])
     dt = time.perf_counter() - t0
+
     print(
-        f"{args.arch}: decoded {args.gen} tok x {args.batch} seqs in {dt*1e3:.0f} ms "
-        f"({args.batch*args.gen/dt:.0f} tok/s)"
+        f"{args.arch}: served {completed} sessions in {round_no} rounds, "
+        f"{decoded_tokens} tok in {dt*1e3:.0f} ms ({decoded_tokens/dt:.0f} tok/s)"
     )
+    print(
+        f"request tier: queues={args.queues} (+1 slot-pool stack shard) "
+        f"arrived={tier.stats['arrived']} admitted={tier.stats['admitted']} "
+        f"rejected={tier.stats['rejected']} splits={tier.stats['splits']} "
+        f"backlog={tier.backlog()}"
+    )
+    p = tier.persistence_stats()
+    if p:
+        print(f"pwb/op: {p['pwb_per_op']:.2f}  pfence/op: {p['pfence_per_op']:.2f}")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,10 @@ from repro.runtime.dfc_shard import (
     R_OVERFLOW,
     OpVerdict,
     ShardedDFCRuntime,
+    hetero_step,
     route_batch,
+    route_keys_host,
+    sequential_hetero_reference,
     sequential_sharded_reference,
     shard_of_keys,
     shard_of_keys_host,
@@ -16,7 +19,10 @@ __all__ = [
     "OpVerdict",
     "ShardedDFCRuntime",
     "TrainRuntime",
+    "hetero_step",
     "route_batch",
+    "route_keys_host",
+    "sequential_hetero_reference",
     "sequential_sharded_reference",
     "shard_of_keys",
     "shard_of_keys_host",

@@ -1,48 +1,86 @@
 """Sharded multi-object DFC runtime: one announcement fabric, many objects.
 
 The paper's Figure-3 result is that flat combining amortizes the expensive
-persistence instructions (pwb/pfence) across every op announced in a phase.
-This runtime amortizes across *objects* too, the way a serving tier shards
-traffic: ``n_shards`` homogeneous DFC structures (stack / queue / deque) live
-behind ONE announcement fabric, a key->shard router buckets each announced
-batch into per-shard op lists, and a single fused dispatch runs every
-shard's combining phase at once (``vmap`` for the jnp backend, a Pallas grid
-— one program instance per shard — for the kernel backends).
+persistence instructions (pwb/pfence) across every op announced in a phase
+(Algorithm 2's REDUCE + the single pfence of line 80).  This runtime
+amortizes across *objects* too, the way a serving tier shards traffic:
+``n_shards`` DFC structures — since PR 3 a MIXED population of stacks,
+queues and deques — live behind ONE announcement fabric, a key->shard router
+buckets each announced batch into per-shard op lists, and a fused dispatch
+runs every shard's combining phase grouped BY KIND (``vmap`` per kind for
+the jnp backend, one Pallas grid per kind — program instance = shard — for
+the kernel backends; see ``dfc_hetero_combine_step``).
 
-State layout (see ``repro.core.jax_dfc.init_sharded``): every leaf of the
-structure state carries a leading shard axis, so the whole runtime is one
-stacked pytree — ``values[S, cap]``, ``size[S, 2]`` / ``ends[S, 2, 2]``, and
-crucially ``epoch[S]``: per-shard epochs.  Shards commit independently; a
-combine phase only advances the epoch of shards that actually received ops,
-so persistence work scales with touched shards, not with ``n_shards``.
+Paper mechanisms reused at fabric scale (citations follow the repo
+convention: Algorithm/Figure/line numbers of arXiv:2012.12868):
 
-Routing determinism: the shard of a key is a pure function of the key
-(multiplicative hashing), and the lane of an op within its shard is its
-*batch-order rank* among the ops routed there (an exclusive prefix sum over
-the shard one-hot matrix).  Both are order-preserving and independent of
-array layout or backend, so the routed per-shard op lists — and therefore
-the combined linearization — are bit-identical across jnp / Pallas backends
-and across host replays: the flat batch order IS the announcement order.
-Overflowing ops (rank >= lanes) are cleanly rejected with ``R_OVERFLOW``
-before touching any shard, so one hot shard can never corrupt a neighbor.
+  * announce (Alg. 1 lines 2-12): per-thread double-buffered announcement
+    records (``ann{0,1}`` + a 2-bit ``valid`` selector, MSB published last),
+  * combine + single pfence (Alg. 2, line 80): one durable phase persists
+    every touched shard's new state and every combined response, then
+    pfences ONCE,
+  * two-increment epoch commit (Alg. 1 lines 81-83): per SHARD — persist
+    cEpoch=v+1, publish v+2 unsynced; recovery rounds odd up to even
+    (lines 28-30),
+  * detectability (§1, Alg. 1 lines 26-43): recovery reports, per thread and
+    per op, whether the op took effect and with which response,
+  * recovery GC (§4): unreachable slot files of interrupted phases are
+    deleted, like the paper's volatile-bitmap node reclamation.
 
-Persistence (``SimFS``-backed, pwb=write / pfence=fsync): per-thread
-double-buffered announcements exactly like the paper's ``tAnn`` (ann{0,1} +
-valid selector), per-shard double-buffered state slots selected by epoch
-parity, and a per-shard TWO-INCREMENT epoch commit (persist v+1, publish
-v+2 unsynced).  One phase orders its persistence as:
+State layout (see ``repro.core.jax_dfc.init_sharded``): shards of the same
+kind form one stacked pytree (leading shard axis on every leaf), and the
+fabric is a ``{kind: stacked_state}`` group dict.  Crucially ``epoch[S]`` is
+per shard: shards commit independently; a combine phase only advances the
+epoch of shards that actually received ops, so persistence work scales with
+touched shards, not with ``n_shards``.
 
-  1. pwb the new state of every TOUCHED shard into its inactive slot,
-  2. pwb every combined announcement's responses (+ per-op shard targets),
-  3. ONE pfence over all of it,
-  4. per touched shard: pwb cEpoch=v+1, pfence, pwb cEpoch=v+2.
+Routing (PR 3: now table-driven and re-shardable): a key hashes to a BUCKET
+(multiplicative hashing, ``key * 2654435761``), and an ``i32[n_buckets]``
+routing table maps buckets to shards.  The default table is the identity
+(``bucket % n_shards`` with ``n_buckets == n_shards``) — bit-identical to
+the PR-2 router.  The lane of an op within its shard is its *batch-order
+rank* among the ops routed there (an exclusive prefix sum over the shard
+one-hot matrix).  Both are order-preserving and independent of array layout
+or backend, so the routed per-shard op lists — and therefore the combined
+linearization — are bit-identical across jnp / Pallas backends and across
+host replays: the flat batch order IS the announcement order.  Overflowing
+ops (rank >= lanes) are cleanly rejected with ``R_OVERFLOW`` before touching
+any shard, so one hot shard can never corrupt a neighbor.
 
-A crash anywhere leaves every shard either at its old committed state or its
-new one; ``recover`` rebuilds all shards from their active slots and reports,
-for every thread and every announced op, whether it took effect (its shard's
-durable epoch reached the recorded target) — ops of shards that missed their
-commit are reported not-applied and can be re-announced, giving exactly-once
-semantics per op across the whole fabric.
+Dynamic resharding (``split_shard`` / ``merge_shards``): the routing table
+itself is a persistent object committed with the SAME two-increment protocol
+as the shards (``routing/rEpoch``; double-buffered ``routing/slot{0,1}``
+records picked by epoch parity).  A reshard is a mini-transaction:
+
+  1. drain ready announcements (one ordinary combine phase),
+  2. checkpoint the donor shard via ``DFCCheckpointManager.combine_structure``
+     (a detectable typed snapshot under ``reshard/ckpt``, same SimFS so fault
+     sweeps tick through it),
+  3. persist a reshard INTENT record, pfence,
+  4. pwb the post-reshard shard states into their inactive slots (merge
+     only) and the new routing record into the inactive routing slot, ONE
+     pfence,
+  5. commit ``rEpoch`` with the two-increment protocol — THE commit point,
+  6. roll the touched shards' cEpochs forward (merge only), drop the intent.
+
+A crash before step 5's first fsync aborts the reshard (old routing + old
+shard states; the per-shard GC reclaims the orphaned slot writes); a crash
+after it commits (recovery rolls shard cEpochs forward from the intent).
+Either way detectability verdicts recorded before the reshard stay valid —
+they name (shard, target-epoch) pairs, and shard ids are never reused.
+In-flight announcements that missed the drain are reported not-applied and
+can be replayed with ``replay_pending``, giving exactly-once semantics per
+op across reshards and crashes.
+
+Persistence layout (``SimFS``-backed, pwb=write / pfence=fsync):
+
+  tAnn/thread_{t}/ann{0,1}.json   double-buffered announcements + valid
+  shard_{s}/slot{0,1}/...         alternating state slots, picked by parity
+  shard_{s}/cEpoch                per-shard two-increment commit
+  routing/slot{0,1}.json          alternating routing records
+  routing/rEpoch                  routing-epoch two-increment commit
+  reshard/intent.json             reshard transaction record
+  reshard/ckpt/...                donor snapshots (DFCCheckpointManager)
 """
 
 from __future__ import annotations
@@ -51,23 +89,28 @@ import dataclasses
 import functools
 import io
 import json
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint.dfc_checkpoint import BOT, SimFS
+from repro.checkpoint.dfc_checkpoint import BOT, DFCCheckpointManager, SimFS
 from repro.core.jax_dfc import (
+    KIND_CODES,
     OP_NONE,
     R_NONE,
     STRUCTS,
     init_sharded,
     shard_slice,
     stack_shards,
+    state_from_contents,
 )
-from repro.kernels.dfc_reduce.ops import SHARDED_COMBINE_STEPS
+from repro.kernels.dfc_reduce.ops import (
+    SHARDED_COMBINE_STEPS,
+    dfc_hetero_combine_step,
+)
 
 # runtime-level response kind: op rejected because its shard's announcement
 # lanes were full this phase — never applied, safe to re-announce.
@@ -78,7 +121,12 @@ _HASH_MULT = 2654435761  # Knuth multiplicative hashing constant
 
 # ===================================================================== router
 def shard_of_keys(keys, n_shards: int):
-    """shard(key): multiplicative hash, identical on host and device."""
+    """bucket(key): multiplicative hash, identical on host and device.
+
+    With the identity routing table (the default) bucket == shard, which is
+    why this keeps its historical name; table-driven fabrics compose it with
+    a table lookup (see ``route_batch``).
+    """
     k = jnp.asarray(keys).astype(jnp.uint32)
     h = k * jnp.uint32(_HASH_MULT)
     h = h ^ (h >> jnp.uint32(16))
@@ -93,6 +141,15 @@ def shard_of_keys_host(keys, n_shards: int) -> np.ndarray:
     return (h % np.uint32(n_shards)).astype(np.int32)
 
 
+def route_keys_host(keys, n_shards: int, table=None) -> np.ndarray:
+    """Host routing: bucket hash + optional table lookup (oracle twin of the
+    device path in ``route_batch``)."""
+    if table is None:
+        return shard_of_keys_host(keys, n_shards)
+    table = np.asarray(table)
+    return table[shard_of_keys_host(keys, len(table))].astype(np.int32)
+
+
 def zipf_keys(rng, n: int, universe: int, skew: float) -> np.ndarray:
     """Zipfian key draw over a finite universe (skew=0 -> uniform) — the
     serving-style workload used by the traffic driver and benchmarks."""
@@ -103,19 +160,24 @@ def zipf_keys(rng, n: int, universe: int, skew: float) -> np.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("n_shards", "lanes"))
-def route_batch(keys, ops, params, *, n_shards: int, lanes: int):
+def route_batch(keys, ops, params, *, n_shards: int, lanes: int, table=None):
     """Bucket a flat announced batch into per-shard op lists.
 
     Returns ``(shard_ops i32[S, L], shard_params f32[S, L], shard i32[B],
-    lane i32[B], ok bool[B], overflow bool[B])``.  Lane assignment is the
-    op's batch-order rank among ops routed to its shard (stable: an exclusive
-    segment prefix sum over the shard one-hot matrix), so per-shard op lists
-    preserve announcement order deterministically.  Ops ranked past ``lanes``
-    overflow: they are dropped before touching any per-shard list.  OP_NONE
-    lanes are never routed.
+    lane i32[B], ok bool[B], overflow bool[B])``.  ``table`` (``i32[n_buckets]``,
+    bucket -> shard) routes through the resharding-aware table; ``None`` is
+    the identity table (bucket == shard, the PR-2 behavior).  Lane assignment
+    is the op's batch-order rank among ops routed to its shard (stable: an
+    exclusive segment prefix sum over the shard one-hot matrix), so per-shard
+    op lists preserve announcement order deterministically.  Ops ranked past
+    ``lanes`` overflow: they are dropped before touching any per-shard list.
+    OP_NONE lanes are never routed.
     """
     b = ops.shape[0]
-    shard = shard_of_keys(keys, n_shards)
+    if table is None:
+        shard = shard_of_keys(keys, n_shards)
+    else:
+        shard = table[shard_of_keys(keys, table.shape[0])]
     active = ops != OP_NONE
     s_eff = jnp.where(active, shard, n_shards)  # n_shards == routed nowhere
 
@@ -162,7 +224,9 @@ def sharded_step(
     state, keys, ops, params, meta, *, kind: str, n_shards: int, lanes: int,
     backend: str = "jnp",
 ):
-    """One fused end-to-end phase: route -> all-shard combine -> epoch publish.
+    """One fused end-to-end phase over a HOMOGENEOUS fabric (PR-2 entry
+    point, kept for direct users; ``ShardedDFCRuntime`` itself now always
+    goes through ``hetero_step``).
 
     ``meta`` is the per-shard combiner metadata ``{"phases": i32[S],
     "ops_combined": i32[S]}``; untouched shards keep their old state (and old
@@ -189,13 +253,11 @@ def sharded_step(
         return jnp.where(t, new_leaf, old_leaf)
 
     new_state = jax.tree_util.tree_map(_select, combined, state)
-    new_meta = {
-        "phases": meta["phases"] + touched.astype(jnp.int32),
-        "ops_combined": meta["ops_combined"]
-        + jnp.sum(
-            (shard_ops != OP_NONE).astype(jnp.int32), axis=1
-        ),
-    }
+    new_meta = dict(meta)  # carry extra columns (e.g. "kind") through
+    new_meta["phases"] = meta["phases"] + touched.astype(jnp.int32)
+    new_meta["ops_combined"] = meta["ops_combined"] + jnp.sum(
+        (shard_ops != OP_NONE).astype(jnp.int32), axis=1
+    )
 
     # gather responses back to flat batch order
     s = jnp.clip(shard, 0, n_shards - 1)
@@ -206,20 +268,91 @@ def sharded_step(
     return new_state, new_meta, responses, kinds
 
 
-# ============================================================== host oracle
-def sequential_sharded_reference(kind, shard_lists, keys, ops, params, lanes):
-    """Pure-Python witness of one sharded phase (test/bench oracle).
+@functools.lru_cache(maxsize=None)
+def _group_ids(kinds: Tuple[str, ...]) -> Dict[str, Tuple[int, ...]]:
+    """Global shard ids per kind, in ascending shard order."""
+    out: Dict[str, List[int]] = {}
+    for s, k in enumerate(kinds):
+        out.setdefault(k, []).append(s)
+    return {k: tuple(v) for k, v in out.items()}
 
-    ``shard_lists`` is a list of per-shard Python structures; mutated in
-    place.  Returns (responses, kinds) in flat batch order, with overflow ops
-    reported as ``R_OVERFLOW`` and untouched.
+
+@functools.partial(jax.jit, static_argnames=("kinds", "lanes", "backend"))
+def hetero_step(
+    groups, table, keys, ops, params, meta, *, kinds: Tuple[str, ...],
+    lanes: int, backend: str = "jnp",
+):
+    """One fused end-to-end phase over a HETEROGENEOUS fabric.
+
+    ``groups`` maps each structure kind to its shard-stacked state;
+    ``kinds`` (static) is the per-shard kind tuple and ``table`` the
+    bucket->shard routing table.  The combine is STRUCTS-dispatched per kind
+    group (``dfc_hetero_combine_step``): one vmap or one Pallas grid per kind
+    present, program instances grouped by kind.  Op codes are interpreted by
+    the TARGET shard's structure (a code-3 op is OP_PUSHR on a deque shard
+    and falls through to R_NONE on a stack/queue shard).
+
+    Returns ``(new_groups, new_meta, responses f32[B], out_kinds i32[B])``.
+    """
+    n_shards = len(kinds)
+    shard_ops, shard_params, shard, lane, ok, overflow = route_batch(
+        keys, ops, params, n_shards=n_shards, lanes=lanes, table=table
+    )
+
+    gids = _group_ids(kinds)
+    group_ops = {k: shard_ops[jnp.asarray(ids)] for k, ids in gids.items()}
+    group_params = {k: shard_params[jnp.asarray(ids)] for k, ids in gids.items()}
+    combined = dfc_hetero_combine_step(
+        groups, group_ops, group_params, backend=backend
+    )
+
+    resp_mat = jnp.zeros((n_shards, lanes), jnp.float32)
+    kind_mat = jnp.full((n_shards, lanes), R_NONE, jnp.int32)
+    new_groups = {}
+    for k in sorted(gids):
+        ids = gids[k]
+        rows = jnp.asarray(ids)
+        new_state, s_resp, s_kinds = combined[k]
+        g_touched = jnp.any(group_ops[k] != OP_NONE, axis=1)
+
+        def _select(new_leaf, old_leaf, t=g_touched, m=len(ids)):
+            tt = t.reshape((m,) + (1,) * (new_leaf.ndim - 1))
+            return jnp.where(tt, new_leaf, old_leaf)
+
+        new_groups[k] = jax.tree_util.tree_map(_select, new_state, groups[k])
+        resp_mat = resp_mat.at[rows].set(s_resp)
+        kind_mat = kind_mat.at[rows].set(s_kinds)
+
+    touched = jnp.any(shard_ops != OP_NONE, axis=1)
+    new_meta = dict(meta)
+    new_meta["phases"] = meta["phases"] + touched.astype(jnp.int32)
+    new_meta["ops_combined"] = meta["ops_combined"] + jnp.sum(
+        (shard_ops != OP_NONE).astype(jnp.int32), axis=1
+    )
+
+    s = jnp.clip(shard, 0, n_shards - 1)
+    ln = jnp.clip(lane, 0, lanes - 1)
+    responses = jnp.where(ok, resp_mat[s, ln], 0.0)
+    out_kinds = jnp.where(ok, kind_mat[s, ln], R_NONE)
+    out_kinds = jnp.where(overflow, R_OVERFLOW, out_kinds)
+    return new_groups, new_meta, responses, out_kinds
+
+
+# ============================================================== host oracle
+def sequential_hetero_reference(
+    kinds, shard_lists, keys, ops, params, lanes, table=None
+):
+    """Pure-Python witness of one heterogeneous sharded phase (test oracle).
+
+    ``kinds[s]`` names shard ``s``'s structure; ``shard_lists[s]`` is its
+    Python contents, mutated in place.  Returns (responses, kinds) in flat
+    batch order, with overflow ops reported as ``R_OVERFLOW`` and untouched.
     """
     n_shards = len(shard_lists)
-    ref = STRUCTS[kind].reference
-    shard = shard_of_keys_host(keys, n_shards)
+    shard = route_keys_host(keys, n_shards, table)
     b = len(ops)
     responses = [0.0] * b
-    kinds = [R_NONE] * b
+    out_kinds = [R_NONE] * b
     buckets: Dict[int, List[int]] = {}
     for j in range(b):
         if ops[j] == OP_NONE:
@@ -227,24 +360,34 @@ def sequential_sharded_reference(kind, shard_lists, keys, ops, params, lanes):
         s = int(shard[j])
         rank = len(buckets.setdefault(s, []))
         if rank >= lanes:
-            kinds[j] = R_OVERFLOW
+            out_kinds[j] = R_OVERFLOW
             continue
         buckets[s].append(j)
     for s, idxs in sorted(buckets.items()):
         s_ops = [ops[j] for j in idxs]
         s_par = [params[j] for j in idxs]
+        ref = STRUCTS[kinds[s]].reference
         shard_lists[s], s_resp, s_kinds = ref(shard_lists[s], s_ops, s_par)
         for r, (v, k) in zip(idxs, zip(s_resp, s_kinds)):
             responses[r] = v
-            kinds[r] = k
-    return responses, kinds
+            out_kinds[r] = k
+    return responses, out_kinds
+
+
+def sequential_sharded_reference(kind, shard_lists, keys, ops, params, lanes):
+    """Homogeneous wrapper of ``sequential_hetero_reference`` (PR-2 API)."""
+    return sequential_hetero_reference(
+        (kind,) * len(shard_lists), shard_lists, keys, ops, params, lanes
+    )
 
 
 # ================================================================== runtime
-def _init_meta(n_shards: int):
+def _init_meta(kinds: Sequence[str]):
+    n_shards = len(kinds)
     return {
         "phases": jnp.zeros((n_shards,), jnp.int32),
         "ops_combined": jnp.zeros((n_shards,), jnp.int32),
+        "kind": jnp.asarray([KIND_CODES[k] for k in kinds], jnp.int32),
     }
 
 
@@ -259,13 +402,21 @@ class OpVerdict:
 
 
 class ShardedDFCRuntime:
-    """Many persistent DFC objects behind one announcement fabric.
+    """Many persistent DFC objects — possibly of MIXED kinds — behind one
+    announcement fabric, with crash-consistent dynamic resharding.
 
     Volatile fast path: ``step(keys, ops, params)`` — one jitted dispatch.
     Durable path: threads ``announce`` batches; ``combine_phase`` combines
     every ready announcement across all shards and commits per-shard;
-    ``recover`` rebuilds the fabric after a crash and reports per-thread,
-    per-op detectability verdicts.
+    ``recover`` rebuilds the fabric (topology included) after a crash and
+    reports per-thread, per-op detectability verdicts; ``replay_pending``
+    re-announces exactly the not-applied ops.  Resharding:
+    ``split_shard`` / ``merge_shards`` (see the module docstring for the
+    commit protocol).
+
+    ``kind`` may be a single kind name (homogeneous fabric, PR-2 behavior —
+    ``rt.state`` is then the one stacked pytree) or a per-shard sequence of
+    kind names (``rt.state`` is the ``{kind: stacked_state}`` group dict).
 
     Contract (inherited from the combine layer): per shard,
     ``capacity >= committed size + lanes``.
@@ -273,7 +424,7 @@ class ShardedDFCRuntime:
 
     def __init__(
         self,
-        kind: str,
+        kind: Union[str, Sequence[str]],
         n_shards: int,
         capacity: int,
         lanes: int,
@@ -283,20 +434,80 @@ class ShardedDFCRuntime:
         n_threads: int = 1,
         state=None,
         meta=None,
+        n_buckets: Optional[int] = None,
+        table=None,
     ):
-        if kind not in STRUCTS:
-            raise ValueError(f"unknown structure kind {kind!r}")
+        kinds = [kind] * n_shards if isinstance(kind, str) else list(kind)
+        if len(kinds) != n_shards:
+            raise ValueError("per-shard kind list must have n_shards entries")
+        for k in kinds:
+            if k not in STRUCTS:
+                raise ValueError(f"unknown structure kind {k!r}")
         if lanes > capacity:
             raise ValueError("lanes must be <= per-shard capacity")
-        self.kind = kind
+        self.kinds = kinds
+        self.kind = kinds[0] if len(set(kinds)) == 1 else "mixed"
         self.n_shards = n_shards
         self.capacity = capacity
         self.lanes = lanes
         self.backend = backend
         self.fs = fs
         self.n_threads = n_threads
-        self.state = init_sharded(kind, n_shards, capacity) if state is None else state
-        self.meta = _init_meta(n_shards) if meta is None else meta
+        self.n_buckets = int(n_buckets) if n_buckets is not None else n_shards
+        if self.n_buckets < n_shards:
+            raise ValueError("n_buckets must be >= n_shards")
+        self.table = np.asarray(
+            np.arange(self.n_buckets) % n_shards if table is None else table,
+            np.int32,
+        )
+        if self.table.shape != (self.n_buckets,):
+            raise ValueError("table must have n_buckets entries")
+        self.r_epoch = 0  # routing epoch (even at rest)
+        self._reshard_seq = 0
+        if state is None:
+            self.groups = {
+                k: init_sharded(k, len(ids), capacity)
+                for k, ids in _group_ids(tuple(kinds)).items()
+            }
+        else:
+            self.state = state
+        self.meta = _init_meta(kinds) if meta is None else meta
+
+    # ----------------------------------------------------- state as groups
+    @property
+    def state(self):
+        """Single stacked pytree for homogeneous fabrics (PR-2 API), the
+        ``{kind: stacked_state}`` group dict otherwise."""
+        if len(self.groups) == 1:
+            return next(iter(self.groups.values()))
+        return self.groups
+
+    @state.setter
+    def state(self, value):
+        if isinstance(value, dict):
+            self.groups = dict(value)
+        else:
+            self.groups = {self.kinds[0]: value}
+
+    def _row(self, s: int) -> int:
+        """Local row of global shard ``s`` inside its kind group."""
+        return _group_ids(tuple(self.kinds))[self.kinds[s]].index(s)
+
+    def _shard_state(self, s: int):
+        return shard_slice(self.groups[self.kinds[s]], self._row(s))
+
+    def _set_shard_state(self, s: int, one) -> None:
+        k, r = self.kinds[s], self._row(s)
+        self.groups[k] = jax.tree_util.tree_map(
+            lambda leaf, v: leaf.at[r].set(v), self.groups[k], one
+        )
+
+    def shard_epochs(self) -> np.ndarray:
+        """Per-global-shard epochs gathered from the kind groups."""
+        out = np.zeros((self.n_shards,), np.int64)
+        for k, ids in _group_ids(tuple(self.kinds)).items():
+            out[np.asarray(ids)] = np.asarray(self.groups[k].epoch)
+        return out
 
     # ------------------------------------------------------------- routing
     def route(self, keys, ops, params):
@@ -306,19 +517,34 @@ class ShardedDFCRuntime:
             jnp.asarray(params, jnp.float32),
             n_shards=self.n_shards,
             lanes=self.lanes,
+            table=jnp.asarray(self.table),
         )
+
+    def route_host(self, keys) -> np.ndarray:
+        return route_keys_host(keys, self.n_shards, self.table)
+
+    def key_for_shard(self, s: int, start: int = 0) -> int:
+        """Smallest key >= ``start`` that routes to shard ``s`` under the
+        current table (host-side search; drivers use it to address a specific
+        shard, e.g. to drain one request queue)."""
+        for base in range(start, start + (1 << 22), 4096):
+            cand = np.arange(base, base + 4096, dtype=np.int64)
+            hit = np.nonzero(self.route_host(cand) == s)[0]
+            if hit.size:
+                return int(cand[hit[0]])
+        raise ValueError(f"no key routes to shard {s} (unrouted shard?)")
 
     # ------------------------------------------------------- volatile path
     def step(self, keys, ops, params):
         """One fused phase over a flat batch; returns (responses, kinds)."""
-        self.state, self.meta, resp, kinds = sharded_step(
-            self.state,
+        self.groups, self.meta, resp, kinds = hetero_step(
+            self.groups,
+            jnp.asarray(self.table),
             jnp.asarray(keys),
             jnp.asarray(ops, jnp.int32),
             jnp.asarray(params, jnp.float32),
             self.meta,
-            kind=self.kind,
-            n_shards=self.n_shards,
+            kinds=tuple(self.kinds),
             lanes=self.lanes,
             backend=self.backend,
         )
@@ -378,14 +604,15 @@ class ShardedDFCRuntime:
         raw = self.fs.read(self._epoch_path(s))
         return int(raw.decode()) if raw else 0
 
-    def _persist_shard(self, s: int, epoch_target: int) -> List[str]:
-        """pwb shard ``s``'s post-combine state into its inactive slot."""
-        one = shard_slice(self.state, s)
+    def _persist_shard(self, s: int, epoch_target: int, state=None) -> List[str]:
+        """pwb shard ``s``'s post-combine (or explicitly given) state into
+        its inactive slot."""
+        one = self._shard_state(s) if state is None else state
         slot = self._slot_dir(s, epoch_target - 2, nxt=True)
         leaves, _ = jax.tree_util.tree_flatten(one)
         files = []
         meta = {
-            "kind": self.kind,
+            "kind": self.kinds[s],
             "epoch": epoch_target,
             "leaves": [],
             "phases": int(self.meta["phases"][s]),
@@ -406,6 +633,24 @@ class ShardedDFCRuntime:
         files.append(rel)
         return files
 
+    # ------------------------------------------------- durable routing layout
+    _REPOCH_PATH = "routing/rEpoch"
+    _INTENT_PATH = "reshard/intent.json"
+
+    def _routing_slot(self, repoch: int, nxt: bool) -> str:
+        return f"routing/slot{(repoch // 2 + (1 if nxt else 0)) % 2}.json"
+
+    def _routing_record(self, target: int, table, kinds) -> Dict[str, Any]:
+        return {
+            "epoch": target,
+            "table": [int(x) for x in table],
+            "kinds": list(kinds),
+            "n_shards": len(kinds),
+            "n_buckets": self.n_buckets,
+            "capacity": self.capacity,
+            "lanes": self.lanes,
+        }
+
     # --------------------------------------------------------- combine phase
     def combine_phase(self) -> List[int]:
         """One durable combining phase over every ready announcement.
@@ -414,8 +659,9 @@ class ShardedDFCRuntime:
         order — the combiner's walk over the announcement array), runs the
         fused device step, persists every touched shard into its inactive
         slot, writes responses + per-op commit targets into the combined
-        announcements, pfences ONCE, then commits each touched shard's epoch
-        with the two-increment protocol.  Returns the combined thread ids.
+        announcements, pfences ONCE (paper line 80), then commits each
+        touched shard's epoch with the two-increment protocol (lines 81-83).
+        Returns the combined thread ids.
         """
         assert self.fs is not None, "combine_phase needs a SimFS"
         ready = self.ready_announcements()
@@ -428,13 +674,13 @@ class ShardedDFCRuntime:
             [np.asarray(anns[t]["params"], np.float32) for t in ready]
         )
 
-        epochs_before = np.asarray(self.state.epoch)
+        epochs_before = self.shard_epochs()
         resp, kinds = self.step(keys, ops, params)
         resp = np.asarray(resp)
         kinds = np.asarray(kinds)
-        epochs_after = np.asarray(self.state.epoch)
+        epochs_after = self.shard_epochs()
         touched = [int(s) for s in np.nonzero(epochs_after != epochs_before)[0]]
-        shard = shard_of_keys_host(keys, self.n_shards)
+        shard = self.route_host(keys)
         targets = epochs_after[shard]  # per-op commit target (its shard)
 
         files: List[str] = []
@@ -451,6 +697,7 @@ class ShardedDFCRuntime:
                 "kinds": [int(k) for k in kinds[sl]],
                 "shards": [int(s) for s in shard[sl]],
                 "targets": [int(e) for e in targets[sl]],
+                "repoch": self.r_epoch,
             }
             rel = self._ann_path(t, self._read_valid(t) & 1)
             self.fs.write(rel, json.dumps(anns[t]).encode())
@@ -468,8 +715,8 @@ class ShardedDFCRuntime:
     def read_responses(self, thread: int) -> Optional[Dict[str, Any]]:
         """A thread's combined announcement, or None while still pending.
 
-        Returns ``{"token", "resp", "kinds", "shards", "targets"}`` — the
-        durable response record written by the last combine_phase that
+        Returns ``{"token", "resp", "kinds", "shards", "targets", ...}`` —
+        the durable response record written by the last combine_phase that
         included this thread's announcement.
         """
         ann = self._read_ann(thread, self._read_valid(thread) & 1)
@@ -477,38 +724,250 @@ class ShardedDFCRuntime:
             return None
         return dict(ann["val"], token=ann["token"])
 
+    # ----------------------------------------------------------- resharding
+    def _snapshot_donor(self, s: int, op: str) -> None:
+        """Detectable typed snapshot of the donor shard, via the checkpoint
+        manager's ``combine_structure`` (same SimFS: fault-injection sweeps
+        tick through the snapshot's pwb/pfence ops too)."""
+        self._reshard_seq += 1
+        mgr = DFCCheckpointManager(self.fs, 1, prefix="reshard/ckpt")
+        e = mgr._read_epoch()
+        if e % 2 == 1:  # a crash mid-snapshot commit left the log's epoch
+            mgr._write_epoch(e + 1, sync=True)  # odd: finish the increment
+        mgr.announce(0, {"step": self._reshard_seq})
+        mgr.combine_structure(
+            self._shard_state(s),
+            extra_meta={"donor": int(s), "op": op, "repoch": self.r_epoch},
+        )
+
+    def _commit_routing(
+        self,
+        intent: Dict[str, Any],
+        new_table: np.ndarray,
+        new_kinds: List[str],
+        shard_files: List[str],
+    ) -> None:
+        """Steps 3-5 of the reshard transaction: intent, routing slot (+ any
+        pre-written shard slots), ONE pfence, then the rEpoch two-increment
+        commit — the transaction's commit point."""
+        target = self.r_epoch + 2
+        self.fs.write(self._INTENT_PATH, json.dumps(intent).encode())
+        self.fs.fsync([self._INTENT_PATH])
+        slot = self._routing_slot(self.r_epoch, nxt=True)
+        self.fs.write(
+            slot,
+            json.dumps(self._routing_record(target, new_table, new_kinds)).encode(),
+        )
+        self.fs.fsync(shard_files + [slot])
+        self.fs.write(self._REPOCH_PATH, str(target - 1).encode())
+        self.fs.fsync([self._REPOCH_PATH])
+        self.fs.write(self._REPOCH_PATH, str(target).encode())
+
+    def split_shard(self, donor: int) -> int:
+        """Split a hot shard: move half of the donor's buckets to a NEW empty
+        shard of the same kind.  Crash-consistent (commit point = rEpoch);
+        the donor's contents stay put — only future routing changes — so
+        there is nothing to roll forward on the shard side.  Returns the new
+        shard id.
+        """
+        buckets = [b for b in range(self.n_buckets) if self.table[b] == donor]
+        if len(buckets) < 2:
+            raise ValueError(
+                f"shard {donor} holds {len(buckets)} bucket(s); construct the "
+                "fabric with n_buckets > n_shards to make shards splittable"
+            )
+        kind = self.kinds[donor]
+        new_id = self.n_shards
+        new_table = self.table.copy()
+        new_table[buckets[1::2]] = new_id
+        new_kinds = self.kinds + [kind]
+
+        if self.fs is not None:
+            self.combine_phase()  # drain in-flight announcements
+            self._snapshot_donor(donor, "split")
+            intent = {
+                "op": "split",
+                "donor": int(donor),
+                "new_shard": new_id,
+                "kind": kind,
+                "pre_repoch": self.r_epoch,
+                "target_repoch": self.r_epoch + 2,
+                "target_epochs": {},  # split moves no shard state
+            }
+            # the new shard needs no durable state: no cEpoch file means
+            # epoch 0, no slot means a fresh empty init on recovery
+            self._commit_routing(intent, new_table, new_kinds, [])
+            self.fs.delete(self._INTENT_PATH)
+
+        # in-memory install
+        fresh = STRUCTS[kind].init(self.capacity)
+        self.groups[kind] = jax.tree_util.tree_map(
+            lambda leaf, f: jnp.concatenate([leaf, f[None]]), self.groups[kind], fresh
+        )
+        self.kinds = new_kinds
+        self.n_shards += 1
+        self.table = new_table
+        self.r_epoch += 2
+        new_row = _init_meta([kind])  # single source of truth for columns
+        self.meta = {
+            key: jnp.concatenate(
+                [col, new_row.get(key, jnp.zeros((1,), col.dtype))]
+            )
+            for key, col in self.meta.items()
+        }
+        return new_id
+
+    def merge_shards(self, src: int, dst: int) -> None:
+        """Merge a cold shard into another of the SAME kind: ``dst`` absorbs
+        ``src``'s committed contents (appended after ``dst``'s own — enqueued
+        at the tail / pushed on top / pushed right), ``src`` empties and its
+        buckets re-route to ``dst``.  ``src``'s shard id stays allocated but
+        unrouted, so recorded detectability verdicts never dangle.
+
+        Crash-consistent: both post-merge states are pwb'd into their
+        inactive slots and pfenced BEFORE the rEpoch commit; recovery rolls
+        their cEpochs forward when the rEpoch committed and the per-shard GC
+        reclaims the orphaned slots when it did not.
+        """
+        if src == dst:
+            raise ValueError("cannot merge a shard into itself")
+        if self.kinds[src] != self.kinds[dst]:
+            raise ValueError(
+                f"kind mismatch: shard {src} is {self.kinds[src]!r}, "
+                f"shard {dst} is {self.kinds[dst]!r}"
+            )
+        kind = self.kinds[src]
+        if self.fs is not None:
+            self.combine_phase()  # drain in-flight announcements
+        merged = self.shard_contents(dst) + self.shard_contents(src)
+        if len(merged) + self.lanes > self.capacity:
+            raise ValueError(
+                f"merged contents ({len(merged)}) + lanes ({self.lanes}) "
+                f"exceed capacity {self.capacity}"
+            )
+        epochs = self.shard_epochs()
+        t_src, t_dst = int(epochs[src]) + 2, int(epochs[dst]) + 2
+        src_new = state_from_contents(kind, [], self.capacity, t_src)
+        dst_new = state_from_contents(kind, merged, self.capacity, t_dst)
+        new_table = self.table.copy()
+        new_table[new_table == src] = dst
+
+        if self.fs is not None:
+            self._snapshot_donor(src, "merge")
+            intent = {
+                "op": "merge",
+                "src": int(src),
+                "dst": int(dst),
+                "kind": kind,
+                "pre_repoch": self.r_epoch,
+                "target_repoch": self.r_epoch + 2,
+                "target_epochs": {str(src): t_src, str(dst): t_dst},
+            }
+            files = self._persist_shard(src, t_src, state=src_new)
+            files += self._persist_shard(dst, t_dst, state=dst_new)
+            self._commit_routing(intent, new_table, self.kinds, files)
+            for sid, tgt in ((src, t_src), (dst, t_dst)):
+                self.fs.write(self._epoch_path(sid), str(tgt - 1).encode())
+                self.fs.fsync([self._epoch_path(sid)])
+                self.fs.write(self._epoch_path(sid), str(tgt).encode())
+            self.fs.delete(self._INTENT_PATH)
+
+        self._set_shard_state(src, src_new)
+        self._set_shard_state(dst, dst_new)
+        self.table = new_table
+        self.r_epoch += 2
+
     # -------------------------------------------------------------- recover
     @classmethod
     def recover(
         cls,
         fs: SimFS,
         *,
-        kind: str,
-        n_shards: int,
+        kind: Union[str, Sequence[str]] = "queue",
+        n_shards: int = 1,
         capacity: int,
         lanes: int,
         backend: str = "jnp",
         n_threads: int = 1,
+        n_buckets: Optional[int] = None,
+        table=None,
     ) -> Tuple["ShardedDFCRuntime", Dict[int, Dict[str, Any]]]:
-        """Recover every shard + per-thread/per-op detectability report.
+        """Recover the fabric + per-thread/per-op detectability report.
 
-        Per shard: round an odd durable epoch up to even (finish the
-        interrupted second increment), garbage-collect the inactive slot,
-        and reload the active slot (or a fresh init when the shard never
-        committed).  Per announced op: applied iff its shard's committed
-        epoch reached the target recorded with the response; everything else
-        is reported not-applied and is safe to re-announce.
+        Topology first: the durable routing record (if any) overrides the
+        caller's ``kind`` / ``n_shards`` / ``table`` bootstrap arguments, so
+        a fabric that resharded before the crash comes back with its
+        post-reshard shape (pass the construction-time ``table`` when
+        recovering a custom-routed fabric that never resharded — the first
+        reshard is what makes the topology durable).
+        An interrupted reshard is resolved by its intent record: rolled
+        FORWARD when the routing epoch committed (finish the touched shards'
+        cEpoch bumps — their slot data was pfenced before the commit point),
+        rolled BACK otherwise (old routing; the per-shard GC reclaims the
+        orphaned slot writes).
+
+        Then per shard: round an odd durable epoch up to even (finish the
+        interrupted second increment, paper lines 28-30), garbage-collect the
+        inactive slot (§4), and reload the active slot (or a fresh init when
+        the shard never committed).  Per announced op: applied iff its
+        shard's committed epoch reached the target recorded with the
+        response; everything else is reported not-applied and is safe to
+        re-announce (see ``replay_pending``).
         """
+        # --- routing epoch: round odd up (finish the second increment)
+        raw = fs.read(cls._REPOCH_PATH)
+        repoch = int(raw.decode()) if raw else 0
+        if repoch % 2 == 1:
+            repoch += 1
+            fs.write(cls._REPOCH_PATH, str(repoch).encode())
+            fs.fsync([cls._REPOCH_PATH])
+
+        # --- adopt the committed routing record, if any
+        kinds = [kind] * n_shards if isinstance(kind, str) else list(kind)
+        active_slot = f"routing/slot{(repoch // 2) % 2}.json"
+        rec_raw = fs.read(active_slot)
+        if rec_raw:
+            rec = json.loads(rec_raw.decode())
+            kinds = list(rec["kinds"])
+            n_shards = int(rec["n_shards"])
+            n_buckets = int(rec["n_buckets"])
+            capacity = int(rec.get("capacity", capacity))
+            lanes = int(rec.get("lanes", lanes))
+            table = np.asarray(rec["table"], np.int32)
+
+        # --- resolve an interrupted reshard via its intent record
+        intent_raw = fs.read(cls._INTENT_PATH)
+        if intent_raw:
+            intent = json.loads(intent_raw.decode())
+            if intent["target_repoch"] <= repoch:
+                # committed: roll the touched shards' cEpochs forward (their
+                # slot data was pfenced before the rEpoch commit)
+                for sid_str, tgt in intent.get("target_epochs", {}).items():
+                    p = f"shard_{int(sid_str)}/cEpoch"
+                    raw_e = fs.read(p)
+                    cur = int(raw_e.decode()) if raw_e else 0
+                    if cur < int(tgt):
+                        fs.write(p, str(int(tgt)).encode())
+                        fs.fsync([p])
+            else:
+                # aborted: routing and shard epochs are still pre-reshard;
+                # drop the half-written inactive routing slot
+                fs.delete(f"routing/slot{(repoch // 2 + 1) % 2}.json")
+            fs.delete(cls._INTENT_PATH)
+
         rt = cls(
-            kind, n_shards, capacity, lanes,
+            kinds, n_shards, capacity, lanes,
             backend=backend, fs=fs, n_threads=n_threads,
+            n_buckets=n_buckets, table=table,
         )
+        rt.r_epoch = repoch
+
         shard_states = []
         phases = np.zeros((n_shards,), np.int32)
         ops_combined = np.zeros((n_shards,), np.int32)
         committed_epochs = np.zeros((n_shards,), np.int64)
-        fresh = STRUCTS[kind].init(capacity)
         for s in range(n_shards):
+            fresh = STRUCTS[kinds[s]].init(capacity)
             epoch = rt._read_shard_epoch(s)
             if epoch % 2 == 1:  # crashed between the two increments
                 epoch += 1
@@ -541,10 +1000,14 @@ class ShardedDFCRuntime:
                 if rel not in live:
                     fs.delete(rel)
 
-        rt.state = stack_shards(shard_states)
+        rt.groups = {
+            k: stack_shards([shard_states[s] for s in ids])
+            for k, ids in _group_ids(tuple(kinds)).items()
+        }
         rt.meta = {
             "phases": jnp.asarray(phases),
             "ops_combined": jnp.asarray(ops_combined),
+            "kind": jnp.asarray([KIND_CODES[k] for k in kinds], jnp.int32),
         }
 
         report: Dict[int, Dict[str, Any]] = {}
@@ -579,13 +1042,67 @@ class ShardedDFCRuntime:
             report[t] = {"token": ann["token"], "ops": verdicts}
         return rt, report
 
+    def replay_pending(self, report: Dict[int, Dict[str, Any]]) -> List[int]:
+        """Re-announce exactly the not-applied ops of every thread (read back
+        from the durable announcement records) and run one combining phase —
+        the exactly-once resume step after a crash mid-phase or mid-reshard.
+        Returns the thread ids that were replayed.
+
+        Ops whose phase committed with an ``R_NONE`` response are NOT
+        replayed: they completed as no-ops (an op code the target structure
+        does not interpret, legal in mixed fabrics) and would no-op again on
+        every replay forever.  Uncommitted ops (``kind is None``) and
+        ``R_OVERFLOW`` rejections are replayed."""
+        replayed = []
+        for t in sorted(report):
+            r = report[t]
+            if r["token"] is None:
+                continue
+            ann = self._read_ann(t, self._read_valid(t) & 1)
+            n_ops = len(ann.get("ops", []))
+            if not n_ops:
+                continue
+            redo = [
+                i for i, v in enumerate(r["ops"])
+                if not v.applied and v.kind != R_NONE
+            ]
+            if not redo:
+                continue
+            self.announce(
+                t,
+                [ann["keys"][i] for i in redo],
+                [ann["ops"][i] for i in redo],
+                [ann["params"][i] for i in redo],
+                token=ann["token"],
+            )
+            replayed.append(t)
+        if replayed:
+            self.combine_phase()
+        return replayed
+
     # -------------------------------------------------------------- helpers
     def shard_contents(self, s: int) -> List[float]:
         """Committed contents of shard ``s`` (bottom-to-top / left-to-right)."""
-        one = shard_slice(self.state, s)
-        if self.kind == "stack":
+        one = self._shard_state(s)
+        if self.kinds[s] == "stack":
             top = int(one.active_size())
             return [float(v) for v in np.asarray(one.values[:top])]
         cap = one.values.shape[0]
         e = one.active_ends()
         return [float(one.values[i % cap]) for i in range(int(e[0]), int(e[1]))]
+
+    def shard_sizes(self) -> np.ndarray:
+        """Committed sizes of every shard (for hot/cold reshard policies) —
+        read from the active root counters, without materializing contents."""
+        out = np.zeros((self.n_shards,), np.int64)
+        for k, ids in _group_ids(tuple(self.kinds)).items():
+            st = self.groups[k]
+            rows = np.arange(len(ids))
+            active = (np.asarray(st.epoch) // 2) % 2
+            if k == "stack":
+                sizes = np.asarray(st.size)[rows, active]
+            else:
+                ends = np.asarray(st.ends)[rows, active]  # [Sg, 2]
+                sizes = ends[:, 1] - ends[:, 0]
+            out[np.asarray(ids)] = sizes
+        return out

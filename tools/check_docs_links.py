@@ -1,0 +1,56 @@
+"""Docs link check: dead RELATIVE links in markdown fail the build.
+
+Scans every ``*.md`` under ``docs/`` plus the repo-root markdown files for
+``[text](target)`` links, skips absolute URLs (http/https/mailto) and pure
+in-page anchors, resolves each remaining target against the file's own
+directory, and exits non-zero listing every target that does not exist.
+
+Run:  python tools/check_docs_links.py  (CI runs it on every push)
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(root: Path):
+    yield from sorted(root.glob("*.md"))
+    yield from sorted((root / "docs").rglob("*.md"))
+
+
+def check(root: Path) -> list:
+    broken = []
+    for md in md_files(root):
+        for m in LINK_RE.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                broken.append((md.relative_to(root), target))
+    return broken
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    broken = check(root)
+    for md, target in broken:
+        print(f"BROKEN {md}: ({target})")
+    if broken:
+        print(f"{len(broken)} dead relative link(s)", file=sys.stderr)
+        return 1
+    n = len(list(md_files(root)))
+    print(f"docs link check: {n} markdown files OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
