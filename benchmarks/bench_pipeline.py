@@ -1,0 +1,186 @@
+"""Serial vs pipelined durable path: phases/sec at matched pwb/op.
+
+The ISSUE-4 measurement: the serial durable path runs combine -> persist ->
+respond strictly in sequence, one dispatch per combining phase, so
+persistence latency sits on the critical path of the next batch.  The
+pipelined path (a) dispatches the device combine for chain k+1 BEFORE
+retiring chain k (persist/pfence overlap the device work) and (b) chains
+the ready per-thread batches through ONE fused dispatch
+(``dfc_sharded_multi_combine_step``) while still persisting and committing
+batch-by-batch — so both modes execute the identical durable schedule
+(equal pwb/op and pfence/op by construction) and the speedup is pure
+dispatch amortization + overlap.
+
+Workload: ``n_threads`` announcing threads, each contributing one
+``batch``-op announcement per round; serial commits them as one phase per
+thread-batch, pipelined as one chained dispatch per round.  Both commit
+``rounds x n_threads`` phases over identical batches.
+
+Emits ``name,value,derived`` rows via ``emit``; script mode writes
+``BENCH_pipeline.json`` (see docs/benchmarks.md).  ``--smoke`` is wired
+into CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.checkpoint.dfc_checkpoint import SimFS
+from repro.runtime.dfc_shard import R_OVERFLOW, ShardedDFCRuntime
+
+
+def _workload(n_threads, batch, rounds, universe=4096, seed=0):
+    """rounds x n_threads identical announcement batches (mixed insert/pop
+    codes shared by all three structures)."""
+    rng = np.random.default_rng(seed)
+    return [
+        [
+            (
+                rng.integers(0, universe, batch),
+                rng.integers(1, 3, batch),
+                rng.random(batch).astype(np.float32),
+            )
+            for _ in range(n_threads)
+        ]
+        for _ in range(rounds)
+    ]
+
+
+def _drive(rt, schedule, pipelined: bool) -> int:
+    """Run the schedule; returns applied-op count.  Serial: one combining
+    phase per thread-batch.  Pipelined: one chained dispatch per round,
+    retirement overlapped with the next round's combine."""
+    applied = 0
+    token = 0
+    for round_ in schedule:
+        for t, (keys, ops, params) in enumerate(round_):
+            token += 1
+            rt.announce(t, keys, ops, params, token=token)
+            if not pipelined:
+                rt.combine_phase()
+                val = rt.read_responses(t)
+                applied += int(np.sum(np.asarray(val["kinds"]) != R_OVERFLOW))
+        if pipelined:
+            rt.combine_phase()
+    rt.flush()
+    if pipelined:  # responses read from both slots by token, post-hoc
+        token = 0
+        for round_ in schedule:
+            for t in range(len(round_)):
+                token += 1
+                val = rt.read_responses(t, token=token)
+                if val is not None:
+                    applied += int(
+                        np.sum(np.asarray(val["kinds"]) != R_OVERFLOW)
+                    )
+                else:  # slot reused two announcements later: count the batch
+                    applied += len(round_[t][1])
+    return applied
+
+
+def _one_config(kind, n_shards, n_threads, batch, rounds, results, emit):
+    lanes = batch
+    capacity = batch * (rounds * n_threads + 2)
+    schedule = _workload(n_threads, batch, rounds)
+    modes = [
+        ("serial", dict(pipeline=False, chain=1)),
+        ("pipelined", dict(pipeline=True, chain=n_threads)),
+    ]
+    row = {
+        "kind": kind,
+        "n_shards": n_shards,
+        "n_threads": n_threads,
+        "batch": batch,
+        "rounds": rounds,
+        "phases": rounds * n_threads,
+    }
+    # rep 0 compiles every (batch-shape, chain) variant; timed reps are
+    # INTERLEAVED across modes (serial, pipelined, serial, ...) so machine
+    # drift hits both equally, and the best rep per mode is kept
+    best = {mode: (float("inf"), None, None) for mode, _ in modes}
+    root = Path(tempfile.mkdtemp(prefix="dfc_bench_pipeline_"))
+    try:
+        for rep in range(4):
+            for mode, kw in modes:
+                fs = SimFS(root / f"{mode}_r{rep}")
+                rt = ShardedDFCRuntime(
+                    kind, n_shards, capacity, lanes,
+                    fs=fs, n_threads=n_threads, **kw,
+                )
+                t0 = time.perf_counter()
+                applied = _drive(rt, schedule, pipelined=kw["pipeline"])
+                dt = time.perf_counter() - t0
+                if rep and dt < best[mode][0]:
+                    best[mode] = (dt, applied, dict(fs.stats))
+                shutil.rmtree(root / f"{mode}_r{rep}", ignore_errors=True)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    for mode, _ in modes:
+        dt, applied, stats = best[mode]
+        phases = rounds * n_threads
+        row[f"{mode}_phases_per_s"] = phases / dt
+        row[f"{mode}_ops_per_s"] = applied / dt
+        row[f"{mode}_pwb_per_op"] = stats["pwb"] / max(applied, 1)
+        row[f"{mode}_pfence_per_op"] = stats["pfence"] / max(applied, 1)
+    row["speedup"] = row["pipelined_phases_per_s"] / row["serial_phases_per_s"]
+    name = f"pipeline_{kind}_s{n_shards}_t{n_threads}_b{batch}"
+    emit(
+        name,
+        f"{row['pipelined_phases_per_s']:.0f}",
+        f"phases/s,serial={row['serial_phases_per_s']:.0f},"
+        f"speedup={row['speedup']:.2f},"
+        f"pwb/op={row['pipelined_pwb_per_op']:.2f},"
+        f"serial_pwb/op={row['serial_pwb_per_op']:.2f}",
+    )
+    results.append(row)
+
+
+def run(emit, smoke: bool = False):
+    results = []
+    if smoke:
+        # queue + deque at 4 announcing threads: combine work heavy enough —
+        # and the serial mode paying 4 dispatches per round to the chained
+        # mode's one — that the overlap/chaining win is robust on CPU jax
+        # (the full grid also covers the stack and thread counts 1/2)
+        grid = [("queue", 4, 4), ("deque", 4, 4)]
+        batch, rounds = 48, 15
+    else:
+        grid = [
+            (kind, s, t)
+            for kind in ("stack", "queue", "deque")
+            for s in (4, 16)
+            for t in (1, 2, 4)
+        ]
+        batch, rounds = 128, 24
+    for kind, n_shards, n_threads in grid:
+        _one_config(kind, n_shards, n_threads, batch, rounds, results, emit)
+    return results
+
+
+def main(emit, smoke: bool = True):
+    """Benchmark-harness entry point (smoke-sized by default; run.py and CI
+    call this — the full grid is `python bench_pipeline.py` without
+    --smoke)."""
+    return run(emit, smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="seconds-scale CI subset")
+    ap.add_argument("--out", default="BENCH_pipeline.json", help="JSON results path")
+    args = ap.parse_args()
+    rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)
+    Path(args.out).write_text(json.dumps(rows, indent=2) + "\n")
+    print(f"# wrote {args.out} ({len(rows)} configs)")
+    slower = [
+        r for r in rows if r["pipelined_phases_per_s"] <= r["serial_phases_per_s"]
+    ]
+    if slower:
+        print(f"# WARNING: pipelined <= serial on {len(slower)} config(s)")

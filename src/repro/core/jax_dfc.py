@@ -47,6 +47,8 @@ import dataclasses
 import functools
 from typing import Any, Callable, Dict, Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -606,6 +608,73 @@ def state_from_contents(kind: str, contents, capacity: int, epoch: int):
     ends = state.ends.at[active].set(jnp.asarray([0, n], jnp.int32))
     cls = spec.state_cls
     return cls(values=values, ends=ends, epoch=jnp.asarray(epoch, jnp.int32))
+
+
+# ============================================================ announce ring
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AnnounceRing:
+    """Device-side announcement queue: a preallocated ring of (key, op,
+    param) lanes that announced batches land in, so combining phases consume
+    device arrays directly instead of reconstructing them from per-thread
+    durable records each phase (the durable mirror — SimFS — keeps only the
+    compact JSON needed for recovery and replay).
+
+    ``tail`` is an absolute (monotone) producer counter; slot index =
+    counter % slots.  Consumption bookkeeping (which spans are still live) is
+    host-side: the ring itself is volatile staging, rebuilt from the durable
+    announcement mirror on recovery.
+    """
+
+    keys: jax.Array  # i32[slots]
+    ops: jax.Array  # i32[slots]
+    params: jax.Array  # f32[slots]
+    tail: jax.Array  # i32[] — absolute producer counter
+
+
+def init_announce_ring(slots: int) -> AnnounceRing:
+    """STRUCTS-style init: an empty device ring of ``slots`` lanes."""
+    return AnnounceRing(
+        keys=jnp.zeros((slots,), jnp.int32),
+        ops=jnp.full((slots,), OP_NONE, jnp.int32),
+        params=jnp.zeros((slots,), jnp.float32),
+        tail=jnp.zeros((), jnp.int32),
+    )
+
+
+@jax.jit
+def ring_announce(
+    ring: AnnounceRing, keys: jax.Array, ops: jax.Array, params: jax.Array
+) -> AnnounceRing:
+    """Land one announced batch at the ring tail (device-side scatter).
+
+    The caller guarantees the span [tail, tail+n) does not overlap a span
+    that is still awaiting its combining phase (host-side bookkeeping in the
+    runtime); the write itself is one masked scatter per field.
+    """
+    n = ops.shape[0]
+    slots = ring.keys.shape[0]
+    pos = (ring.tail + jnp.arange(n)) % slots
+    return AnnounceRing(
+        keys=ring.keys.at[pos].set(jnp.asarray(keys).astype(jnp.int32)),
+        ops=ring.ops.at[pos].set(jnp.asarray(ops).astype(jnp.int32)),
+        params=ring.params.at[pos].set(jnp.asarray(params).astype(jnp.float32)),
+        tail=ring.tail + n,
+    )
+
+
+@jax.jit
+def _ring_gather(ring: AnnounceRing, idx: jax.Array):
+    return ring.keys[idx], ring.ops[idx], ring.params[idx]
+
+
+def ring_drain(ring: AnnounceRing, start: int, n: int):
+    """Read span [start, start+n) of the ring as device arrays (the combine
+    path's view; no host round-trip).  ``start`` is the absolute counter the
+    span was announced at."""
+    slots = int(ring.keys.shape[0])
+    idx = (start + np.arange(n, dtype=np.int32)) % slots
+    return _ring_gather(ring, jnp.asarray(idx))
 
 
 # ============================================================ shard stacking

@@ -22,7 +22,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.jax_dfc import DequeState, QueueState, StackState
+from repro.core.jax_dfc import OP_NONE, DequeState, QueueState, StackState
 from repro.kernels.dfc_reduce.kernel import (
     dfc_deque_reduce_call,
     dfc_deque_reduce_grid_call,
@@ -282,6 +282,73 @@ SHARDED_COMBINE_STEPS = {
 }
 
 
+# -------------------------------------------------------------- multi-batch
+def _one_sharded_combine(kind: str, backend: str, state, ops, params):
+    """One sharded combining phase of ``kind`` — the shared dispatch used by
+    both the single-batch and the chained entry points: a ``vmap`` of the
+    single-object combine for the jnp backend, one Pallas grid otherwise."""
+    from repro.core.jax_dfc import STRUCTS
+
+    if backend == "jnp":
+        return jax.vmap(STRUCTS[kind].combine)(state, ops, params)
+    return SHARDED_COMBINE_STEPS[kind](state, ops, params, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "backend"))
+def dfc_sharded_multi_combine_step(state, ops, params, *, kind, backend="ref"):
+    """Chain B sharded combining phases through ONE dispatch.
+
+    ``ops`` / ``params`` are ``[B, S, N]`` per-batch announcement matrices;
+    the B batches are applied sequentially (``lax.scan`` over the leading
+    batch axis) to the shard-stacked ``state``, exactly as B separate
+    ``SHARDED_COMBINE_STEPS[kind]`` calls would — but the whole chain costs
+    one dispatch (one scanned vmap for the jnp backend, one scanned Pallas
+    grid for the kernel backends), which is what lets a pipelined durable
+    path amortize dispatch overhead across batches.
+
+    Per batch, shards that received no ops keep their state AND epoch (no
+    phantom phases), so the per-shard epoch after batch b is exactly what b
+    separate phases would have produced — the two-increment durable commit
+    per batch is unchanged.
+
+    Returns ``(states, resp, kinds)`` where ``states`` is the shard-stacked
+    state AFTER each batch (every leaf gains a leading B axis; ``states[-1]``
+    is the final state) and ``resp`` / ``kinds`` are ``[B, S, N]``.
+    """
+
+    def body(carry, xs):
+        b_ops, b_params = xs
+        combined, s_resp, s_kinds = _one_sharded_combine(
+            kind, backend, carry, b_ops, b_params
+        )
+        touched = jnp.any(b_ops != OP_NONE, axis=1)  # bool[S]
+
+        def _select(new_leaf, old_leaf):
+            t = touched.reshape(touched.shape + (1,) * (new_leaf.ndim - 1))
+            return jnp.where(t, new_leaf, old_leaf)
+
+        new_state = jax.tree_util.tree_map(_select, combined, carry)
+        return new_state, (new_state, s_resp, s_kinds)
+
+    _, (states, resp, kinds) = jax.lax.scan(body, state, (ops, params))
+    return states, resp, kinds
+
+
+def dfc_hetero_multi_combine_step(groups, group_ops, group_params, *, backend="ref"):
+    """Chained heterogeneous combine: ``dfc_sharded_multi_combine_step`` per
+    kind group present.  ``group_ops[kind]`` is ``[B, S_kind, N]``; every kind
+    chains its B batches in one dispatch.  Returns ``{kind: (states, resp,
+    kinds)}`` with the per-batch leading axis (see the homogeneous twin).
+    Meant to be called inside an enclosing jit (not jitted itself)."""
+    out = {}
+    for kind in sorted(groups):
+        out[kind] = dfc_sharded_multi_combine_step(
+            groups[kind], group_ops[kind], group_params[kind],
+            kind=kind, backend=backend,
+        )
+    return out
+
+
 # ------------------------------------------------------------- heterogeneous
 def dfc_hetero_combine_step(groups, group_ops, group_params, *, backend="ref"):
     """STRUCTS-dispatched combine over a heterogeneous shard fabric.
@@ -297,16 +364,9 @@ def dfc_hetero_combine_step(groups, group_ops, group_params, *, backend="ref"):
     Returns ``{kind: (new_state, responses[S_kind, N], kinds[S_kind, N])}``.
     Meant to be called inside an enclosing jit (it is not jitted itself).
     """
-    from repro.core.jax_dfc import STRUCTS
-
     out = {}
     for kind in sorted(groups):
-        if backend == "jnp":
-            out[kind] = jax.vmap(STRUCTS[kind].combine)(
-                groups[kind], group_ops[kind], group_params[kind]
-            )
-        else:
-            out[kind] = SHARDED_COMBINE_STEPS[kind](
-                groups[kind], group_ops[kind], group_params[kind], backend=backend
-            )
+        out[kind] = _one_sharded_combine(
+            kind, backend, groups[kind], group_ops[kind], group_params[kind]
+        )
     return out

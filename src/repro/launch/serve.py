@@ -64,6 +64,7 @@ class RequestQueueTier:
         fs: Optional[SimFS] = None,
         reshard_backlog: Optional[int] = None,
         n_buckets: Optional[int] = None,
+        pipeline: bool = False,
     ):
         kinds = ["queue"] * n_queues + ["stack"]
         n_shards = n_queues + 1
@@ -77,10 +78,11 @@ class RequestQueueTier:
         if durable and fs is None:
             fs = SimFS(Path(tempfile.mkdtemp(prefix="dfc_serve_tier_")))
         self.durable = durable
+        self.pipeline = pipeline
         self.rt = ShardedDFCRuntime(
             kinds, n_shards, capacity, lanes,
             fs=fs if durable else None, n_threads=1,
-            n_buckets=n_buckets, table=table,
+            n_buckets=n_buckets, table=table, pipeline=pipeline,
         )
         self.reshard_backlog = reshard_backlog
         self._rep_keys: Dict[int, int] = {}
@@ -99,14 +101,25 @@ class RequestQueueTier:
         return self._rep_keys[shard]
 
     def _phase(self, keys, ops, params) -> Tuple[np.ndarray, np.ndarray]:
-        """One tier phase: fused volatile step, or announce+combine+read."""
+        """One tier phase: fused volatile step, or announce+combine+read.
+
+        The durable path goes through the fabric's announcement RING: the
+        payload lands in the preallocated device ring at ``announce`` and
+        the combining phase consumes it there — SimFS only carries the
+        compact durable mirror.  The tier needs each phase's responses
+        synchronously (admission decisions), so in pipelined mode it flushes
+        the one in-flight chain right after dispatch; the ring fast path and
+        the per-batch commit schedule are identical either way.
+        """
         if not self.durable:
             resp, kinds = self.rt.step(keys, ops, params)
             return np.asarray(resp), np.asarray(kinds)
         self._token += 1
         self.rt.announce(0, keys, ops, params, token=self._token)
         self.rt.combine_phase()
-        val = self.rt.read_responses(0)
+        if self.pipeline:
+            self.rt.flush()
+        val = self.rt.read_responses(0, token=self._token)
         return np.asarray(val["resp"]), np.asarray(val["kinds"])
 
     def session_key(self, sid: int) -> int:
@@ -246,6 +259,8 @@ def main():
                     help="request-queue shards in the DFC fabric")
     ap.add_argument("--durable", action="store_true",
                     help="run the tier over the SimFS persistence path")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="pipelined durable path (dispatch/retire overlap)")
     ap.add_argument("--reshard-backlog", type=int, default=0,
                     help="split a request shard when its backlog exceeds N")
     args = ap.parse_args()
@@ -267,6 +282,7 @@ def main():
         lanes=max(arrival, args.batch) * 2,
         durable=args.durable,
         reshard_backlog=args.reshard_backlog or None,
+        pipeline=args.pipeline,
     )
 
     rng = np.random.default_rng(0)

@@ -2,6 +2,7 @@ from repro.runtime.dfc_shard import (
     R_OVERFLOW,
     OpVerdict,
     ShardedDFCRuntime,
+    hetero_multi_step,
     hetero_step,
     route_batch,
     route_keys_host,
@@ -19,6 +20,7 @@ __all__ = [
     "OpVerdict",
     "ShardedDFCRuntime",
     "TrainRuntime",
+    "hetero_multi_step",
     "hetero_step",
     "route_batch",
     "route_keys_host",

@@ -72,6 +72,30 @@ In-flight announcements that missed the drain are reported not-applied and
 can be replayed with ``replay_pending``, giving exactly-once semantics per
 op across reshards and crashes.
 
+Pipelined durable path (ISSUE 4, after Fatourou et al. 2021/2024: overlap
+the combiner's durable writes with the collection of the next batch):
+
+  * device-side announcement queues — ``announce`` lands each batch's
+    payload in a preallocated jnp ring (``repro.core.jax_dfc.AnnounceRing``)
+    so combining phases consume device arrays directly; SimFS keeps only the
+    compact durable mirror recovery needs, off the hot path,
+  * two-stage pipelining (``pipeline=True``) — ``combine_phase`` DISPATCHES
+    the device combine for chain k+1 (stage 1), then retires chain k
+    (persist + pfence + per-shard epoch commits, stage 2) while the device
+    works; ``flush`` retires the final chain.  The two-increment commit
+    still gates visibility: an in-flight chain that never retires is
+    reported not-applied by ``recover`` (which also resolves a thread's
+    OLDER announcement slot — the predecessor batch k whose successor k+1
+    was already announced — and ``replay_pending`` replays it first),
+  * multi-batch chaining (``chain=N``) — up to N ready batches combine in
+    ONE fused dispatch (``dfc_sharded_multi_combine_step``: a ``lax.scan``
+    over the batch axis, vmap or Pallas grid per kind) but persist and
+    commit batch-by-batch, so pwb/pfence counts match that many serial
+    phases exactly,
+  * dirty-leaf persist elision — a slot leaf whose bytes already sit
+    durably in that slot is not re-written (the paper's dirty-word
+    tracking at leaf granularity); the slot manifest still lists it.
+
 Persistence layout (``SimFS``-backed, pwb=write / pfence=fsync):
 
   tAnn/thread_{t}/ann{0,1}.json   double-buffered announcements + valid
@@ -87,6 +111,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import io
 import json
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
@@ -102,7 +127,10 @@ from repro.core.jax_dfc import (
     OP_NONE,
     R_NONE,
     STRUCTS,
+    init_announce_ring,
     init_sharded,
+    ring_announce,
+    ring_drain,
     shard_slice,
     stack_shards,
     state_from_contents,
@@ -110,6 +138,7 @@ from repro.core.jax_dfc import (
 from repro.kernels.dfc_reduce.ops import (
     SHARDED_COMBINE_STEPS,
     dfc_hetero_combine_step,
+    dfc_hetero_multi_combine_step,
 )
 
 # runtime-level response kind: op rejected because its shard's announcement
@@ -338,6 +367,89 @@ def hetero_step(
     return new_groups, new_meta, responses, out_kinds
 
 
+@functools.partial(jax.jit, static_argnames=("kinds", "lanes", "backend"))
+def hetero_multi_step(
+    groups, table, keys, ops, params, meta, *, kinds: Tuple[str, ...],
+    lanes: int, backend: str = "jnp",
+):
+    """Route + combine a CHAIN of flat batches over a heterogeneous fabric in
+    ONE dispatch (the pipelined durable path's combine stage).
+
+    ``keys`` / ``ops`` / ``params`` are ``[B, L]`` — B flat batches padded to
+    a common length with ``OP_NONE`` lanes (never routed).  Each batch is
+    routed independently and the B per-shard announcement matrices are
+    chained through ``dfc_sharded_multi_combine_step`` per kind group: batch
+    b+1 combines on top of batch b's post-combine state, exactly as B
+    separate ``hetero_step`` calls would, but the chain costs one dispatch.
+
+    Returns ``(new_groups, new_meta, responses [B, L], out_kinds [B, L],
+    states, epochs_before i32[S], epochs i32[B, S], phases_cum i32[B, S],
+    ops_cum i32[B, S])`` where ``states[kind]`` carries the per-batch
+    shard-stacked states (leading B axis — what the durable path persists
+    per batch) and ``epochs[b]`` the per-shard epochs after batch b (each
+    op's durable commit target).
+    """
+    n_batches = ops.shape[0]
+    n_shards = len(kinds)
+    routed = [
+        route_batch(
+            keys[i], ops[i], params[i],
+            n_shards=n_shards, lanes=lanes, table=table,
+        )
+        for i in range(n_batches)
+    ]
+    shard_ops = jnp.stack([r[0] for r in routed])  # [B, S, L]
+    shard_params = jnp.stack([r[1] for r in routed])
+
+    gids = _group_ids(kinds)
+    group_ops = {k: shard_ops[:, jnp.asarray(ids)] for k, ids in gids.items()}
+    group_params = {
+        k: shard_params[:, jnp.asarray(ids)] for k, ids in gids.items()
+    }
+    multi = dfc_hetero_multi_combine_step(
+        groups, group_ops, group_params, backend=backend
+    )
+
+    resp_mat = jnp.zeros((n_batches, n_shards, lanes), jnp.float32)
+    kind_mat = jnp.full((n_batches, n_shards, lanes), R_NONE, jnp.int32)
+    epochs = jnp.zeros((n_batches, n_shards), jnp.int32)
+    epochs_before = jnp.zeros((n_shards,), jnp.int32)
+    new_groups, states = {}, {}
+    for k in sorted(gids):
+        rows = jnp.asarray(gids[k])
+        st, s_resp, s_kinds = multi[k]
+        states[k] = st
+        new_groups[k] = jax.tree_util.tree_map(lambda leaf: leaf[-1], st)
+        resp_mat = resp_mat.at[:, rows].set(s_resp)
+        kind_mat = kind_mat.at[:, rows].set(s_kinds)
+        epochs = epochs.at[:, rows].set(st.epoch)
+        epochs_before = epochs_before.at[rows].set(groups[k].epoch)
+
+    touched = jnp.any(shard_ops != OP_NONE, axis=2)  # [B, S]
+    per_batch_ops = jnp.sum((shard_ops != OP_NONE).astype(jnp.int32), axis=2)
+    new_meta = dict(meta)
+    new_meta["phases"] = meta["phases"] + jnp.sum(touched.astype(jnp.int32), axis=0)
+    new_meta["ops_combined"] = meta["ops_combined"] + jnp.sum(per_batch_ops, axis=0)
+    # cumulative per-batch counters: what batch b's slot persist must record
+    phases_cum = meta["phases"][None] + jnp.cumsum(touched.astype(jnp.int32), axis=0)
+    ops_cum = meta["ops_combined"][None] + jnp.cumsum(per_batch_ops, axis=0)
+
+    shard_b = jnp.stack([r[2] for r in routed])  # [B, L]
+    lane_b = jnp.stack([r[3] for r in routed])
+    ok_b = jnp.stack([r[4] for r in routed])
+    ovf_b = jnp.stack([r[5] for r in routed])
+    s = jnp.clip(shard_b, 0, n_shards - 1)
+    ln = jnp.clip(lane_b, 0, lanes - 1)
+    bi = jnp.arange(n_batches)[:, None]
+    responses = jnp.where(ok_b, resp_mat[bi, s, ln], 0.0)
+    out_kinds = jnp.where(ok_b, kind_mat[bi, s, ln], R_NONE)
+    out_kinds = jnp.where(ovf_b, R_OVERFLOW, out_kinds)
+    return (
+        new_groups, new_meta, responses, out_kinds,
+        states, epochs_before, epochs, phases_cum, ops_cum,
+    )
+
+
 # ============================================================== host oracle
 def sequential_hetero_reference(
     kinds, shard_lists, keys, ops, params, lanes, table=None
@@ -436,6 +548,9 @@ class ShardedDFCRuntime:
         meta=None,
         n_buckets: Optional[int] = None,
         table=None,
+        pipeline: bool = False,
+        chain: int = 1,
+        ring_slots: int = 2048,
     ):
         kinds = [kind] * n_shards if isinstance(kind, str) else list(kind)
         if len(kinds) != n_shards:
@@ -464,6 +579,17 @@ class ShardedDFCRuntime:
             raise ValueError("table must have n_buckets entries")
         self.r_epoch = 0  # routing epoch (even at rest)
         self._reshard_seq = 0
+        # --- pipelined durable path (ISSUE 4): device-side announcement ring,
+        # in-flight chain register, and dirty-leaf persist elision
+        self.pipeline = bool(pipeline)
+        self.chain = max(1, int(chain))
+        self.ring = init_announce_ring(ring_slots) if fs is not None else None
+        self._ring_tail = 0  # host mirror of the ring's absolute tail
+        self._ring_spans: Dict[int, Tuple[int, int]] = {}  # thread -> (start, n)
+        self._live: Dict[int, Dict[str, Any]] = {}  # thread -> announcement rec
+        self._inflight: Optional[Dict[str, Any]] = None  # dispatched, unretired
+        self._elide: Dict[str, bytes] = {}  # rel path -> durable leaf digest
+        self._elide_pending: Dict[str, bytes] = {}
         if state is None:
             self.groups = {
                 k: init_sharded(k, len(ids), capacity)
@@ -567,7 +693,18 @@ class ShardedDFCRuntime:
 
     def announce(self, thread: int, keys, ops, params, token: int) -> None:
         """Thread-side announcement (paper lines 2-12): double-buffered
-        record + valid selector, parallel pwb/pfence, MSB publish."""
+        record + valid selector, parallel pwb/pfence, MSB publish.
+
+        The payload additionally lands in the device-side announcement ring
+        (``AnnounceRing``), so combining phases consume device arrays
+        directly; SimFS keeps only the compact durable mirror below, which is
+        what recovery and replay read back.
+
+        Contract: per-thread ``token``s must be monotonically increasing —
+        recovery uses token order to tell an in-flight PREDECESSOR in the
+        older announcement slot (pipelined path) from an unpublished
+        successor whose announce crashed before the valid flip.
+        """
         valid = self._read_valid(thread)
         n_op = 1 - (valid & 1)
         ann = {
@@ -582,6 +719,43 @@ class ShardedDFCRuntime:
         self.fs.write(self._valid_path(thread), str(n_op).encode())
         self.fs.fsync([self._valid_path(thread)])
         self.fs.write(self._valid_path(thread), str(2 | n_op).encode())  # MSB
+        self._register_live(thread, n_op, token, ann["keys"], ann["ops"], ann["params"])
+
+    def _register_live(
+        self, thread: int, slot: int, token: int, keys, ops, params
+    ) -> Dict[str, Any]:
+        """Track a live (announced, not yet combined) batch: host metadata
+        for routing/retire plus a device-ring span for the combine payload.
+        When the ring has no room for the span the payload stays host-side
+        (``ring_start=None``) and the combine falls back to a host upload —
+        the protocol is unaffected, only the fast path."""
+        keys = np.asarray(keys, np.int64)
+        ops = np.asarray(ops, np.int32)
+        params = np.asarray(params, np.float32)
+        n = int(ops.shape[0])
+        start = None
+        if self.ring is not None and n:
+            slots = int(self.ring.keys.shape[0])
+            spans = [v for t, v in self._ring_spans.items() if t != thread]
+            oldest = min((s0 for s0, _ in spans), default=self._ring_tail)
+            if n <= slots and (self._ring_tail + n) - oldest <= slots:
+                self.ring = ring_announce(
+                    self.ring,
+                    jnp.asarray(keys.astype(np.int32)),
+                    jnp.asarray(ops),
+                    jnp.asarray(params),
+                )
+                start = self._ring_tail
+                self._ring_tail += n
+                self._ring_spans[thread] = (start, n)
+            else:
+                self._ring_spans.pop(thread, None)
+        rec = {
+            "token": int(token), "slot": int(slot), "n": n,
+            "keys": keys, "ops": ops, "params": params, "ring_start": start,
+        }
+        self._live[thread] = rec
+        return rec
 
     def ready_announcements(self) -> List[int]:
         out = []
@@ -604,27 +778,49 @@ class ShardedDFCRuntime:
         raw = self.fs.read(self._epoch_path(s))
         return int(raw.decode()) if raw else 0
 
-    def _persist_shard(self, s: int, epoch_target: int, state=None) -> List[str]:
+    def _persist_shard(
+        self, s: int, epoch_target: int, state=None, counters=None
+    ) -> List[str]:
         """pwb shard ``s``'s post-combine (or explicitly given) state into
-        its inactive slot."""
+        its inactive slot.
+
+        Dirty-leaf elision (the paper's dirty-word tracking, at leaf
+        granularity): a leaf whose bytes are identical to what this slot
+        already holds DURABLY is skipped — its file is still listed in the
+        slot manifest and still readable at recovery, so crash consistency
+        is unchanged, but a combining phase that only moved root counters
+        (e.g. a fully-eliminating stack batch, or a queue batch served
+        entirely from the committed ring window) stops re-persisting the
+        whole ``values`` array.  Digests are promoted into the elision cache
+        only after the phase's pfence (``_promote_elision``).
+        """
         one = self._shard_state(s) if state is None else state
         slot = self._slot_dir(s, epoch_target - 2, nxt=True)
         leaves, _ = jax.tree_util.tree_flatten(one)
         files = []
+        if counters is None:
+            counters = (
+                int(self.meta["phases"][s]),
+                int(self.meta["ops_combined"][s]),
+            )
         meta = {
             "kind": self.kinds[s],
             "epoch": epoch_target,
             "leaves": [],
-            "phases": int(self.meta["phases"][s]),
-            "ops_combined": int(self.meta["ops_combined"][s]),
+            "phases": int(counters[0]),
+            "ops_combined": int(counters[1]),
         }
         for i, leaf in enumerate(leaves):
             arr = np.asarray(leaf)
             buf = io.BytesIO()
             np.save(buf, arr)
+            data = buf.getvalue()
             rel = f"{slot}/leaf_{i}.npy"
-            self.fs.write(rel, buf.getvalue())
-            files.append(rel)
+            digest = hashlib.blake2b(data, digest_size=16).digest()
+            if self._elide.get(rel) != digest:
+                self.fs.write(rel, data)
+                files.append(rel)
+                self._elide_pending[rel] = digest
             meta["leaves"].append(
                 {"file": f"leaf_{i}.npy", "shape": list(arr.shape), "dtype": str(arr.dtype)}
             )
@@ -632,6 +828,12 @@ class ShardedDFCRuntime:
         self.fs.write(rel, json.dumps(meta).encode())
         files.append(rel)
         return files
+
+    def _promote_elision(self) -> None:
+        """Move leaf digests written since the last pfence into the elision
+        cache — they are durable now, so a future identical write may skip."""
+        self._elide.update(self._elide_pending)
+        self._elide_pending.clear()
 
     # ------------------------------------------------- durable routing layout
     _REPOCH_PATH = "routing/rEpoch"
@@ -652,77 +854,239 @@ class ShardedDFCRuntime:
         }
 
     # --------------------------------------------------------- combine phase
+    def _collect_ready(self) -> List[Tuple[int, Dict[str, Any]]]:
+        """Ready announcements as (thread, live-record) pairs, in thread
+        order, excluding batches already dispatched into the pipeline."""
+        inflight = set()
+        if self._inflight is not None:
+            for info in self._inflight["batches"]:
+                for seg in info["threads"]:
+                    inflight.add((seg["thread"], seg["token"]))
+        out = []
+        for t in self.ready_announcements():
+            rec = self._live.get(t)
+            v = self._read_valid(t)
+            if rec is None or rec["slot"] != (v & 1):
+                # announced before this runtime object existed (or by another
+                # writer): rebuild the live record from the durable mirror
+                ann = self._read_ann(t, v & 1)
+                rec = self._register_live(
+                    t, v & 1, ann["token"], ann["keys"], ann["ops"], ann["params"]
+                )
+            if (t, rec["token"]) in inflight:
+                continue
+            out.append((t, rec))
+        return out
+
+    def _payload_view(self, rec: Dict[str, Any]):
+        """A live batch's payload as device arrays: straight out of the
+        announcement ring when the span landed there, host upload otherwise."""
+        if rec["ring_start"] is not None:
+            return ring_drain(self.ring, rec["ring_start"], rec["n"])
+        return (
+            jnp.asarray(rec["keys"].astype(np.int32)),
+            jnp.asarray(rec["ops"]),
+            jnp.asarray(rec["params"]),
+        )
+
     def combine_phase(self) -> List[int]:
         """One durable combining phase over every ready announcement.
 
-        Concatenates the announced batches (announcement order = thread id
-        order — the combiner's walk over the announcement array), runs the
-        fused device step, persists every touched shard into its inactive
-        slot, writes responses + per-op commit targets into the combined
-        announcements, pfences ONCE (paper line 80), then commits each
-        touched shard's epoch with the two-increment protocol (lines 81-83).
-        Returns the combined thread ids.
+        Serial mode (``pipeline=False``, the default): concatenates the
+        announced batches (announcement order = thread id order — the
+        combiner's walk over the announcement array), runs the fused device
+        step on the ring-resident payload, persists every touched shard into
+        its inactive slot, writes responses + per-op commit targets into the
+        combined announcements, pfences ONCE (paper line 80), then commits
+        each touched shard's epoch with the two-increment protocol (lines
+        81-83).  Returns the combined thread ids.
+
+        Pipelined mode (``pipeline=True``): stage 1 DISPATCHES the device
+        combine for the freshly collected chain, stage 2 retires the
+        PREVIOUS chain (persist + pfence + epoch commits) while the device
+        works — persistence of batch k overlaps the combine of batch k+1.
+        The new chain's responses become durable only when it is itself
+        retired (the next ``combine_phase`` or an explicit ``flush``); the
+        two-increment epoch commit still gates visibility, so recovery
+        semantics are unchanged.
+
+        With ``chain > 1``, each ready thread's announcement becomes its own
+        batch (the tail group absorbs the remainder) and the whole chain is
+        combined in ONE fused dispatch (``dfc_sharded_multi_combine_step``)
+        but persisted and committed batch-by-batch, exactly like that many
+        serial phases.
         """
         assert self.fs is not None, "combine_phase needs a SimFS"
-        ready = self.ready_announcements()
+        ready = self._collect_ready()
         if not ready:
+            self.flush()
             return []
-        anns = {t: self._read_ann(t, self._read_valid(t) & 1) for t in ready}
-        keys = np.concatenate([np.asarray(anns[t]["keys"], np.int64) for t in ready])
-        ops = np.concatenate([np.asarray(anns[t]["ops"], np.int32) for t in ready])
-        params = np.concatenate(
-            [np.asarray(anns[t]["params"], np.float32) for t in ready]
+
+        if self.chain > 1 and len(ready) > 1:
+            groups = [[r] for r in ready[: self.chain - 1]]
+            tail = list(ready[self.chain - 1:])
+            if tail:  # fewer ready than chain: no (empty) tail batch
+                groups.append(tail)
+        else:
+            groups = [ready]
+
+        maxlen = max(sum(rec["n"] for _, rec in g) for g in groups)
+        pad = max(8, 1 << max(0, (maxlen - 1)).bit_length())
+        dev_keys, dev_ops, dev_params, batches = [], [], [], []
+        for g in groups:
+            karrs, oarrs, parrs, segs, off = [], [], [], [], 0
+            for t, rec in g:
+                k, o, p = self._payload_view(rec)
+                karrs.append(k)
+                oarrs.append(o)
+                parrs.append(p)
+                segs.append(
+                    {"thread": t, "token": rec["token"], "slot": rec["slot"],
+                     "off": off, "n": rec["n"]}
+                )
+                off += rec["n"]
+                self._ring_spans.pop(t, None)  # span consumed at dispatch
+            fill = pad - off
+            if fill:
+                karrs.append(jnp.zeros((fill,), jnp.int32))
+                oarrs.append(jnp.full((fill,), OP_NONE, jnp.int32))
+                parrs.append(jnp.zeros((fill,), jnp.float32))
+            dev_keys.append(jnp.concatenate(karrs))
+            dev_ops.append(jnp.concatenate(oarrs))
+            dev_params.append(jnp.concatenate(parrs))
+            host_keys = np.concatenate([rec["keys"] for _, rec in g])
+            batches.append(
+                {"threads": segs, "shard": self.route_host(host_keys)}
+            )
+
+        prev, self._inflight = self._inflight, None
+        # stage 1: dispatch the chained device combine (async under jit)
+        (
+            self.groups, self.meta, resp, out_kinds,
+            states, epochs_before, epochs, phases_cum, ops_cum,
+        ) = hetero_multi_step(
+            self.groups,
+            jnp.asarray(self.table),
+            jnp.stack(dev_keys),
+            jnp.stack(dev_ops),
+            jnp.stack(dev_params),
+            self.meta,
+            kinds=tuple(self.kinds),
+            lanes=self.lanes,
+            backend=self.backend,
         )
+        fl = {
+            "batches": batches, "resp": resp, "kinds": out_kinds,
+            "states": states, "epochs_before": epochs_before,
+            "epochs": epochs, "phases_cum": phases_cum, "ops_cum": ops_cum,
+            "repoch": self.r_epoch,
+        }
+        # stage 2: retire the predecessor while the device combines stage 1
+        if prev is not None:
+            self._retire(prev)
+        if self.pipeline:
+            self._inflight = fl
+        else:
+            self._retire(fl)
+        return [seg["thread"] for info in batches for seg in info["threads"]]
 
-        epochs_before = self.shard_epochs()
-        resp, kinds = self.step(keys, ops, params)
-        resp = np.asarray(resp)
-        kinds = np.asarray(kinds)
-        epochs_after = self.shard_epochs()
-        touched = [int(s) for s in np.nonzero(epochs_after != epochs_before)[0]]
-        shard = self.route_host(keys)
-        targets = epochs_after[shard]  # per-op commit target (its shard)
+    def _retire(self, fl: Dict[str, Any]) -> List[int]:
+        """Persist + commit one dispatched chain, batch by batch: persist
+        batch b's touched shards into their inactive slots, write batch b's
+        responses into the combined announcements, ONE pfence, then the
+        per-shard two-increment epoch commits — identical durable schedule
+        (and pwb/pfence counts) to that many serial phases."""
+        resp = np.asarray(fl["resp"])
+        kinds = np.asarray(fl["kinds"])
+        epochs = np.asarray(fl["epochs"])  # [B, S]
+        phases_cum = np.asarray(fl["phases_cum"])
+        ops_cum = np.asarray(fl["ops_cum"])
+        prev_epochs = np.asarray(fl["epochs_before"])
+        # one device->host fetch per stacked leaf (not per shard slice)
+        states_np = {
+            k: jax.tree_util.tree_map(np.asarray, st)
+            for k, st in fl["states"].items()
+        }
 
-        files: List[str] = []
-        for s in touched:
-            files += self._persist_shard(s, int(epochs_after[s]))
+        def batch_shard_state(b, s):
+            k, r = self.kinds[s], self._row(s)
+            return jax.tree_util.tree_map(lambda leaf: leaf[b, r], states_np[k])
+        retired = []
+        for b, info in enumerate(fl["batches"]):
+            e_b = epochs[b]
+            touched = [int(s) for s in np.nonzero(e_b != prev_epochs)[0]]
+            files: List[str] = []
+            for s in touched:
+                files += self._persist_shard(
+                    s,
+                    int(e_b[s]),
+                    state=batch_shard_state(b, s),
+                    counters=(phases_cum[b][s], ops_cum[b][s]),
+                )
+            shard = info["shard"]
+            targets = e_b[shard]  # per-op commit target (its shard)
+            for seg in info["threads"]:
+                sl = slice(seg["off"], seg["off"] + seg["n"])
+                ann = self._read_ann(seg["thread"], seg["slot"])
+                ann["val"] = {
+                    "resp": [float(v) for v in resp[b][sl]],
+                    "kinds": [int(k) for k in kinds[b][sl]],
+                    "shards": [int(s) for s in shard[sl]],
+                    "targets": [int(e) for e in targets[sl]],
+                    "repoch": fl["repoch"],
+                }
+                rel = self._ann_path(seg["thread"], seg["slot"])
+                self.fs.write(rel, json.dumps(ann).encode())
+                files.append(rel)
+                retired.append(seg["thread"])
+            self.fs.fsync(files)  # ONE pfence for slots + responses
+            self._promote_elision()
+            for s in touched:  # per-shard two-increment epoch commit
+                e = int(e_b[s])
+                self.fs.write(self._epoch_path(s), str(e - 1).encode())
+                self.fs.fsync([self._epoch_path(s)])
+                self.fs.write(self._epoch_path(s), str(e).encode())
+            prev_epochs = e_b
+        return retired
 
-        # responses + per-op (shard, target) into the combined announcements
-        off = 0
-        for t in ready:
-            n_t = len(anns[t]["ops"])
-            sl = slice(off, off + n_t)
-            anns[t]["val"] = {
-                "resp": [float(v) for v in resp[sl]],
-                "kinds": [int(k) for k in kinds[sl]],
-                "shards": [int(s) for s in shard[sl]],
-                "targets": [int(e) for e in targets[sl]],
-                "repoch": self.r_epoch,
-            }
-            rel = self._ann_path(t, self._read_valid(t) & 1)
-            self.fs.write(rel, json.dumps(anns[t]).encode())
-            files.append(rel)
-            off += n_t
+    def flush(self) -> List[int]:
+        """Retire the in-flight chain, if any (pipelined mode): persist its
+        shard states and responses and commit its epochs.  Returns the
+        thread ids whose announcements became durable."""
+        fl, self._inflight = self._inflight, None
+        if fl is None:
+            return []
+        return self._retire(fl)
 
-        self.fs.fsync(files)  # ONE pfence for slots + responses
-        for s in touched:  # per-shard two-increment epoch commit
-            e = int(epochs_after[s])
-            self.fs.write(self._epoch_path(s), str(e - 1).encode())
-            self.fs.fsync([self._epoch_path(s)])
-            self.fs.write(self._epoch_path(s), str(e).encode())
-        return ready
+    def _drain(self) -> None:
+        """Combine every ready announcement AND retire the pipeline — the
+        quiescent point resharding transactions start from."""
+        self.combine_phase()
+        self.flush()
 
-    def read_responses(self, thread: int) -> Optional[Dict[str, Any]]:
+    def read_responses(
+        self, thread: int, token: Optional[int] = None
+    ) -> Optional[Dict[str, Any]]:
         """A thread's combined announcement, or None while still pending.
 
         Returns ``{"token", "resp", "kinds", "shards", "targets", ...}`` —
-        the durable response record written by the last combine_phase that
-        included this thread's announcement.
+        the durable response record written when the phase that combined
+        this thread's announcement was retired.  With ``token``, searches
+        BOTH announcement slots for that batch — in pipelined mode a
+        thread's previous batch retires while its newest is still in flight,
+        so the response being read usually lives in the older slot.
         """
-        ann = self._read_ann(thread, self._read_valid(thread) & 1)
-        if ann.get("val") is BOT:
-            return None
-        return dict(ann["val"], token=ann["token"])
+        v = self._read_valid(thread)
+        if token is None:
+            ann = self._read_ann(thread, v & 1)
+            if ann.get("val") is BOT:
+                return None
+            return dict(ann["val"], token=ann["token"])
+        for slot in (v & 1, 1 - (v & 1)):
+            ann = self._read_ann(thread, slot)
+            if ann.get("token", -1) == token and ann.get("val") is not BOT:
+                return dict(ann["val"], token=ann["token"])
+        return None
 
     # ----------------------------------------------------------- resharding
     def _snapshot_donor(self, s: int, op: str) -> None:
@@ -783,7 +1147,7 @@ class ShardedDFCRuntime:
         new_kinds = self.kinds + [kind]
 
         if self.fs is not None:
-            self.combine_phase()  # drain in-flight announcements
+            self._drain()  # drain ready announcements AND the pipeline
             self._snapshot_donor(donor, "split")
             intent = {
                 "op": "split",
@@ -838,7 +1202,7 @@ class ShardedDFCRuntime:
             )
         kind = self.kinds[src]
         if self.fs is not None:
-            self.combine_phase()  # drain in-flight announcements
+            self._drain()  # drain ready announcements AND the pipeline
         merged = self.shard_contents(dst) + self.shard_contents(src)
         if len(merged) + self.lanes > self.capacity:
             raise ValueError(
@@ -866,6 +1230,7 @@ class ShardedDFCRuntime:
             files = self._persist_shard(src, t_src, state=src_new)
             files += self._persist_shard(dst, t_dst, state=dst_new)
             self._commit_routing(intent, new_table, self.kinds, files)
+            self._promote_elision()
             for sid, tgt in ((src, t_src), (dst, t_dst)):
                 self.fs.write(self._epoch_path(sid), str(tgt - 1).encode())
                 self.fs.fsync([self._epoch_path(sid)])
@@ -891,6 +1256,9 @@ class ShardedDFCRuntime:
         n_threads: int = 1,
         n_buckets: Optional[int] = None,
         table=None,
+        pipeline: bool = False,
+        chain: int = 1,
+        ring_slots: int = 2048,
     ) -> Tuple["ShardedDFCRuntime", Dict[int, Dict[str, Any]]]:
         """Recover the fabric + per-thread/per-op detectability report.
 
@@ -913,6 +1281,17 @@ class ShardedDFCRuntime:
         shard's committed epoch reached the target recorded with the
         response; everything else is reported not-applied and is safe to
         re-announce (see ``replay_pending``).
+
+        Overlap-aware (pipelined path): a thread's OLDER announcement slot
+        may hold an in-flight predecessor — batch k, combined by the
+        pipeline but never retired (no durable responses) or retired but not
+        committed — while its newest slot holds batch k+1.  Recovery
+        resolves it: when the predecessor never fully committed, the report
+        carries its verdicts under ``report[t]["prev"]`` and
+        ``replay_pending`` re-announces it BEFORE the newest batch, keeping
+        per-thread op order.  A fully committed predecessor is ordinary
+        history (its durable responses are readable via
+        ``read_responses(t, token=...)``) and is not reported.
         """
         # --- routing epoch: round odd up (finish the second increment)
         raw = fs.read(cls._REPOCH_PATH)
@@ -959,6 +1338,7 @@ class ShardedDFCRuntime:
             kinds, n_shards, capacity, lanes,
             backend=backend, fs=fs, n_threads=n_threads,
             n_buckets=n_buckets, table=table,
+            pipeline=pipeline, chain=chain, ring_slots=ring_slots,
         )
         rt.r_epoch = repoch
 
@@ -1010,6 +1390,31 @@ class ShardedDFCRuntime:
             "kind": jnp.asarray([KIND_CODES[k] for k in kinds], jnp.int32),
         }
 
+        def _slot_verdicts(ann) -> Tuple[List[OpVerdict], bool]:
+            """Per-op verdicts of one announcement record + whether the
+            record's phase fully committed (every target epoch reached)."""
+            verdicts: List[OpVerdict] = []
+            val = ann.get("val")
+            n_ops = len(ann.get("ops", []))
+            if val is BOT:
+                return [OpVerdict(applied=False) for _ in range(n_ops)], False
+            fully = True
+            for i in range(n_ops):
+                s = val["shards"][i]
+                k = val["kinds"][i]
+                committed = committed_epochs[s] >= val["targets"][i]
+                fully = fully and bool(committed)
+                applied = bool(committed) and k != R_OVERFLOW and k != R_NONE
+                verdicts.append(
+                    OpVerdict(
+                        applied=applied,
+                        kind=k if committed else None,
+                        resp=val["resp"][i] if committed else None,
+                        shard=s,
+                    )
+                )
+            return verdicts, fully
+
         report: Dict[int, Dict[str, Any]] = {}
         for t in range(n_threads):
             v = rt._read_valid(t)
@@ -1018,28 +1423,28 @@ class ShardedDFCRuntime:
                 fs.write(rt._valid_path(t), str(2 | lsb).encode())
             ann = rt._read_ann(t, lsb)
             if ann.get("token", -1) < 0:
-                report[t] = {"token": None, "ops": []}
+                report[t] = {"token": None, "ops": [], "prev": None}
                 continue
-            verdicts: List[OpVerdict] = []
-            val = ann.get("val")
-            n_ops = len(ann.get("ops", []))
-            if val is BOT:
-                verdicts = [OpVerdict(applied=False) for _ in range(n_ops)]
-            else:
-                for i in range(n_ops):
-                    s = val["shards"][i]
-                    k = val["kinds"][i]
-                    committed = committed_epochs[s] >= val["targets"][i]
-                    applied = bool(committed) and k != R_OVERFLOW and k != R_NONE
-                    verdicts.append(
-                        OpVerdict(
-                            applied=applied,
-                            kind=k if committed else None,
-                            resp=val["resp"][i] if committed else None,
-                            shard=s,
-                        )
-                    )
-            report[t] = {"token": ann["token"], "ops": verdicts}
+            verdicts, _ = _slot_verdicts(ann)
+            # overlap-aware: the OLDER slot may hold an in-flight PREDECESSOR
+            # (combined by the pipeline, never retired or never committed).
+            # Only a SMALLER token qualifies (per-thread tokens are monotone):
+            # a larger one is an unpublished successor whose announce crashed
+            # before the valid flip — never announced, the thread re-runs it.
+            prev = None
+            pann = rt._read_ann(t, 1 - lsb)
+            ptok = pann.get("token", -1)
+            if 0 <= ptok < ann["token"] and pann.get("ops"):
+                pverdicts, pfully = _slot_verdicts(pann)
+                if not pfully:
+                    prev = {"token": ptok, "ops": pverdicts}
+            report[t] = {"token": ann["token"], "ops": verdicts, "prev": prev}
+            if ann.get("val") is BOT:
+                # still pending: re-stage it (ring re-filled from the durable
+                # mirror) so a post-recovery combine_phase can run unchanged
+                rt._register_live(
+                    t, lsb, ann["token"], ann["keys"], ann["ops"], ann["params"]
+                )
         return rt, report
 
     def replay_pending(self, report: Dict[int, Dict[str, Any]]) -> List[int]:
@@ -1052,33 +1457,86 @@ class ShardedDFCRuntime:
         replayed: they completed as no-ops (an op code the target structure
         does not interpret, legal in mixed fabrics) and would no-op again on
         every replay forever.  Uncommitted ops (``kind is None``) and
-        ``R_OVERFLOW`` rejections are replayed."""
-        replayed = []
-        for t in sorted(report):
-            r = report[t]
-            if r["token"] is None:
-                continue
-            ann = self._read_ann(t, self._read_valid(t) & 1)
-            n_ops = len(ann.get("ops", []))
-            if not n_ops:
-                continue
-            redo = [
-                i for i, v in enumerate(r["ops"])
+        ``R_OVERFLOW`` rejections are replayed.
+
+        Overlap-aware: when recovery reported an in-flight PREDECESSOR batch
+        (``report[t]["prev"]``, pipelined path), its not-applied ops are
+        replayed in a round of their own BEFORE the newest announcements, so
+        per-thread op order survives the crash."""
+
+        def _redo(ann, verdicts):
+            if not ann.get("ops"):
+                return None
+            idx = [
+                i for i, v in enumerate(verdicts)
                 if not v.applied and v.kind != R_NONE
             ]
-            if not redo:
-                continue
-            self.announce(
-                t,
-                [ann["keys"][i] for i in redo],
-                [ann["ops"][i] for i in redo],
-                [ann["params"][i] for i in redo],
-                token=ann["token"],
+            if not idx:
+                return None
+            return (
+                [ann["keys"][i] for i in idx],
+                [ann["ops"][i] for i in idx],
+                [ann["params"][i] for i in idx],
             )
-            replayed.append(t)
+
+        # snapshot both slots' durable records BEFORE any re-announcement
+        # flips the valid selectors
+        prev_round: List[Tuple[int, int, Tuple]] = []
+        newest_round: List[Tuple[int, int, Dict[str, Any], List[OpVerdict]]] = []
+        for t in sorted(report):
+            r = report[t]
+            lsb = self._read_valid(t) & 1
+            prev = r.get("prev")
+            if prev is not None:
+                pann = self._read_ann(t, 1 - lsb)
+                if pann.get("token", -1) == prev["token"]:
+                    redo = _redo(pann, prev["ops"])
+                    if redo is not None:
+                        prev_round.append((t, prev["token"], redo))
+            if r["token"] is None:
+                continue
+            ann = self._read_ann(t, lsb)
+            if _redo(ann, r["ops"]) is not None:
+                newest_round.append((t, r["token"], ann, r["ops"]))
+
+        replayed = set()
+        # round 1: in-flight predecessors, so per-thread op order survives
+        for t, token, (keys, ops, params) in prev_round:
+            self.announce(t, keys, ops, params, token=token)
+            replayed.add(t)
+        if prev_round:
+            self._drain()
+
+        # round 2: newest announcements.  A still-PENDING one (val BOT at
+        # recovery) may have been swept up by round 1's combining phase —
+        # the combiner takes every ready announcement — in which case it is
+        # now applied and committed, and only its R_OVERFLOW rejections
+        # (which never touch state) still need a replay.
+        for t, token, ann, verdicts in newest_round:
+            pre_combined = any(v.shard is not None for v in verdicts)
+            if not pre_combined:
+                val = self.read_responses(t, token=token)
+                if val is not None:
+                    idx = [
+                        i for i, k in enumerate(val["kinds"]) if k == R_OVERFLOW
+                    ]
+                    if not idx:
+                        continue
+                    self.announce(
+                        t,
+                        [ann["keys"][i] for i in idx],
+                        [ann["ops"][i] for i in idx],
+                        [ann["params"][i] for i in idx],
+                        token=token,
+                    )
+                    replayed.add(t)
+                    continue
+            keys, ops, params = _redo(ann, verdicts)
+            self.announce(t, keys, ops, params, token=token)
+            replayed.add(t)
         if replayed:
-            self.combine_phase()
-        return replayed
+            self._drain()
+        return sorted(replayed)
 
     # -------------------------------------------------------------- helpers
     def shard_contents(self, s: int) -> List[float]:

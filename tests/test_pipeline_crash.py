@@ -1,0 +1,349 @@
+"""Pipelined durable path: crash-interleaving proof of exactly-once.
+
+Covers the ISSUE-4 acceptance criteria: a crash injected at EVERY
+persistence op of the pipelined path — announcement-ring mirror writes,
+shard pwbs, epoch increments, response publishes — recovers to the
+``sequential_hetero_reference`` oracle state with exactly-once replay,
+mirroring the sweep style of ``tests/test_hetero_reshard.py``.  The sweep
+runs for the overlap pipeline (``pipeline=True``), for multi-batch chaining
+(``chain=2``), and for their combination, on homogeneous and mixed fabrics.
+
+The FULL parameter grid is marked ``slow`` (the dedicated CI sweep job);
+tier-1 keeps one representative sweep per mechanism so the pipelined path
+cannot rot between slow runs.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint.dfc_checkpoint import CrashNow, FaultInjector, SimFS
+from repro.core.jax_dfc import OP_ENQ, OP_PUSH, OP_PUSHR, R_VALUE
+from repro.runtime.dfc_shard import (
+    ShardedDFCRuntime,
+    sequential_hetero_reference,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CAP, LANES = 256, 16
+PUSH_OF = {"stack": OP_PUSH, "queue": OP_ENQ, "deque": OP_PUSHR}
+
+
+def _insert_phases(kinds, n_phases, per_thread, n_threads, seed=11):
+    """Insert-only announcement schedule: phases[p][t] = (token, keys, ops,
+    params); every param value is unique, so multiset equality IS
+    exactly-once."""
+    rng = np.random.default_rng(seed)
+    val = 1.0
+    phases = []
+    token = 0
+    for _ in range(n_phases):
+        row = []
+        for t in range(n_threads):
+            token += 1
+            keys = [int(k) for k in rng.integers(0, 1000, per_thread)]
+            ops = [PUSH_OF[kinds[0]]] * per_thread
+            params = [val + i for i in range(per_thread)]
+            val += per_thread
+            row.append((token, keys, ops, params))
+        phases.append(row)
+    return phases
+
+
+def _drive(rt, phases, start_phase=0):
+    """Announce + combine each phase row; pipelined runtimes retire lazily."""
+    for row in phases[start_phase:]:
+        for t_idx, (token, keys, ops, params) in enumerate(row):
+            rt.announce(t_idx, keys, ops, params, token=token)
+        rt.combine_phase()
+    rt.flush()
+
+
+def _fabric_contents(rt):
+    return sorted(sum((rt.shard_contents(s) for s in range(rt.n_shards)), []))
+
+
+def _scenario(tmp, crash_at, kinds, *, pipeline, chain, n_threads, n_phases=3,
+              per_thread=6):
+    """Run the pipelined schedule with a crash at persistence op
+    ``crash_at``; return (recovered rt, report, phases, op count)."""
+    inj = FaultInjector(crash_at=crash_at)
+    fs = SimFS(tmp, inj)
+    n_shards = len(kinds)
+    rt = ShardedDFCRuntime(
+        kinds, n_shards, CAP, LANES, fs=fs, n_threads=n_threads,
+        pipeline=pipeline, chain=chain,
+    )
+    phases = _insert_phases(kinds, n_phases, per_thread, n_threads)
+    try:
+        _drive(rt, phases)
+    except CrashNow:
+        pass
+    rt2, report = ShardedDFCRuntime.recover(
+        fs.crash(), kind=kinds, n_shards=n_shards, capacity=CAP, lanes=LANES,
+        n_threads=n_threads, pipeline=pipeline, chain=chain,
+    )
+    return rt2, report, phases, inj.count
+
+
+def _verify_exactly_once(rt2, report, phases, n_threads):
+    """Replay not-applied ops (in-flight predecessors first), re-drive the
+    never-surfaced phases, and check every announced value lives in the
+    fabric exactly once — the ISSUE-4 acceptance check."""
+    assert all(int(e) % 2 == 0 for e in rt2.shard_epochs())
+    contents = _fabric_contents(rt2)
+    assert len(contents) == len(set(contents)), "duplicated op after recovery"
+    # every applied verdict's value is already durable, for BOTH slots
+    for t in range(n_threads):
+        r = report[t]
+        for rec in ([r] if r["token"] is not None else []) + (
+            [r["prev"]] if r.get("prev") else []
+        ):
+            tok = rec["token"]
+            phase_row = phases[(tok - 1) // n_threads]
+            _, keys, ops, params = phase_row[(tok - 1) % n_threads]
+            for i, v in enumerate(rec["ops"]):
+                if v.applied:
+                    assert params[i] in contents, (tok, i)
+    rt2.replay_pending(report)
+    # re-drive, per thread, every announcement that never surfaced; surfaced
+    # ones were either applied or replayed above (exactly-once either way)
+    surf = {t: report[t]["token"] or 0 for t in range(n_threads)}
+    for row in phases:
+        announced = False
+        for t_idx, (token, keys, ops, params) in enumerate(row):
+            if token > surf[t_idx]:
+                rt2.announce(t_idx, keys, ops, params, token=token)
+                announced = True
+        if announced:
+            rt2.combine_phase()
+    rt2.flush()
+    expect = sorted(
+        p for row in phases for _, _, _, ps in row for p in ps
+    )
+    got = _fabric_contents(rt2)
+    assert got == expect, "lost or duplicated ops across the pipeline crash"
+
+
+def _sweep(tmp_path, kinds, *, pipeline, chain, n_threads, step=1):
+    rt_dry, report_dry, phases, total = _scenario(
+        tmp_path / "dry", None, kinds,
+        pipeline=pipeline, chain=chain, n_threads=n_threads,
+    )
+    # the dry run itself must be exactly-once and oracle-exact
+    _verify_exactly_once(rt_dry, report_dry, phases, n_threads)
+    assert total > 40
+    for k in range(1, total + 1, step):
+        rt2, report, phases, _ = _scenario(
+            tmp_path / f"k{k}", k, kinds,
+            pipeline=pipeline, chain=chain, n_threads=n_threads,
+        )
+        _verify_exactly_once(rt2, report, phases, n_threads)
+
+
+# ----------------------------------------------------------- tier-1 sweeps
+def test_pipeline_crash_sweep_exactly_once(tmp_path):
+    """Acceptance: every persistence op of the OVERLAP pipeline (ring mirror
+    write, shard pwb, epoch increments, response publish) is a safe crash
+    point — single announcing thread, queue fabric."""
+    _sweep(tmp_path, ["queue", "queue"], pipeline=True, chain=1, n_threads=1)
+
+
+def test_chained_crash_sweep_exactly_once(tmp_path):
+    """Acceptance twin for CHAINED dispatches: two batches combined in one
+    fused dispatch commit batch-by-batch; a crash between the two commits
+    applies a prefix of the chain, never a mix."""
+    _sweep(
+        tmp_path, ["queue", "queue"], pipeline=True, chain=2, n_threads=2
+    )
+
+
+def test_pipeline_inflight_predecessor_resolution(tmp_path):
+    """Directed case for the overlap-aware recovery: batch k is dispatched
+    (in flight, never retired), batch k+1 is announced on the SAME thread,
+    then the fabric crashes.  Recovery must report k under ``prev`` with
+    not-applied verdicts and replay k before k+1."""
+    fs = SimFS(tmp_path)
+    rt = ShardedDFCRuntime(
+        ["queue"], 1, CAP, LANES, fs=fs, n_threads=1, pipeline=True
+    )
+    rt.announce(0, [1, 2], [OP_ENQ] * 2, [1.0, 2.0], token=1)
+    rt.combine_phase()  # dispatch k=1; nothing retired yet
+    rt.announce(0, [3, 4], [OP_ENQ] * 2, [3.0, 4.0], token=2)
+    # crash before the next combine_phase would retire k=1
+    rt2, report = ShardedDFCRuntime.recover(
+        fs.crash(), kind=["queue"], n_shards=1, capacity=CAP, lanes=LANES,
+        n_threads=1, pipeline=True,
+    )
+    assert rt2.shard_contents(0) == []  # neither batch committed
+    r = report[0]
+    assert r["token"] == 2 and all(not v.applied for v in r["ops"])
+    assert r["prev"] is not None and r["prev"]["token"] == 1
+    assert all(not v.applied for v in r["prev"]["ops"])
+    assert rt2.replay_pending(report) == [0]
+    # replay preserved per-thread op order: k's enqueues precede k+1's
+    assert rt2.shard_contents(0) == [1.0, 2.0, 3.0, 4.0]
+
+
+def test_pipeline_responses_durable_after_retire(tmp_path):
+    """A retired batch's responses survive a crash and are readable by token
+    from the OLDER announcement slot, matching the oracle responses."""
+    fs = SimFS(tmp_path)
+    rt = ShardedDFCRuntime(
+        ["stack"], 1, CAP, LANES, fs=fs, n_threads=1, pipeline=True
+    )
+    rt.announce(0, [5, 6], [OP_PUSH] * 2, [7.0, 8.0], token=1)
+    rt.combine_phase()
+    rt.announce(0, [5], [2], [0.0], token=2)  # OP_POP
+    rt.combine_phase()  # retires token 1
+    rt2, report = ShardedDFCRuntime.recover(
+        fs.crash(), kind=["stack"], n_shards=1, capacity=CAP, lanes=LANES,
+        n_threads=1, pipeline=True,
+    )
+    val = rt2.read_responses(0, token=1)
+    assert val is not None and val["kinds"] == [1, 1]  # R_ACK, R_ACK
+    # token 2 was in flight: not applied, replayable
+    assert report[0]["token"] == 2
+    assert not report[0]["ops"][0].applied
+    rt2.replay_pending(report)
+    val2 = rt2.read_responses(0, token=2)
+    assert val2 is not None and val2["kinds"] == [R_VALUE]
+    assert val2["resp"] == [8.0]  # LIFO top
+
+
+def test_pipeline_matches_oracle_per_phase(tmp_path):
+    """Crash-free pipelined run: every retired batch's durable responses
+    equal ``sequential_hetero_reference`` applied phase-by-phase, and the
+    final fabric equals the oracle fabric (mixed kinds, three backends by
+    the slow grid; jnp here)."""
+    kinds = ["stack", "queue", "deque"]
+    rng = np.random.default_rng(23)
+    fs = SimFS(tmp_path)
+    rt = ShardedDFCRuntime(
+        kinds, 3, CAP, LANES, fs=fs, n_threads=1, pipeline=True, n_buckets=12
+    )
+    oracle = [[] for _ in kinds]
+    expected = {}
+    for tok in range(1, 5):
+        keys = [int(k) for k in rng.integers(0, 1000, 10)]
+        shard = rt.route_host(keys)
+        ops = [int(rng.integers(1, 3)) for _ in shard]
+        params = [float(v) for v in (rng.random(10) * 100).round(2)]
+        eresp, ekinds = sequential_hetero_reference(
+            kinds, oracle, keys, ops, params, LANES, table=rt.table
+        )
+        expected[tok] = (eresp, ekinds)
+        rt.announce(0, keys, ops, params, token=tok)
+        rt.combine_phase()
+        if tok > 1:  # the predecessor retired in this phase
+            val = rt.read_responses(0, token=tok - 1)
+            eresp_p, ekinds_p = expected[tok - 1]
+            assert val["kinds"] == list(ekinds_p)
+            np.testing.assert_allclose(
+                val["resp"], np.asarray(eresp_p, np.float32), rtol=1e-6
+            )
+    rt.flush()
+    val = rt.read_responses(0, token=4)
+    assert val["kinds"] == list(expected[4][1])
+    for s in range(3):
+        np.testing.assert_allclose(rt.shard_contents(s), oracle[s])
+
+
+def test_chain_larger_than_ready_set(tmp_path):
+    """Regression: a chain depth larger than the number of ready
+    announcements must not build an empty tail batch — 2 announcing threads
+    under chain=3 commit as two chained batches, exactly once."""
+    fs = SimFS(tmp_path)
+    rt = ShardedDFCRuntime(
+        ["queue", "queue"], 2, CAP, LANES, fs=fs, n_threads=2,
+        pipeline=True, chain=3,
+    )
+    rt.announce(0, [1, 2], [OP_ENQ] * 2, [1.0, 2.0], token=1)
+    rt.announce(1, [3, 4], [OP_ENQ] * 2, [3.0, 4.0], token=2)
+    assert sorted(rt.combine_phase()) == [0, 1]
+    rt.announce(0, [5], [OP_ENQ], [5.0], token=3)  # 1 ready < chain
+    assert rt.combine_phase() == [0]
+    rt.flush()
+    assert _fabric_contents(rt) == [1.0, 2.0, 3.0, 4.0, 5.0]
+    for tok, kinds in ((1, 2), (2, 2), (3, 1)):
+        t = 1 if tok == 2 else 0
+        val = rt.read_responses(t, token=tok)
+        assert val is not None and len(val["kinds"]) == kinds
+
+
+def test_request_queue_tier_rides_the_ring_path():
+    """The serving tier's durable phases flow through the device-side
+    announcement ring (payload spans registered and consumed), in both the
+    serial and the pipelined tier configuration, and still admit every
+    session exactly once."""
+    from repro.launch.serve import RequestQueueTier
+
+    for pipeline in (False, True):
+        tier = RequestQueueTier(
+            n_queues=2, slots=2, capacity=512, lanes=16,
+            durable=True, pipeline=pipeline,
+        )
+        assert tier.rt.ring is not None  # durable fabric staged on-device
+        sids = list(range(1, 7))
+        assert tier.submit(sids) == []
+        # the submit phases consumed their ring spans at dispatch
+        assert tier.rt._ring_tail > 0 and not tier.rt._ring_spans
+        served = []
+        for _ in range(20):
+            admitted = tier.admit(2)
+            served += [sid for sid, _ in admitted]
+            tier.submit([], release_slots=[slot for _, slot in admitted])
+            if len(served) == len(sids):
+                break
+        assert sorted(served) == sids
+        p = tier.persistence_stats()
+        assert p and p["pwb_per_op"] > 0
+
+
+# ------------------------------------------------------------- slow grid
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "kinds,pipeline,chain,n_threads",
+    [
+        (["queue", "queue"], True, 1, 2),
+        (["stack", "queue", "deque"], True, 1, 1),
+        (["stack", "queue", "deque"], True, 2, 3),
+        (["deque", "deque"], False, 2, 2),  # chaining without overlap
+    ],
+    ids=["q2-threads", "mixed", "mixed-chain", "chain-only"],
+)
+def test_pipeline_crash_sweep_grid(tmp_path, kinds, pipeline, chain, n_threads):
+    """Full crash sweep across fabrics × pipeline mechanisms (slow job)."""
+    _sweep(
+        tmp_path, kinds, pipeline=pipeline, chain=chain, n_threads=n_threads
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["jnp", "ref", "pallas"])
+def test_pipeline_backend_sweep(tmp_path, backend):
+    """The pipelined sweep holds on every combine backend (the fused
+    multi-batch chain runs as one scanned vmap or one scanned Pallas grid)."""
+    inj_total = None
+    for k in [None, 7, 23, 41, 55]:
+        inj = FaultInjector(crash_at=k)
+        fs = SimFS(tmp_path / f"{backend}-{k}", inj)
+        rt = ShardedDFCRuntime(
+            ["queue", "stack"], 2, CAP, LANES, fs=fs, n_threads=2,
+            pipeline=True, chain=2, backend=backend,
+        )
+        phases = _insert_phases(["queue"], 2, 5, 2, seed=3)
+        try:
+            _drive(rt, phases)
+        except CrashNow:
+            pass
+        rt2, report = ShardedDFCRuntime.recover(
+            fs.crash(), kind=["queue", "stack"], n_shards=2, capacity=CAP,
+            lanes=LANES, n_threads=2, pipeline=True, chain=2,
+        )
+        if k is None:
+            inj_total = inj.count
+        _verify_exactly_once(rt2, report, phases, 2)
+    assert inj_total and inj_total > 40

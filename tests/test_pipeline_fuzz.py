@@ -1,0 +1,199 @@
+"""Differential fuzz of the pipelined durable path (hypothesis-based).
+
+Random op/key/kind schedules flow through pipelined + chained durable
+fabrics with randomly injected MID-PIPELINE crashes; after recovery, replay
+and re-drive, the fabric contents must equal the sequential oracle applied
+over the same per-thread op order — and the per-thread detectability
+verdicts must match what the oracle says about each op (its response and
+response kind).  The schedule is replayed on all three combine backends
+(``jnp``, ``ref``, ``pallas``) and must agree bit-for-bit.
+
+Runs through ``tests/_compat.py``: with hypothesis installed these are real
+property tests; without it a deterministic seeded stand-in draws the same
+strategy surface.
+"""
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+from _compat import hypothesis, st
+
+from repro.checkpoint.dfc_checkpoint import CrashNow, FaultInjector, SimFS
+from repro.core.jax_dfc import R_NONE, STRUCTS
+from repro.runtime.dfc_shard import (
+    R_OVERFLOW,
+    ShardedDFCRuntime,
+    route_keys_host,
+    sequential_hetero_reference,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CAP = 128
+KIND_SETS = [
+    ["queue", "queue"],
+    ["stack", "queue"],
+    ["stack", "queue", "deque"],
+    ["deque", "deque", "stack"],
+]
+
+
+def _schedule(kinds, shape, rng_draws):
+    """Build a phase schedule whose op codes are valid for each key's routed
+    structure.  ``shape`` = (n_phases, batch); ``rng_draws`` yields ints."""
+    n_phases, batch = shape
+    lanes = batch  # lanes == batch: overflow impossible, replay keeps order
+    phases = []
+    for p in range(n_phases):
+        keys = [rng_draws(0, 997) for _ in range(batch)]
+        shard = route_keys_host(np.asarray(keys), len(kinds))
+        ops = [
+            rng_draws(1, STRUCTS[kinds[s]].n_opcodes - 1) for s in shard
+        ]
+        params = [
+            float(rng_draws(1, 10_000)) / 8.0 for _ in range(batch)
+        ]
+        phases.append((p + 1, keys, ops, params))
+    return phases, lanes
+
+
+def _oracle_run(kinds, phases, lanes):
+    """Phase-by-phase sequential witness: per-token (resp, kinds) plus the
+    final per-shard contents."""
+    shards = [[] for _ in kinds]
+    per_token = {}
+    for token, keys, ops, params in phases:
+        eresp, ekinds = sequential_hetero_reference(
+            kinds, shards, keys, ops, params, lanes
+        )
+        per_token[token] = (eresp, ekinds)
+    return shards, per_token
+
+
+def _crashed_run(kinds, phases, lanes, crash_at, backend, chain, tmp):
+    """Drive the pipelined fabric with a crash at persistence op
+    ``crash_at``; recover, check verdicts against the oracle, replay,
+    re-drive, and return the final per-shard contents."""
+    inj = FaultInjector(crash_at=crash_at)
+    fs = SimFS(tmp, inj)
+    rt = ShardedDFCRuntime(
+        kinds, len(kinds), CAP, lanes, fs=fs, n_threads=1,
+        pipeline=True, chain=chain, backend=backend,
+    )
+    try:
+        for token, keys, ops, params in phases:
+            rt.announce(0, keys, ops, params, token=token)
+            rt.combine_phase()
+        rt.flush()
+    except CrashNow:
+        pass
+    rt2, report = ShardedDFCRuntime.recover(
+        fs.crash(), kind=kinds, n_shards=len(kinds), capacity=CAP,
+        lanes=lanes, n_threads=1, pipeline=True, chain=chain, backend=backend,
+    )
+    _, per_token = _oracle_run(kinds, phases, lanes)
+
+    # detectability verdicts vs the oracle: an op reported applied must carry
+    # the oracle's response for exactly its position in the phase order
+    r = report[0]
+    for rec in ([r] if r["token"] is not None else []) + (
+        [r["prev"]] if r.get("prev") else []
+    ):
+        eresp, ekinds = per_token[rec["token"]]
+        for i, v in enumerate(rec["ops"]):
+            assert v.kind != R_OVERFLOW  # lanes == batch: cannot overflow
+            if v.applied:
+                assert v.kind == ekinds[i], (rec["token"], i)
+                np.testing.assert_allclose(
+                    v.resp, np.float32(eresp[i]), rtol=1e-6
+                )
+            elif v.kind is not None:
+                assert v.kind == R_NONE  # committed no-op (kind mismatch)
+
+    rt2.replay_pending(report)
+    surfaced = r["token"] or 0
+    for token, keys, ops, params in phases[surfaced:]:
+        rt2.announce(0, keys, ops, params, token=token)
+        rt2.combine_phase()
+    rt2.flush()
+    return [rt2.shard_contents(s) for s in range(len(kinds))]
+
+
+@hypothesis.settings(max_examples=8, deadline=None)
+@hypothesis.given(
+    st.integers(0, len(KIND_SETS) - 1),
+    st.integers(2, 3),  # phases
+    st.integers(3, 6),  # batch
+    st.integers(1, 60),  # crash point (cycles through the schedule's ops)
+    st.integers(1, 3),  # chain
+    st.data(),
+)
+def test_fuzz_pipeline_crash_matches_oracle(
+    kset, n_phases, batch, crash_at, chain, data
+):
+    """Random schedules + random mid-pipeline crash: recovered contents and
+    verdicts match the oracle on every backend, and backends agree."""
+    kinds = KIND_SETS[kset]
+    draws = lambda lo, hi: data.draw(st.integers(lo, hi))
+    phases, lanes = _schedule(kinds, (n_phases, batch), draws)
+    oracle_shards, _ = _oracle_run(kinds, phases, lanes)
+
+    per_backend = {}
+    for backend in ("jnp", "ref", "pallas"):
+        tmp = Path(tempfile.mkdtemp(prefix=f"dfc_fuzz_{backend}_"))
+        per_backend[backend] = _crashed_run(
+            kinds, phases, lanes, crash_at, backend, chain, tmp
+        )
+    for backend, got in per_backend.items():
+        for s in range(len(kinds)):
+            np.testing.assert_allclose(
+                got[s], oracle_shards[s], rtol=1e-6,
+                err_msg=f"{backend} shard {s} diverged from the oracle",
+            )
+    assert per_backend["jnp"] == per_backend["ref"] == per_backend["pallas"]
+
+
+@hypothesis.settings(max_examples=6, deadline=None)
+@hypothesis.given(
+    st.integers(0, len(KIND_SETS) - 1),
+    st.integers(2, 3),
+    st.integers(3, 5),
+    st.integers(1, 3),
+    st.data(),
+)
+def test_fuzz_pipeline_crash_free_differential(
+    kset, n_phases, batch, chain, data
+):
+    """Crash-free pipelined runs: durable responses of every retired batch
+    equal the oracle's, per backend, including mixed-kind no-ops."""
+    kinds = KIND_SETS[kset]
+    draws = lambda lo, hi: data.draw(st.integers(lo, hi))
+    phases, lanes = _schedule(kinds, (n_phases, batch), draws)
+    oracle_shards, per_token = _oracle_run(kinds, phases, lanes)
+    for backend in ("jnp", "ref", "pallas"):
+        fs = SimFS(Path(tempfile.mkdtemp(prefix=f"dfc_difffuzz_{backend}_")))
+        rt = ShardedDFCRuntime(
+            kinds, len(kinds), CAP, lanes, fs=fs, n_threads=1,
+            pipeline=True, chain=chain, backend=backend,
+        )
+        for token, keys, ops, params in phases:
+            rt.announce(0, keys, ops, params, token=token)
+            rt.combine_phase()
+        rt.flush()
+        for token, _, _, _ in phases:
+            val = rt.read_responses(0, token=token)
+            if val is None:
+                continue  # overwritten response slot (token <= last - 2)
+            eresp, ekinds = per_token[token]
+            assert val["kinds"] == list(ekinds), (backend, token)
+            np.testing.assert_allclose(
+                val["resp"], np.asarray(eresp, np.float32), rtol=1e-6
+            )
+        for s in range(len(kinds)):
+            np.testing.assert_allclose(
+                rt.shard_contents(s), oracle_shards[s], rtol=1e-6
+            )

@@ -1,0 +1,110 @@
+"""Device/host router parity on edge-case keys.
+
+``shard_of_keys`` (jnp) and ``shard_of_keys_host`` / ``route_keys_host``
+(numpy) are deliberately duplicated implementations of the same
+multiplicative hash — the sharded runtime's crash bookkeeping, oracles and
+drivers all assume they agree bit-for-bit.  This pins the contract on the
+keys where integer-width coercion could silently diverge: 0, negatives,
+values at and past 2^31, values past 2^32, and mixed input dtypes.  The
+invariant is that both sides hash the key's residue mod 2^32.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.dfc_shard import (
+    route_keys_host,
+    shard_of_keys,
+    shard_of_keys_host,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+EDGE_KEYS = [
+    0,
+    1,
+    7,
+    -1,
+    -7,
+    -(2**16),
+    2**16,
+    2**31 - 1,
+    2**31,  # wraps to i32 min on device, uint32 2^31 on host — same residue
+    2**31 + 12345,
+    2**32 - 1,
+    2**32,  # residue 0
+    2**32 + 99,
+    -(2**31),
+    5_000_000_000,
+]
+
+
+def _as_dtype(keys, dtype):
+    return np.asarray(keys, dtype=np.int64).astype(dtype)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 7, 16])
+@pytest.mark.parametrize("dtype", [np.int32, np.int64, np.uint32, np.uint64])
+def test_shard_of_keys_device_host_parity(n_shards, dtype):
+    if np.issubdtype(dtype, np.unsignedinteger):
+        keys = [k for k in EDGE_KEYS if k >= 0]
+    else:
+        keys = EDGE_KEYS
+    host_in = _as_dtype(keys, dtype)
+    dev = np.asarray(shard_of_keys(jnp.asarray(host_in), n_shards))
+    host = shard_of_keys_host(host_in, n_shards)
+    np.testing.assert_array_equal(dev, host)
+    assert host.dtype == np.int32 and dev.dtype == np.int32
+    assert (host >= 0).all() and (host < n_shards).all()
+
+
+def test_hash_is_residue_mod_2_32():
+    """Keys equal mod 2^32 must route identically — the width contract both
+    implementations rely on (int64 -> {int32, uint32} coercions agree)."""
+    base = np.asarray([0, 1, 12345, 2**31 - 1], np.int64)
+    for offset in (2**32, -(2**32), 3 * 2**32):
+        shifted = base + offset
+        np.testing.assert_array_equal(
+            shard_of_keys_host(base, 13), shard_of_keys_host(shifted, 13)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(shard_of_keys(jnp.asarray(base), 13)),
+            np.asarray(shard_of_keys(jnp.asarray(shifted), 13)),
+        )
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.int64])
+def test_route_keys_host_table_parity(dtype):
+    """The table-driven host router agrees with the device path (bucket hash
+    + table lookup) on the same edge keys, including non-identity tables."""
+    rng = np.random.default_rng(0)
+    n_buckets, n_shards = 24, 5
+    table = rng.integers(0, n_shards, n_buckets).astype(np.int32)
+    keys = _as_dtype(EDGE_KEYS, dtype)
+    host = route_keys_host(keys, n_shards, table)
+    dev_buckets = np.asarray(shard_of_keys(jnp.asarray(keys), n_buckets))
+    dev = table[dev_buckets]
+    np.testing.assert_array_equal(host, dev)
+    # identity table == plain hash (the PR-2 router, bit-for-bit)
+    np.testing.assert_array_equal(
+        route_keys_host(keys, n_shards, None),
+        shard_of_keys_host(keys, n_shards),
+    )
+
+
+def test_mixed_dtype_batches_agree():
+    """One flat batch announced with mixed host dtypes routes identically
+    however the driver happened to build its arrays."""
+    k64 = np.asarray([3, -9, 2**31 + 5, 2**32 + 17], np.int64)
+    k32 = k64.astype(np.int32)  # wraps, same residue mod 2^32
+    u32 = k64.astype(np.uint32)
+    a = shard_of_keys_host(k64, 11)
+    b = shard_of_keys_host(k32, 11)
+    c = shard_of_keys_host(u32, 11)
+    d = np.asarray(shard_of_keys(jnp.asarray(k32), 11))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(b, c)
+    np.testing.assert_array_equal(c, d)
