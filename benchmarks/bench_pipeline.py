@@ -33,7 +33,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.checkpoint.dfc_checkpoint import SimFS
-from repro.runtime.dfc_shard import R_OVERFLOW, ShardedDFCRuntime
+from repro.runtime.dfc_shard import R_OVERFLOW, ShardedDFCRuntime, StaleTokenError
 
 
 def _workload(n_threads, batch, rounds, universe=4096, seed=0):
@@ -75,12 +75,15 @@ def _drive(rt, schedule, pipelined: bool) -> int:
         for round_ in schedule:
             for t in range(len(round_)):
                 token += 1
-                val = rt.read_responses(t, token=token)
+                try:
+                    val = rt.read_responses(t, token=token)
+                except StaleTokenError:
+                    val = None  # slot reused two announcements later
                 if val is not None:
                     applied += int(
                         np.sum(np.asarray(val["kinds"]) != R_OVERFLOW)
                     )
-                else:  # slot reused two announcements later: count the batch
+                else:  # overwritten record: count the whole batch
                     applied += len(round_[t][1])
     return applied
 

@@ -11,8 +11,15 @@ for the target shard's kind), and ``--split-backlog N`` splits the hottest
 shard crash-consistently once it has absorbed N more ops than the average —
 watch the shard-load histogram flatten after the split.
 
+ISSUE-5 options: ``--threads T`` announces each durable phase from T
+concurrent announcers through the seeded ``MultiThreadDriver`` (random but
+replayable announcer/combiner interleavings), and ``--depth D`` pipelines
+the durable path D chains deep — together the two axes the paper's
+amortization claim actually grows along.
+
 Run:  PYTHONPATH=src python examples/serve_shards.py [--kind queue|--mixed]
       [--shards 16] [--skew 1.1] [--phases 50] [--durable] [--split-backlog N]
+      [--threads 4] [--depth 3]
 """
 
 from __future__ import annotations
@@ -28,6 +35,7 @@ import jax
 
 from repro.checkpoint.dfc_checkpoint import SimFS
 from repro.core.jax_dfc import STRUCTS
+from repro.runtime.announce_driver import MultiThreadDriver
 from repro.runtime.dfc_shard import (
     R_OVERFLOW,
     ShardedDFCRuntime,
@@ -45,6 +53,11 @@ def main():
     ap.add_argument("--phases", type=int, default=50)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--durable", action="store_true")
+    ap.add_argument("--threads", type=int, default=1,
+                    help="announcing threads per durable phase (seeded "
+                         "interleaved scheduler when > 1)")
+    ap.add_argument("--depth", type=int, default=0,
+                    help="durable pipeline depth (0 = serial)")
     ap.add_argument("--split-backlog", type=int, default=0,
                     help="split the hottest shard once it leads the mean "
                          "op count by N (0 = never)")
@@ -65,8 +78,15 @@ def main():
     if args.durable:
         fs = SimFS(Path(tempfile.mkdtemp(prefix="dfc_serve_")))
     rt = ShardedDFCRuntime(
-        kinds, args.shards, capacity, lanes, fs=fs, n_threads=1,
+        kinds, args.shards, capacity, lanes, fs=fs, n_threads=args.threads,
         n_buckets=4 * args.shards if args.split_backlog else None,
+        depth=args.depth or None,
+        chain=args.threads if (args.depth or 0) > 1 else 1,
+    )
+    drv = (
+        MultiThreadDriver(rt, seed=1)
+        if args.durable and args.threads > 1
+        else None
     )
 
     n_ops = n_overflow = 0
@@ -79,9 +99,25 @@ def main():
         opmax = np.asarray([STRUCTS[k].n_opcodes for k in rt.kinds])
         ops = rng.integers(1, opmax[shard])  # per-key draw valid for its kind
         params = rng.random(args.batch).astype(np.float32) * 100
-        if args.durable:
+        if args.durable and drv is not None:
+            # slice the phase's batch across the announcing threads; the
+            # seeded driver interleaves announce/combine actions replayably
+            per = (args.batch + args.threads - 1) // args.threads
+            toks = []
+            for t in range(args.threads):
+                sl = slice(t * per, min((t + 1) * per, args.batch))
+                if sl.start >= sl.stop:
+                    break
+                toks.append((t, drv.submit(t, keys[sl], ops[sl], params[sl])))
+            drv.run()
+            kinds_out = np.concatenate([
+                np.asarray(rt.read_responses(t, token=tok)["kinds"])
+                for t, tok in toks
+            ])
+        elif args.durable:
             rt.announce(0, keys, ops, params, token=phase + 1)
             rt.combine_phase()
+            rt.flush()
             kinds_out = np.asarray(rt.read_responses(0)["kinds"])
         else:
             _, kinds_out = rt.step(keys, ops, params)

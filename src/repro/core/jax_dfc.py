@@ -63,6 +63,14 @@ OP_PUSHL = 1
 OP_POPL = 2
 OP_PUSHR = 3
 OP_POPR = 4
+# serving-tier aliases: priority admission runs a request shard as a deque —
+# a normal arrival joins the BACK of the line (pushR), admission drains the
+# FRONT (popL), and a high-priority arrival jumps the line (pushL).  Note
+# OP_POP_FRONT == OP_DEQ == 2, so one admission op code serves both queue
+# and deque request shards.
+OP_PUSH_BACK = OP_PUSHR
+OP_PUSH_FRONT = OP_PUSHL
+OP_POP_FRONT = OP_POPL
 # response kinds
 R_NONE = 0
 R_ACK = 1
@@ -661,6 +669,16 @@ def ring_announce(
         params=ring.params.at[pos].set(jnp.asarray(params).astype(jnp.float32)),
         tail=ring.tail + n,
     )
+
+
+def ring_has_room(slots: int, tail: int, oldest_live: int, n: int) -> bool:
+    """Host-side admission check for a span of ``n`` lanes landing at absolute
+    position ``tail``: the write must not wrap onto the OLDEST span still
+    awaiting its combining phase (``oldest_live`` is that span's absolute
+    start; pass ``tail`` itself when no span is live).  The sharded
+    runtime's ``_register_live`` is the canonical caller — an announcement
+    that fails this check falls back to the host-upload path."""
+    return n <= slots and (tail + n) - oldest_live <= slots
 
 
 @jax.jit

@@ -294,8 +294,10 @@ def _one_sharded_combine(kind: str, backend: str, state, ops, params):
     return SHARDED_COMBINE_STEPS[kind](state, ops, params, backend=backend)
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "backend"))
-def dfc_sharded_multi_combine_step(state, ops, params, *, kind, backend="ref"):
+@functools.partial(jax.jit, static_argnames=("kind", "backend", "unroll"))
+def dfc_sharded_multi_combine_step(
+    state, ops, params, *, kind, backend="ref", unroll=1
+):
     """Chain B sharded combining phases through ONE dispatch.
 
     ``ops`` / ``params`` are ``[B, S, N]`` per-batch announcement matrices;
@@ -309,7 +311,16 @@ def dfc_sharded_multi_combine_step(state, ops, params, *, kind, backend="ref"):
     Per batch, shards that received no ops keep their state AND epoch (no
     phantom phases), so the per-shard epoch after batch b is exactly what b
     separate phases would have produced — the two-increment durable commit
-    per batch is unchanged.
+    per batch is unchanged.  An all-``OP_NONE`` batch is therefore a pure
+    pass-through (state, epochs, and counters untouched, ``R_NONE``
+    responses): a depth-D pipeline exploits this by PADDING every chain to a
+    fixed batch count, so all of a fabric's dispatches — however many
+    announcers happened to be ready — share one compiled program per lane
+    width instead of one per ready-set size.
+
+    ``unroll`` (static) unrolls the scan body that many batches per step —
+    the depth-aware dispatch knob: a depth-D pipeline passes D so XLA can
+    fuse the window of batches it keeps in flight into straight-line code.
 
     Returns ``(states, resp, kinds)`` where ``states`` is the shard-stacked
     state AFTER each batch (every leaf gains a leading B axis; ``states[-1]``
@@ -330,21 +341,26 @@ def dfc_sharded_multi_combine_step(state, ops, params, *, kind, backend="ref"):
         new_state = jax.tree_util.tree_map(_select, combined, carry)
         return new_state, (new_state, s_resp, s_kinds)
 
-    _, (states, resp, kinds) = jax.lax.scan(body, state, (ops, params))
+    _, (states, resp, kinds) = jax.lax.scan(
+        body, state, (ops, params), unroll=max(1, min(int(unroll), ops.shape[0]))
+    )
     return states, resp, kinds
 
 
-def dfc_hetero_multi_combine_step(groups, group_ops, group_params, *, backend="ref"):
+def dfc_hetero_multi_combine_step(
+    groups, group_ops, group_params, *, backend="ref", unroll=1
+):
     """Chained heterogeneous combine: ``dfc_sharded_multi_combine_step`` per
     kind group present.  ``group_ops[kind]`` is ``[B, S_kind, N]``; every kind
-    chains its B batches in one dispatch.  Returns ``{kind: (states, resp,
-    kinds)}`` with the per-batch leading axis (see the homogeneous twin).
-    Meant to be called inside an enclosing jit (not jitted itself)."""
+    chains its B batches in one dispatch, unrolled ``unroll`` batches per
+    scan step (the pipeline passes its depth).  Returns ``{kind: (states,
+    resp, kinds)}`` with the per-batch leading axis (see the homogeneous
+    twin).  Meant to be called inside an enclosing jit (not jitted itself)."""
     out = {}
     for kind in sorted(groups):
         out[kind] = dfc_sharded_multi_combine_step(
             groups[kind], group_ops[kind], group_params[kind],
-            kind=kind, backend=backend,
+            kind=kind, backend=backend, unroll=unroll,
         )
     return out
 

@@ -4,20 +4,40 @@ The sharded DFC fabric (``repro.runtime.dfc_shard``) is mounted as the
 serving tier's REQUEST QUEUE — the ROADMAP's "request-queue tier" item:
 
   * session ids are the routing keys; an arriving session is ENQUEUED into
-    its FIFO request shard, and each prefill round DEQUEUES up to ``--batch``
+    its request shard, and each prefill round DEQUEUES up to ``--batch``
     sessions into the model batch;
   * the pool of free decode slots (KV-cache rows) is a LIFO **stack shard in
     the same fabric** — a heterogeneous fabric in production position:
     arrivals (queue enq) and slot releases (stack push) combine in ONE fused
     phase;
+  * ``--priority`` (ISSUE 5) runs the request shards as DEQUES: a normal
+    arrival joins the back of the line (``OP_PUSH_BACK``), admission drains
+    the front (``OP_POP_FRONT``), and a high-priority session jumps the line
+    with a front-of-queue push (``OP_PUSH_FRONT``).  Priority order lives in
+    the fabric state itself, so it survives a crash/recover;
   * ``--durable`` runs the tier over the announce/combine persistence path
     (SimFS-backed) and reports pwb/op — the paper's Figure-3 metric at the
-    serving tier;
+    serving tier; ``--depth D`` pipelines the durable path D chains deep;
   * ``--reshard-backlog N`` splits a request shard whose backlog exceeds N
-    (crash-consistent: see ``ShardedDFCRuntime.split_shard``).
+    (crash-consistent: see ``ShardedDFCRuntime.split_shard``);
+  * ``--state-dir`` + ``--crash-at K`` + ``--resume`` demo the paper's
+    detectability story at the serving tier: the launcher crashes at the
+    K-th persistence op, and a second invocation with ``--resume`` recovers
+    the fabric, reconciles (served log ∪ queued sessions ∪ in-flight
+    admissions), and finishes serving with no session lost or duplicated
+    (``--expect-exactly-once`` asserts it; wired into CI).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --batch 4 --prompt-len 16 --gen 32 --sessions 12
+
+Crash/resume demo (tier only, no model):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --tier-only \
+      --durable --priority --sessions 8 --state-dir /tmp/dfc_serve \
+      --crash-at 60 ; \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --tier-only \
+      --durable --priority --sessions 8 --state-dir /tmp/dfc_serve \
+      --resume --expect-exactly-once
 """
 
 from __future__ import annotations
@@ -26,31 +46,45 @@ import argparse
 import tempfile
 import time
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.dfc_checkpoint import SimFS
+from repro.checkpoint.dfc_checkpoint import CrashNow, FaultInjector, SimFS
 from repro.configs import ARCH_IDS, get_config, get_reduced
-from repro.core.jax_dfc import OP_DEQ, OP_ENQ, OP_POP, OP_PUSH, R_VALUE
-from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.launch.tuned import apply_tuning
-from repro.models.model import init_params
+from repro.core.jax_dfc import (
+    OP_DEQ,
+    OP_ENQ,
+    OP_POP,
+    OP_POP_FRONT,
+    OP_PUSH,
+    OP_PUSH_BACK,
+    OP_PUSH_FRONT,
+    R_VALUE,
+)
 from repro.runtime.dfc_shard import _HASH_MULT, R_OVERFLOW, ShardedDFCRuntime
 
 
 class RequestQueueTier:
     """Session admission over a heterogeneous DFC fabric.
 
-    ``n_queues`` FIFO request shards plus ONE stack shard (the free-slot
-    pool) behind a single router.  Bucket 0 of the routing table is pinned
-    to the pool shard; session ids are deterministically re-probed away from
-    it, so every session key lands on a request shard.  All tier traffic —
+    ``n_queues`` request shards (FIFO queues, or DEQUES when
+    ``priority=True``) plus ONE stack shard (the free-slot pool) behind a
+    single router.  Bucket 0 of the routing table is pinned to the pool
+    shard; session ids are deterministically re-probed away from it, so
+    every session key lands on a request shard.  All tier traffic —
     arrivals, slot pops, dequeues, releases — flows through the fabric's
     fused combine, volatile (``step``) or durable (``announce`` /
     ``combine_phase``).
+
+    Priority admission (``priority=True``): ``submit`` takes a parallel
+    ``priorities`` list; a session with priority > 0 is pushed at the FRONT
+    of its request deque and therefore dequeues ahead of the whole backlog
+    (high-priority sessions are LIFO among themselves — the latest urgent
+    arrival is the most urgent).  Because the order is fabric state, it is
+    exactly as durable as the queue contents: a recovered tier admits the
+    same sessions in the same order.
     """
 
     def __init__(
@@ -65,36 +99,52 @@ class RequestQueueTier:
         reshard_backlog: Optional[int] = None,
         n_buckets: Optional[int] = None,
         pipeline: bool = False,
+        depth: Optional[int] = None,
+        priority: bool = False,
+        _seed_slots: bool = True,
+        _rt: Optional[ShardedDFCRuntime] = None,
     ):
-        kinds = ["queue"] * n_queues + ["stack"]
+        req_kind = "deque" if priority else "queue"
+        kinds = [req_kind] * n_queues + ["stack"]
         n_shards = n_queues + 1
         n_buckets = n_buckets or 4 * n_shards
+        self.n_queues = n_queues
         self.pool_shard = n_queues
-        # bucket 0 -> pool stack; the rest round-robin over the request shards
-        table = np.asarray(
-            [self.pool_shard] + [b % n_queues for b in range(1, n_buckets)],
-            np.int32,
-        )
+        self.priority = priority
         if durable and fs is None:
             fs = SimFS(Path(tempfile.mkdtemp(prefix="dfc_serve_tier_")))
         self.durable = durable
-        self.pipeline = pipeline
-        self.rt = ShardedDFCRuntime(
+        self.pipeline = pipeline or (depth or 1) > 1
+        # ``_rt`` lets ``recover`` mount an already-recovered fabric instead
+        # of building a throwaway one just to replace it
+        self.rt = _rt if _rt is not None else ShardedDFCRuntime(
             kinds, n_shards, capacity, lanes,
             fs=fs if durable else None, n_threads=1,
-            n_buckets=n_buckets, table=table, pipeline=pipeline,
+            n_buckets=n_buckets,
+            table=self._default_table(n_queues, n_buckets),
+            pipeline=pipeline, depth=depth,
         )
         self.reshard_backlog = reshard_backlog
         self._rep_keys: Dict[int, int] = {}
         self._slot_retry: List[int] = []  # pool pushes that overflowed a phase
         self._token = 0
         self.stats = {"arrived": 0, "admitted": 0, "rejected": 0, "splits": 0}
-        # seed the slot pool (submit chunks pushes to the pool shard's lanes)
-        self.submit([], release_slots=list(range(slots)))
-        while self._slot_retry:
-            self.submit([])
+        if _seed_slots:
+            # seed the slot pool (submit chunks pushes to the pool's lanes)
+            self.submit([], release_slots=list(range(slots)))
+            while self._slot_retry:
+                self.submit([])
 
     # ------------------------------------------------------------ internals
+    @staticmethod
+    def _default_table(n_queues: int, n_buckets: int) -> np.ndarray:
+        """Bucket 0 -> pool stack (shard ``n_queues``); the rest round-robin
+        over the request shards."""
+        return np.asarray(
+            [n_queues] + [b % n_queues for b in range(1, n_buckets)],
+            np.int32,
+        )
+
     def _key_for(self, shard: int) -> int:
         if shard not in self._rep_keys:
             self._rep_keys[shard] = self.rt.key_for_shard(shard)
@@ -107,9 +157,9 @@ class RequestQueueTier:
         payload lands in the preallocated device ring at ``announce`` and
         the combining phase consumes it there — SimFS only carries the
         compact durable mirror.  The tier needs each phase's responses
-        synchronously (admission decisions), so in pipelined mode it flushes
-        the one in-flight chain right after dispatch; the ring fast path and
-        the per-batch commit schedule are identical either way.
+        synchronously (admission decisions), so it flushes any in-flight
+        chains right after dispatch; the ring fast path and the per-batch
+        commit schedule are identical at every depth.
         """
         if not self.durable:
             resp, kinds = self.rt.step(keys, ops, params)
@@ -117,8 +167,7 @@ class RequestQueueTier:
         self._token += 1
         self.rt.announce(0, keys, ops, params, token=self._token)
         self.rt.combine_phase()
-        if self.pipeline:
-            self.rt.flush()
+        self.rt.flush()
         val = self.rt.read_responses(0, token=self._token)
         return np.asarray(val["resp"]), np.asarray(val["kinds"])
 
@@ -141,25 +190,46 @@ class RequestQueueTier:
         return {
             s: int(sizes[s])
             for s in range(self.rt.n_shards)
-            if self.rt.kinds[s] == "queue"
+            if self.rt.kinds[s] in ("queue", "deque")
         }
 
     # ------------------------------------------------------------- tier API
-    def submit(self, sids: Sequence[int], release_slots: Sequence[int] = ()) -> List[int]:
+    def submit(
+        self,
+        sids: Sequence[int],
+        release_slots: Sequence[int] = (),
+        priorities: Optional[Sequence[int]] = None,
+    ) -> List[int]:
         """Enqueue arriving sessions and return freed decode slots to the
         pool — one mixed-kind combined phase.  Returns session ids that
         overflowed their shard's lanes (re-submit next round).
+
+        ``priorities[i] > 0`` (priority tier only) pushes session ``i`` at
+        the FRONT of its request deque, ahead of the whole backlog.
 
         Pool pushes all route to the single pool shard, so at most ``lanes``
         of them fit per phase; the surplus — and any push the fabric rejects
         with R_OVERFLOW — is carried in ``_slot_retry`` and retried on the
         next submit, so a decode slot can never leak."""
+        if priorities is not None and not self.priority:
+            raise ValueError("priorities given but tier built without priority=True")
+        if priorities is not None and len(priorities) != len(sids):
+            raise ValueError(
+                f"priorities ({len(priorities)}) must parallel sids ({len(sids)})"
+            )
         pool = self._slot_retry + list(release_slots)
         self._slot_retry = pool[self.rt.lanes :]
         pool = pool[: self.rt.lanes]
         keys = [self.session_key(s) for s in sids]
         keys += [self._key_for(self.pool_shard)] * len(pool)
-        ops = [OP_ENQ] * len(sids) + [OP_PUSH] * len(pool)
+        if self.priority:
+            pr = list(priorities) if priorities is not None else [0] * len(sids)
+            enq_ops = [
+                OP_PUSH_FRONT if p > 0 else OP_PUSH_BACK for p in pr
+            ]
+        else:
+            enq_ops = [OP_ENQ] * len(sids)
+        ops = enq_ops + [OP_PUSH] * len(pool)
         params = [float(s) for s in sids] + [float(s) for s in pool]
         if not ops:
             return []
@@ -176,7 +246,8 @@ class RequestQueueTier:
     def admit(self, max_n: int) -> List[Tuple[int, int]]:
         """Admit up to ``max_n`` sessions: pop free slots from the pool
         stack, then dequeue that many sessions round-robin from the backlogged
-        request shards.  Returns ``[(session_id, slot), ...]``."""
+        request shards (front-of-queue on priority tiers — ``OP_POP_FRONT``
+        and ``OP_DEQ`` share op code 2).  Returns ``[(session_id, slot), ...]``."""
         if max_n <= 0:
             return []
         pool_key = self._key_for(self.pool_shard)
@@ -200,8 +271,9 @@ class RequestQueueTier:
         if not deqs:
             self.submit([], release_slots=slots)  # nothing queued: put back
             return []
+        deq_op = OP_POP_FRONT if self.priority else OP_DEQ
         resp, kinds = self._phase(
-            [k for _, k in deqs], [OP_DEQ] * len(deqs), [0.0] * len(deqs)
+            [k for _, k in deqs], [deq_op] * len(deqs), [0.0] * len(deqs)
         )
         admitted: List[Tuple[int, int]] = []
         spare = list(slots)
@@ -215,6 +287,20 @@ class RequestQueueTier:
 
     def backlog(self) -> int:
         return sum(self._queue_backlogs().values())
+
+    def queued_sessions(self) -> List[int]:
+        """Session ids currently committed in the request shards, in
+        admission order per shard (front first) — what a resumed launcher
+        reconciles against."""
+        out: List[int] = []
+        for s in range(self.rt.n_shards):
+            if self.rt.kinds[s] in ("queue", "deque"):
+                out.extend(int(v) for v in self.rt.shard_contents(s))
+        return out
+
+    def pool_slots(self) -> List[int]:
+        """Free decode slots committed in the pool stack."""
+        return [int(v) for v in self.rt.shard_contents(self.pool_shard)]
 
     def _maybe_split(self) -> None:
         """Split the hottest request shard when its backlog crosses the
@@ -241,6 +327,137 @@ class RequestQueueTier:
             "pfence_per_op": self.rt.fs.stats["pfence"] / ops,
         }
 
+    # -------------------------------------------------------------- recovery
+    @classmethod
+    def recover(
+        cls,
+        fs: SimFS,
+        *,
+        n_queues: int = 4,
+        capacity: int = 4096,
+        lanes: int = 64,
+        n_buckets: Optional[int] = None,
+        priority: bool = False,
+        reshard_backlog: Optional[int] = None,
+        pipeline: bool = False,
+        depth: Optional[int] = None,
+    ) -> Tuple["RequestQueueTier", Dict[str, Any]]:
+        """Recover a durable tier after a crash.
+
+        Rebuilds the fabric via ``ShardedDFCRuntime.recover`` (the durable
+        routing record, if the tier autosplit before the crash, overrides the
+        bootstrap shape) and returns ``(tier, info)`` where ``info`` carries
+        what a resuming launcher reconciles with its own durable records:
+
+          * ``"report"`` — the raw per-thread detectability report;
+          * ``"queued"`` — session ids still committed in the request shards
+            (admission order per shard);
+          * ``"pool"`` — free slot ids committed in the pool stack;
+          * ``"in_flight"`` — session ids whose DEQUEUE committed durably
+            (they left the queue) but whose service the launcher may not
+            have recorded: serve these first, deduplicated against the
+            launcher's own served log;
+          * ``"lost_arrivals"`` — session ids whose ENQUEUE was announced
+            but reported not-applied: resubmit them.
+
+        The tier deliberately does NOT blanket-``replay_pending``: replaying
+        a not-applied pop/dequeue would admit a session into a response
+        record nobody is waiting on.  Insert-side losses are surfaced as
+        ``lost_arrivals`` instead, and the pop side is reconciled by the
+        launcher against total slot capacity (see ``main``).
+        """
+        req_kind = "deque" if priority else "queue"
+        n_shards = n_queues + 1
+        n_buckets = n_buckets or 4 * n_shards
+        rt, report = ShardedDFCRuntime.recover(
+            fs,
+            kind=[req_kind] * n_queues + ["stack"],
+            n_shards=n_shards,
+            capacity=capacity,
+            lanes=lanes,
+            n_threads=1,
+            n_buckets=n_buckets,
+            table=cls._default_table(n_queues, n_buckets),
+            pipeline=pipeline,
+            depth=depth,
+        )
+        tier = cls(
+            n_queues=n_queues, slots=0, capacity=capacity, lanes=lanes,
+            durable=True, fs=fs, reshard_backlog=reshard_backlog,
+            n_buckets=n_buckets, pipeline=pipeline, depth=depth,
+            priority=priority, _seed_slots=False, _rt=rt,
+        )
+        tier.n_queues = sum(
+            1 for k in rt.kinds if k in ("queue", "deque")
+        )
+        tier.pool_shard = next(
+            s for s, k in enumerate(rt.kinds) if k == "stack"
+        )
+        in_flight: List[int] = []
+        lost_arrivals: List[int] = []
+        max_token = 0
+        r = report.get(0) or {"token": None, "ops": [], "prev": None}
+        recs = ([dict(r, slot="newest")] if r["token"] is not None else []) + (
+            [dict(r["prev"], slot="prev")] if r.get("prev") else []
+        )
+        for rec in recs:
+            max_token = max(max_token, rec["token"])
+            lsb = rt._read_valid(0) & 1
+            ann = rt._read_ann(0, lsb if rec["slot"] == "newest" else 1 - lsb)
+            if ann.get("token", -1) != rec["token"]:
+                continue
+            for i, v in enumerate(rec["ops"]):
+                op = ann["ops"][i]
+                on_request = (
+                    v.shard is not None
+                    and rt.kinds[v.shard] in ("queue", "deque")
+                )
+                if v.applied and on_request and op in (OP_DEQ, OP_POP_FRONT):
+                    in_flight.append(int(v.resp))
+                if (
+                    not v.applied
+                    and op in (OP_ENQ, OP_PUSH_BACK, OP_PUSH_FRONT)
+                ):
+                    shard = (
+                        v.shard
+                        if v.shard is not None
+                        else int(rt.route_host([ann["keys"][i]])[0])
+                    )
+                    if rt.kinds[shard] in ("queue", "deque"):
+                        lost_arrivals.append(int(ann["params"][i]))
+        tier._token = max_token
+        info = {
+            "report": report,
+            "queued": tier.queued_sessions(),
+            "pool": tier.pool_slots(),
+            "in_flight": sorted(set(in_flight)),
+            "lost_arrivals": sorted(set(lost_arrivals)),
+        }
+        return tier, info
+
+
+# ---------------------------------------------------------------- launcher
+def _served_log_path(state_dir: Path) -> Path:
+    return state_dir / "served.log"
+
+
+def _read_served(state_dir: Path) -> List[int]:
+    p = _served_log_path(state_dir)
+    if not p.exists():
+        return []
+    return [int(x) for x in p.read_text().split()]
+
+
+def _log_served(state_dir: Optional[Path], sid: int) -> None:
+    """Downstream consumer's durable record of a completed session — a
+    plain append-only file OUTSIDE the fault-injected SimFS (the demo
+    crashes the TIER, not the consumer)."""
+    if state_dir is None:
+        return
+    with _served_log_path(state_dir).open("a") as f:
+        f.write(f"{sid}\n")
+        f.flush()
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -261,49 +478,85 @@ def main():
                     help="run the tier over the SimFS persistence path")
     ap.add_argument("--pipeline", action="store_true",
                     help="pipelined durable path (dispatch/retire overlap)")
+    ap.add_argument("--depth", type=int, default=0,
+                    help="pipeline depth D (>1 keeps D-1 chains in flight; "
+                         "0 = serial, or 2 with --pipeline)")
+    ap.add_argument("--priority", action="store_true",
+                    help="deque request shards: high-priority sessions jump "
+                         "the line (front-of-queue push)")
+    ap.add_argument("--high-every", type=int, default=0,
+                    help="with --priority: every Nth session arrives "
+                         "high-priority (0 = none)")
     ap.add_argument("--reshard-backlog", type=int, default=0,
                     help="split a request shard when its backlog exceeds N")
+    ap.add_argument("--tier-only", action="store_true",
+                    help="skip model init/decode: serve = tier admission "
+                         "only (fast crash/resume demos and CI smoke)")
+    ap.add_argument("--state-dir", default="",
+                    help="durable tier root (enables crash/resume demos); "
+                         "default: fresh temp dir")
+    ap.add_argument("--crash-at", type=int, default=0,
+                    help="inject a crash at the K-th tier persistence op "
+                         "(requires --durable --state-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover the tier from --state-dir, reconcile, and "
+                         "finish serving")
+    ap.add_argument("--expect-exactly-once", action="store_true",
+                    help="with --resume: assert every session was served "
+                         "exactly once across crash + resume")
     args = ap.parse_args()
 
     cfg = apply_tuning(get_reduced(args.arch) if args.reduced else get_config(args.arch))
-    if cfg.embedding_inputs or cfg.family == "vlm":
+    if not args.tier_only and (cfg.embedding_inputs or cfg.family == "vlm"):
         raise SystemExit(f"{args.arch}: frontend-stub arch — see examples/")
 
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    max_len = args.prompt_len + args.gen + 8
-    prefill_step = jax.jit(make_prefill_step(cfg, max_len=max_len))
-    serve_step = jax.jit(make_serve_step(cfg, window=args.window))
+    if args.tier_only:
+        prefill_step = serve_step = params = None
+    else:
+        import jax
+
+        from repro.launch.steps import make_prefill_step, make_serve_step
+        from repro.models.model import init_params
+
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        max_len = args.prompt_len + args.gen + 8
+        prefill_step = jax.jit(make_prefill_step(cfg, max_len=max_len))
+        serve_step = jax.jit(make_serve_step(cfg, window=args.window))
 
     n_sessions = args.sessions or args.batch
     arrival = args.arrival or args.batch
-    tier = RequestQueueTier(
+    depth = args.depth or None
+    state_dir = Path(args.state_dir) if args.state_dir else None
+    if (args.crash_at or args.resume) and not (args.durable and state_dir):
+        raise SystemExit("--crash-at/--resume need --durable and --state-dir")
+
+    fs = None
+    if args.durable and state_dir is not None:
+        state_dir.mkdir(parents=True, exist_ok=True)
+        fs = SimFS(
+            state_dir / "tier",
+            FaultInjector(crash_at=args.crash_at or None),
+        )
+
+    tier_kw = dict(
         n_queues=args.queues,
-        slots=args.batch,
+        capacity=4096,
         lanes=max(arrival, args.batch) * 2,
-        durable=args.durable,
         reshard_backlog=args.reshard_backlog or None,
         pipeline=args.pipeline,
+        depth=depth,
+        priority=args.priority,
     )
+    served_before = _read_served(state_dir) if state_dir else []
+    in_flight: List[int] = []
 
-    rng = np.random.default_rng(0)
-    next_sid = 1
-    waiting: List[int] = []
-    completed = 0
-    decoded_tokens = 0
-    t0 = time.perf_counter()
-    round_no = 0
-    while completed < n_sessions:
-        round_no += 1
-        # arrivals into the request-queue tier (+ any overflow retries)
-        fresh = list(range(next_sid, min(next_sid + arrival, n_sessions + 1)))
-        next_sid = next_sid + len(fresh)
-        waiting = tier.submit(waiting + fresh)
+    def serve_batch(sids: List[int]) -> None:
+        """Prefill + decode one admitted batch (or a tier-only no-op)."""
+        if args.tier_only or not sids:
+            return
+        import jax
+        import jax.numpy as jnp
 
-        admitted = tier.admit(args.batch)
-        if not admitted:
-            continue
-        # prefill a fixed [batch, prompt_len] block; idle rows repeat row 0
-        sids = [sid for sid, _ in admitted]
         rows = sids + [sids[0]] * (args.batch - len(sids))
         prompts = jnp.asarray(
             np.stack([
@@ -318,18 +571,103 @@ def main():
             out, cache = serve_step(params, cache, {"tokens": tok})
             tok = out["next_token"][:, None].astype(jnp.int32)
         jax.block_until_ready(tok)
-        decoded_tokens += args.gen * len(sids)
-        completed += len(sids)
-        # sessions finished: their decode slots go back through the fabric
-        tier.submit([], release_slots=[slot for _, slot in admitted])
+
+    waiting: List[int] = []
+    next_idx = 0
+    decoded_tokens = 0
+    t0 = time.perf_counter()
+    round_no = 0
+    try:
+        # tier construction / recovery runs under the same crash handler:
+        # the fault injector ticks through the slot-pool seeding and the
+        # resume-time reconciliation phases too, so ANY --crash-at value
+        # exits the demo gracefully
+        if args.resume:
+            tier, info = RequestQueueTier.recover(fs, **tier_kw)
+            served_set = set(served_before)
+            in_flight = [s for s in info["in_flight"] if s not in served_set]
+            queued = set(info["queued"])
+            to_submit = [
+                s for s in range(1, n_sessions + 1)
+                if s not in served_set and s not in queued
+                and s not in in_flight
+            ]
+            # rebuild the slot pool: total slots minus those still free minus
+            # the ones in-flight sessions hold (released after service)
+            missing = args.batch - len(info["pool"]) - len(in_flight)
+            if missing > 0:
+                free_ids = [
+                    i for i in range(args.batch) if i not in set(info["pool"])
+                ][:missing]
+                tier.submit([], release_slots=free_ids)
+            print(
+                f"resume: served={len(served_set)} queued={len(queued)} "
+                f"in_flight={in_flight} lost_arrivals={info['lost_arrivals']} "
+                f"resubmitting={len(to_submit)}"
+            )
+            pending_sids = to_submit
+            completed = len(served_set)
+        else:
+            tier = RequestQueueTier(
+                slots=args.batch, durable=args.durable, fs=fs, **tier_kw
+            )
+            pending_sids = list(range(1, n_sessions + 1))
+            completed = 0
+        # resumed in-flight admissions go first: their dequeue committed
+        # before the crash, so they must be served (once) without re-queueing
+        if in_flight:
+            pool = tier.pool_slots()
+            slot_src = [i for i in range(args.batch) if i not in set(pool)]
+            # the reconciliation above rebuilt the pool to batch - in_flight
+            # slots, so the complement always covers the in-flight sessions;
+            # fabricating extra ids here would duplicate slots in the pool
+            assert len(slot_src) >= len(in_flight), (slot_src, in_flight)
+            pairs = list(zip(in_flight, slot_src))
+            serve_batch([sid for sid, _ in pairs])
+            decoded_tokens += 0 if args.tier_only else args.gen * len(pairs)
+            for sid, slot in pairs:
+                _log_served(state_dir, sid)
+                completed += 1
+            tier.submit([], release_slots=[slot for _, slot in pairs])
+        while completed < n_sessions:
+            round_no += 1
+            fresh = pending_sids[next_idx : next_idx + arrival]
+            next_idx += len(fresh)
+            prio = None
+            if args.priority and args.high_every:
+                prio = [1 if s % args.high_every == 0 else 0 for s in waiting + fresh]
+            waiting = tier.submit(waiting + fresh, priorities=prio)
+
+            admitted = tier.admit(args.batch)
+            if not admitted:
+                if not fresh and not waiting and tier.backlog() == 0:
+                    break  # nothing left anywhere (lost-session guard)
+                continue
+            sids = [sid for sid, _ in admitted]
+            serve_batch(sids)
+            decoded_tokens += 0 if args.tier_only else args.gen * len(sids)
+            for sid in sids:
+                _log_served(state_dir, sid)
+            completed += len(sids)
+            # sessions finished: their decode slots go back through the fabric
+            tier.submit([], release_slots=[slot for _, slot in admitted])
+    except CrashNow as e:
+        print(f"CRASHED: {e}")
+        print(
+            f"tier state is durable under {state_dir}; resume with "
+            f"--resume --state-dir {state_dir}"
+        )
+        return
     dt = time.perf_counter() - t0
 
     print(
         f"{args.arch}: served {completed} sessions in {round_no} rounds, "
-        f"{decoded_tokens} tok in {dt*1e3:.0f} ms ({decoded_tokens/dt:.0f} tok/s)"
+        f"{decoded_tokens} tok in {dt*1e3:.0f} ms"
+        + ("" if args.tier_only or dt == 0 else f" ({decoded_tokens/dt:.0f} tok/s)")
     )
     print(
-        f"request tier: queues={args.queues} (+1 slot-pool stack shard) "
+        f"request tier: queues={tier.n_queues} (+1 slot-pool stack shard) "
+        f"priority={args.priority} depth={tier.rt.depth} "
         f"arrived={tier.stats['arrived']} admitted={tier.stats['admitted']} "
         f"rejected={tier.stats['rejected']} splits={tier.stats['splits']} "
         f"backlog={tier.backlog()}"
@@ -337,6 +675,13 @@ def main():
     p = tier.persistence_stats()
     if p:
         print(f"pwb/op: {p['pwb_per_op']:.2f}  pfence/op: {p['pfence_per_op']:.2f}")
+    if args.expect_exactly_once:
+        served = _read_served(state_dir)
+        expect = sorted(range(1, n_sessions + 1))
+        assert sorted(served) == expect and len(served) == len(set(served)), (
+            f"exactly-once violated: served={sorted(served)} expected={expect}"
+        )
+        print(f"exactly-once OK: {n_sessions} sessions, none lost, none duplicated")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
+from repro.runtime.announce_driver import MultiThreadDriver
 from repro.runtime.dfc_shard import (
     R_OVERFLOW,
     OpVerdict,
     ShardedDFCRuntime,
+    StaleTokenError,
     hetero_multi_step,
     hetero_step,
     route_batch,
@@ -16,9 +18,11 @@ from repro.runtime.dfc_shard import (
 from repro.runtime.train_loop import TrainRuntime
 
 __all__ = [
+    "MultiThreadDriver",
     "R_OVERFLOW",
     "OpVerdict",
     "ShardedDFCRuntime",
+    "StaleTokenError",
     "TrainRuntime",
     "hetero_multi_step",
     "hetero_step",

@@ -79,14 +79,22 @@ the combiner's durable writes with the collection of the next batch):
     payload in a preallocated jnp ring (``repro.core.jax_dfc.AnnounceRing``)
     so combining phases consume device arrays directly; SimFS keeps only the
     compact durable mirror recovery needs, off the hot path,
-  * two-stage pipelining (``pipeline=True``) — ``combine_phase`` DISPATCHES
-    the device combine for chain k+1 (stage 1), then retires chain k
-    (persist + pfence + per-shard epoch commits, stage 2) while the device
-    works; ``flush`` retires the final chain.  The two-increment commit
-    still gates visibility: an in-flight chain that never retires is
-    reported not-applied by ``recover`` (which also resolves a thread's
-    OLDER announcement slot — the predecessor batch k whose successor k+1
-    was already announced — and ``replay_pending`` replays it first),
+  * depth-D pipelining (``depth=D``; the legacy ``pipeline=True`` flag is
+    ``depth=2``, ISSUE 5 generalizes the ISSUE-4 two-stage special case) —
+    ``combine_phase`` DISPATCHES the device combine for the newly collected
+    chain (stage 1), then retires the OLDEST dispatched chains — persist +
+    pfence + per-shard epoch commits, strictly in commit order — until at
+    most D-1 remain in flight (stage 2) while the device works; ``flush``
+    retires the rest.  Every in-flight chain carries its own per-batch
+    epochs, and a thread's double-buffered announcement records bound it to
+    two outstanding batches: ``announce`` force-retires chains (still in
+    commit order) before reclaiming a slot whose batch is un-retired, so
+    deep pipelines keep serial-identical pwb/pfence counts.  The
+    two-increment commit still gates visibility: an in-flight chain that
+    never retires is reported not-applied by ``recover`` (which also
+    resolves a thread's OLDER announcement slot — the predecessor batch k
+    whose successor k+1 was already announced — and ``replay_pending``
+    replays it first),
   * multi-batch chaining (``chain=N``) — up to N ready batches combine in
     ONE fused dispatch (``dfc_sharded_multi_combine_step``: a ``lax.scan``
     over the batch axis, vmap or Pallas grid per kind) but persist and
@@ -131,6 +139,7 @@ from repro.core.jax_dfc import (
     init_sharded,
     ring_announce,
     ring_drain,
+    ring_has_room,
     shard_slice,
     stack_shards,
     state_from_contents,
@@ -144,6 +153,16 @@ from repro.kernels.dfc_reduce.ops import (
 # runtime-level response kind: op rejected because its shard's announcement
 # lanes were full this phase — never applied, safe to re-announce.
 R_OVERFLOW = 4
+
+
+class StaleTokenError(LookupError):
+    """``read_responses(thread, token)`` named a batch whose durable response
+    record no longer exists: the double-buffered announcement slots retain
+    only a thread's last two batches, and ``token`` predates both.  Distinct
+    from the ``None`` return (batch announced but not yet retired) so a
+    caller polling an overwritten token fails loudly instead of spinning —
+    read a batch's responses before announcing two successors, or keep your
+    own copy."""
 
 _HASH_MULT = 2654435761  # Knuth multiplicative hashing constant
 
@@ -367,10 +386,12 @@ def hetero_step(
     return new_groups, new_meta, responses, out_kinds
 
 
-@functools.partial(jax.jit, static_argnames=("kinds", "lanes", "backend"))
+@functools.partial(
+    jax.jit, static_argnames=("kinds", "lanes", "backend", "unroll")
+)
 def hetero_multi_step(
     groups, table, keys, ops, params, meta, *, kinds: Tuple[str, ...],
-    lanes: int, backend: str = "jnp",
+    lanes: int, backend: str = "jnp", unroll: int = 1,
 ):
     """Route + combine a CHAIN of flat batches over a heterogeneous fabric in
     ONE dispatch (the pipelined durable path's combine stage).
@@ -381,6 +402,9 @@ def hetero_multi_step(
     chained through ``dfc_sharded_multi_combine_step`` per kind group: batch
     b+1 combines on top of batch b's post-combine state, exactly as B
     separate ``hetero_step`` calls would, but the chain costs one dispatch.
+    All-``OP_NONE`` batches (chain padding) pass through untouched, and
+    ``unroll`` (static; the caller passes its pipeline depth) unrolls the
+    underlying scan that many batches per step.
 
     Returns ``(new_groups, new_meta, responses [B, L], out_kinds [B, L],
     states, epochs_before i32[S], epochs i32[B, S], phases_cum i32[B, S],
@@ -407,7 +431,7 @@ def hetero_multi_step(
         k: shard_params[:, jnp.asarray(ids)] for k, ids in gids.items()
     }
     multi = dfc_hetero_multi_combine_step(
-        groups, group_ops, group_params, backend=backend
+        groups, group_ops, group_params, backend=backend, unroll=unroll
     )
 
     resp_mat = jnp.zeros((n_batches, n_shards, lanes), jnp.float32)
@@ -549,6 +573,7 @@ class ShardedDFCRuntime:
         n_buckets: Optional[int] = None,
         table=None,
         pipeline: bool = False,
+        depth: Optional[int] = None,
         chain: int = 1,
         ring_slots: int = 2048,
     ):
@@ -579,15 +604,35 @@ class ShardedDFCRuntime:
             raise ValueError("table must have n_buckets entries")
         self.r_epoch = 0  # routing epoch (even at rest)
         self._reshard_seq = 0
-        # --- pipelined durable path (ISSUE 4): device-side announcement ring,
-        # in-flight chain register, and dirty-leaf persist elision
-        self.pipeline = bool(pipeline)
+        # --- pipelined durable path (ISSUE 4/5): device-side announcement
+        # ring, a depth-D ring of in-flight chains, dirty-leaf persist elision.
+        # ``depth`` is the pipeline depth: a combine_phase dispatches a fresh
+        # chain and keeps up to depth-1 dispatched chains UN-retired (their
+        # persists/commits deferred), so the device may be combining chain
+        # k+D-1 while chain k's durable writes drain.  depth=1 is the serial
+        # path; the legacy ``pipeline=True`` flag is depth=2 (the ISSUE-4
+        # two-stage special case, now just a depth setting).
+        if depth is None:
+            depth = 2 if pipeline else 1
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        self.depth = int(depth)
+        self.pipeline = self.depth > 1
         self.chain = max(1, int(chain))
         self.ring = init_announce_ring(ring_slots) if fs is not None else None
         self._ring_tail = 0  # host mirror of the ring's absolute tail
         self._ring_spans: Dict[int, Tuple[int, int]] = {}  # thread -> (start, n)
         self._live: Dict[int, Dict[str, Any]] = {}  # thread -> announcement rec
-        self._inflight: Optional[Dict[str, Any]] = None  # dispatched, unretired
+        # host mirror of each announcement slot's token — what the depth
+        # guard in ``announce`` consults, so the hot path never re-reads the
+        # durable record it is about to overwrite
+        self._slot_tokens: Dict[Tuple[int, int], int] = {}
+        # dispatched-but-unretired chains, oldest first (retire = commit order)
+        self._inflight: List[Dict[str, Any]] = []
+        # (thread, token) groups of the most recent dispatch, one tuple per
+        # chained batch — the linearization witness drivers/oracles replay
+        # (announcements grouped into one batch combine as ONE phase)
+        self.last_dispatch: List[Tuple[Tuple[int, int], ...]] = []
         self._elide: Dict[str, bytes] = {}  # rel path -> durable leaf digest
         self._elide_pending: Dict[str, bytes] = {}
         if state is None:
@@ -704,9 +749,20 @@ class ShardedDFCRuntime:
         recovery uses token order to tell an in-flight PREDECESSOR in the
         older announcement slot (pipelined path) from an unpublished
         successor whose announce crashed before the valid flip.
+
+        Depth guard: the double-buffered records bound a thread to TWO
+        outstanding batches.  At depth > 2 the slot this announcement reuses
+        may still belong to a dispatched-but-unretired chain; retiring chains
+        in commit order until that batch's responses are durable keeps the
+        protocol identical to the serial schedule (same pwbs/pfences, merely
+        re-timed), so deep pipelines never clobber an un-persisted response.
         """
         valid = self._read_valid(thread)
         n_op = 1 - (valid & 1)
+        if self._inflight:
+            old_tok = self._slot_tokens.get((thread, n_op), -1)
+            while old_tok >= 0 and self._chain_holding(thread, old_tok) is not None:
+                self._retire(self._inflight.pop(0))
         ann = {
             "token": token,
             "keys": [int(k) for k in np.asarray(keys)],
@@ -738,7 +794,7 @@ class ShardedDFCRuntime:
             slots = int(self.ring.keys.shape[0])
             spans = [v for t, v in self._ring_spans.items() if t != thread]
             oldest = min((s0 for s0, _ in spans), default=self._ring_tail)
-            if n <= slots and (self._ring_tail + n) - oldest <= slots:
+            if ring_has_room(slots, self._ring_tail, oldest, n):
                 self.ring = ring_announce(
                     self.ring,
                     jnp.asarray(keys.astype(np.int32)),
@@ -755,6 +811,7 @@ class ShardedDFCRuntime:
             "keys": keys, "ops": ops, "params": params, "ring_start": start,
         }
         self._live[thread] = rec
+        self._slot_tokens[(thread, int(slot))] = int(token)
         return rec
 
     def ready_announcements(self) -> List[int]:
@@ -854,12 +911,21 @@ class ShardedDFCRuntime:
         }
 
     # --------------------------------------------------------- combine phase
+    def _chain_holding(self, thread: int, token: int) -> Optional[Dict[str, Any]]:
+        """The in-flight chain that dispatched (thread, token), if any."""
+        for fl in self._inflight:
+            for info in fl["batches"]:
+                for seg in info["threads"]:
+                    if seg["thread"] == thread and seg["token"] == token:
+                        return fl
+        return None
+
     def _collect_ready(self) -> List[Tuple[int, Dict[str, Any]]]:
         """Ready announcements as (thread, live-record) pairs, in thread
         order, excluding batches already dispatched into the pipeline."""
         inflight = set()
-        if self._inflight is not None:
-            for info in self._inflight["batches"]:
+        for fl in self._inflight:
+            for info in fl["batches"]:
                 for seg in info["threads"]:
                     inflight.add((seg["thread"], seg["token"]))
         out = []
@@ -901,20 +967,27 @@ class ShardedDFCRuntime:
         each touched shard's epoch with the two-increment protocol (lines
         81-83).  Returns the combined thread ids.
 
-        Pipelined mode (``pipeline=True``): stage 1 DISPATCHES the device
-        combine for the freshly collected chain, stage 2 retires the
-        PREVIOUS chain (persist + pfence + epoch commits) while the device
-        works — persistence of batch k overlaps the combine of batch k+1.
-        The new chain's responses become durable only when it is itself
-        retired (the next ``combine_phase`` or an explicit ``flush``); the
-        two-increment epoch commit still gates visibility, so recovery
-        semantics are unchanged.
+        Pipelined mode (``depth > 1``; the legacy ``pipeline=True`` is
+        depth=2): stage 1 DISPATCHES the device combine for the freshly
+        collected chain and appends it to the in-flight ring; stage 2
+        retires the OLDEST chains — persist + pfence + per-shard epoch
+        commits, strictly in commit order — until at most ``depth - 1``
+        dispatched chains remain un-retired, so persistence of chain k
+        overlaps the device combine of chains k+1..k+depth-1.  A chain's
+        responses become durable only when it retires (a later
+        ``combine_phase``, an ``announce`` reclaiming its slot, or an
+        explicit ``flush``); the two-increment epoch commit still gates
+        visibility, so recovery semantics are unchanged at every depth.
 
         With ``chain > 1``, each ready thread's announcement becomes its own
-        batch (the tail group absorbs the remainder) and the whole chain is
-        combined in ONE fused dispatch (``dfc_sharded_multi_combine_step``)
-        but persisted and committed batch-by-batch, exactly like that many
-        serial phases.
+        batch (the tail group absorbs the remainder; the chain is PADDED to
+        exactly ``chain`` batches with all-``OP_NONE`` pass-through batches,
+        so every dispatch of the fabric shares one compiled program per lane
+        width however many announcers were ready) and the whole chain is
+        combined in ONE fused dispatch (``dfc_sharded_multi_combine_step``,
+        scan unrolled by ``depth``) but persisted and committed
+        batch-by-batch, exactly like that many serial phases — padding
+        batches touch no shard and cost no persistence op.
         """
         assert self.fs is not None, "combine_phase needs a SimFS"
         ready = self._collect_ready()
@@ -922,11 +995,14 @@ class ShardedDFCRuntime:
             self.flush()
             return []
 
-        if self.chain > 1 and len(ready) > 1:
+        if self.chain > 1:
             groups = [[r] for r in ready[: self.chain - 1]]
             tail = list(ready[self.chain - 1:])
             if tail:  # fewer ready than chain: no (empty) tail batch
                 groups.append(tail)
+            # depth-aware dispatch: pad to the chain's full batch count with
+            # pass-through batches so the compiled scan shape is fixed
+            groups += [[] for _ in range(self.chain - len(groups))]
         else:
             groups = [ready]
 
@@ -954,12 +1030,14 @@ class ShardedDFCRuntime:
             dev_keys.append(jnp.concatenate(karrs))
             dev_ops.append(jnp.concatenate(oarrs))
             dev_params.append(jnp.concatenate(parrs))
-            host_keys = np.concatenate([rec["keys"] for _, rec in g])
+            host_keys = (
+                np.concatenate([rec["keys"] for _, rec in g])
+                if g else np.zeros((0,), np.int64)
+            )
             batches.append(
                 {"threads": segs, "shard": self.route_host(host_keys)}
             )
 
-        prev, self._inflight = self._inflight, None
         # stage 1: dispatch the chained device combine (async under jit)
         (
             self.groups, self.meta, resp, out_kinds,
@@ -974,20 +1052,23 @@ class ShardedDFCRuntime:
             kinds=tuple(self.kinds),
             lanes=self.lanes,
             backend=self.backend,
+            unroll=self.depth,
         )
-        fl = {
+        self._inflight.append({
             "batches": batches, "resp": resp, "kinds": out_kinds,
             "states": states, "epochs_before": epochs_before,
             "epochs": epochs, "phases_cum": phases_cum, "ops_cum": ops_cum,
             "repoch": self.r_epoch,
-        }
-        # stage 2: retire the predecessor while the device combines stage 1
-        if prev is not None:
-            self._retire(prev)
-        if self.pipeline:
-            self._inflight = fl
-        else:
-            self._retire(fl)
+        })
+        self.last_dispatch = [
+            tuple((seg["thread"], seg["token"]) for seg in info["threads"])
+            for info in batches
+            if info["threads"]
+        ]
+        # stage 2: retire the oldest chains, in commit order, while the
+        # device combines — keep at most depth-1 chains in flight
+        while len(self._inflight) > self.depth - 1:
+            self._retire(self._inflight.pop(0))
         return [seg["thread"] for info in batches for seg in info["threads"]]
 
     def _retire(self, fl: Dict[str, Any]) -> List[int]:
@@ -1015,6 +1096,8 @@ class ShardedDFCRuntime:
         for b, info in enumerate(fl["batches"]):
             e_b = epochs[b]
             touched = [int(s) for s in np.nonzero(e_b != prev_epochs)[0]]
+            if not info["threads"] and not touched:
+                continue  # chain-padding pass-through: no durable work
             files: List[str] = []
             for s in touched:
                 files += self._persist_shard(
@@ -1050,13 +1133,14 @@ class ShardedDFCRuntime:
         return retired
 
     def flush(self) -> List[int]:
-        """Retire the in-flight chain, if any (pipelined mode): persist its
-        shard states and responses and commit its epochs.  Returns the
-        thread ids whose announcements became durable."""
-        fl, self._inflight = self._inflight, None
-        if fl is None:
-            return []
-        return self._retire(fl)
+        """Retire every in-flight chain, oldest first (pipelined mode):
+        persist their shard states and responses and commit their epochs, in
+        commit order.  Returns the thread ids whose announcements became
+        durable."""
+        retired: List[int] = []
+        while self._inflight:
+            retired += self._retire(self._inflight.pop(0))
+        return retired
 
     def _drain(self) -> None:
         """Combine every ready announcement AND retire the pipeline — the
@@ -1075,6 +1159,11 @@ class ShardedDFCRuntime:
         BOTH announcement slots for that batch — in pipelined mode a
         thread's previous batch retires while its newest is still in flight,
         so the response being read usually lives in the older slot.
+
+        Raises :class:`StaleTokenError` when ``token`` predates both
+        retained slots (its record was overwritten by two later
+        announcements); returns ``None`` only while the batch is genuinely
+        pending (announced and not yet retired, or not yet announced).
         """
         v = self._read_valid(thread)
         if token is None:
@@ -1082,10 +1171,23 @@ class ShardedDFCRuntime:
             if ann.get("val") is BOT:
                 return None
             return dict(ann["val"], token=ann["token"])
+        held = []
         for slot in (v & 1, 1 - (v & 1)):
             ann = self._read_ann(thread, slot)
-            if ann.get("token", -1) == token and ann.get("val") is not BOT:
+            t = ann.get("token", -1)
+            if t == token:
+                if ann.get("val") is BOT:
+                    return None  # announced, not yet combined/retired
                 return dict(ann["val"], token=ann["token"])
+            if t >= 0:
+                held.append(t)
+        if held and token < min(held):
+            raise StaleTokenError(
+                f"thread {thread} token {token} predates both announcement "
+                f"slots (oldest retained: {min(held)}); its response record "
+                "was overwritten — read responses before announcing two "
+                "successor batches"
+            )
         return None
 
     # ----------------------------------------------------------- resharding
@@ -1257,6 +1359,7 @@ class ShardedDFCRuntime:
         n_buckets: Optional[int] = None,
         table=None,
         pipeline: bool = False,
+        depth: Optional[int] = None,
         chain: int = 1,
         ring_slots: int = 2048,
     ) -> Tuple["ShardedDFCRuntime", Dict[int, Dict[str, Any]]]:
@@ -1338,7 +1441,7 @@ class ShardedDFCRuntime:
             kinds, n_shards, capacity, lanes,
             backend=backend, fs=fs, n_threads=n_threads,
             n_buckets=n_buckets, table=table,
-            pipeline=pipeline, chain=chain, ring_slots=ring_slots,
+            pipeline=pipeline, depth=depth, chain=chain, ring_slots=ring_slots,
         )
         rt.r_epoch = repoch
 

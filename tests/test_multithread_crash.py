@@ -1,0 +1,232 @@
+"""Multi-thread announcing fabric under depth-D pipelining: crash harness.
+
+Covers the ISSUE-5 acceptance criteria: ``n_threads > 1`` announcers drive
+a depth-D fabric through the seeded ``MultiThreadDriver`` (replayable random
+announcer/combiner interleavings), a crash is injected at EVERY persistence
+op of the schedule, and recovery must produce per-thread detectability
+verdicts that are both SOUND (an op reported applied is durably in the
+fabric with its response) and COMPLETE (replaying the not-applied ops and
+re-driving the never-surfaced batches yields every announced value exactly
+once).  The grid n_threads x depth x structure runs under the ``slow``
+marker; tier-1 keeps full-sweep representatives of each mechanism.
+
+The driver's determinism is what makes the sweep meaningful: the same seed
+replays the same interleaving op-for-op, so crash point k in one run is the
+same protocol state as crash point k in any other.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint.dfc_checkpoint import CrashNow, FaultInjector, SimFS
+from repro.core.jax_dfc import OP_ENQ, OP_PUSH, OP_PUSHR
+from repro.runtime.announce_driver import MultiThreadDriver
+from repro.runtime.dfc_shard import ShardedDFCRuntime, StaleTokenError
+
+jax.config.update("jax_platform_name", "cpu")
+
+CAP, LANES = 256, 16
+PUSH_OF = {"stack": OP_PUSH, "queue": OP_ENQ, "deque": OP_PUSHR}
+
+
+def _submit_all(drv, kinds, n_rounds, per_thread, seed=11):
+    """Insert-only workload with globally unique params: every thread gets
+    ``n_rounds`` batches; multiset equality of the final contents IS the
+    exactly-once check."""
+    rng = np.random.default_rng(seed)
+    val = 1.0
+    for _ in range(n_rounds):
+        for t in range(drv.n_threads):
+            keys = [int(k) for k in rng.integers(0, 1000, per_thread)]
+            ops = [PUSH_OF[kinds[0]]] * per_thread
+            params = [val + i for i in range(per_thread)]
+            val += per_thread
+            drv.submit(t, keys, ops, params)
+    return val
+
+
+def _fabric_contents(rt):
+    return sorted(sum((rt.shard_contents(s) for s in range(rt.n_shards)), []))
+
+
+def _scenario(tmp, crash_at, kinds, *, n_threads, depth, seed=42,
+              n_rounds=2, per_thread=4):
+    """Drive the interleaved schedule with a crash at persistence op
+    ``crash_at``; return (fs, recovered rt, report, driver, op count)."""
+    inj = FaultInjector(crash_at=crash_at)
+    fs = SimFS(tmp, inj)
+    n_shards = len(kinds)
+    rt = ShardedDFCRuntime(
+        kinds, n_shards, CAP, LANES, fs=fs, n_threads=n_threads,
+        depth=depth, chain=min(2, n_threads),
+    )
+    drv = MultiThreadDriver(rt, seed=seed)
+    _submit_all(drv, kinds, n_rounds, per_thread)
+    try:
+        drv.run()
+    except CrashNow:
+        pass
+    rt2, report = ShardedDFCRuntime.recover(
+        fs.crash(), kind=kinds, n_shards=n_shards, capacity=CAP, lanes=LANES,
+        n_threads=n_threads, depth=depth, chain=min(2, n_threads),
+    )
+    return rt2, report, drv, inj.count
+
+
+def _verify_exactly_once(rt2, report, drv, *, seed=43):
+    """Soundness: every applied verdict's value is already durable, for both
+    announcement slots of every thread.  Completeness: replay the
+    not-applied ops, re-drive the never-surfaced batches through a fresh
+    seeded driver (tokens continue monotonically), and check the final
+    contents hold every submitted value exactly once."""
+    assert all(int(e) % 2 == 0 for e in rt2.shard_epochs())
+    contents = _fabric_contents(rt2)
+    assert len(contents) == len(set(contents)), "duplicated op after recovery"
+    for t in range(drv.n_threads):
+        r = report[t]
+        for rec in ([r] if r["token"] is not None else []) + (
+            [r["prev"]] if r.get("prev") else []
+        ):
+            _, _, params = drv.history[t][rec["token"]]
+            for i, v in enumerate(rec["ops"]):
+                if v.applied:
+                    assert params[i] in contents, (t, rec["token"], i)
+    rt2.replay_pending(report)
+    surf = {t: report[t]["token"] or 0 for t in range(drv.n_threads)}
+    drv2 = MultiThreadDriver(rt2, seed=seed, start_tokens=surf)
+    for t, token in drv.unsurfaced(report):
+        keys, ops, params = drv.history[t][token]
+        assert drv2.submit(t, keys, ops, params) == token
+    drv2.run()
+    expect = sorted(
+        p
+        for t in range(drv.n_threads)
+        for rec in drv.history[t].values()
+        for p in rec[2]
+    )
+    got = _fabric_contents(rt2)
+    assert got == expect, "lost or duplicated ops across the crash"
+
+
+def _sweep(tmp_path, kinds, *, n_threads, depth, step=1, seed=42):
+    rt_dry, report_dry, drv_dry, total = _scenario(
+        tmp_path / "dry", None, kinds, n_threads=n_threads, depth=depth,
+        seed=seed,
+    )
+    _verify_exactly_once(rt_dry, report_dry, drv_dry)
+    assert total > 40
+    for k in range(1, total + 1, step):
+        rt2, report, drv, _ = _scenario(
+            tmp_path / f"k{k}", k, kinds, n_threads=n_threads, depth=depth,
+            seed=seed,
+        )
+        _verify_exactly_once(rt2, report, drv)
+
+
+# ----------------------------------------------------------- tier-1 sweeps
+def test_multithread_depth2_crash_sweep(tmp_path):
+    """Acceptance representative: 2 announcers, depth 2, queue fabric —
+    every persistence op of the interleaved schedule is a safe crash
+    point."""
+    _sweep(tmp_path, ["queue", "queue"], n_threads=2, depth=2)
+
+
+def test_multithread_depth3_crash_sweep(tmp_path):
+    """Acceptance representative: 2 announcers, depth 3 (two chains held in
+    flight; ``announce`` force-retires on slot reclaim), stack fabric."""
+    _sweep(tmp_path, ["stack", "stack"], n_threads=2, depth=3)
+
+
+def test_driver_interleaving_is_replayable(tmp_path):
+    """Identical seed + submissions -> identical action trace, dispatch
+    order, and persistence-op count: the property the crash sweep rests
+    on."""
+    runs = []
+    for i in range(2):
+        fs = SimFS(tmp_path / f"r{i}")
+        rt = ShardedDFCRuntime(
+            ["queue", "deque"], 2, CAP, LANES, fs=fs, n_threads=3, depth=3,
+        )
+        drv = MultiThreadDriver(rt, seed=7)
+        _submit_all(drv, ["queue"], 2, 3)
+        drv.run()
+        runs.append((drv.trace, drv.dispatch_order, fs.stats["pwb"],
+                     fs.stats["pfence"], _fabric_contents(rt)))
+    assert runs[0] == runs[1]
+
+
+def test_depth3_holds_two_chains_in_flight(tmp_path):
+    """Directed: with 4 announcing threads at depth 3, combine_phase leaves
+    up to two dispatched chains un-retired; responses become durable only on
+    retire, and announce() reclaiming a slot force-retires in commit
+    order."""
+    fs = SimFS(tmp_path)
+    rt = ShardedDFCRuntime(
+        ["queue"], 1, CAP, LANES, fs=fs, n_threads=4, depth=3,
+    )
+    for t in range(4):
+        rt.announce(t, [t], [OP_ENQ], [float(t + 1)], token=1)
+    rt.combine_phase()  # chain A dispatched, in flight
+    assert len(rt._inflight) == 1
+    assert rt.read_responses(0, token=1) is None  # not yet durable
+    for t in range(4):
+        rt.announce(t, [t], [OP_ENQ], [float(t + 5)], token=2)
+    rt.combine_phase()  # chain B dispatched; A still in flight (depth 3)
+    assert len(rt._inflight) == 2
+    assert rt.read_responses(0, token=1) is None
+    # announcing token 3 reclaims token 1's slot: chain A force-retires (its
+    # responses go durable BEFORE the slot is reused), and the record is then
+    # overwritten — reading it now is a loud StaleTokenError, not a stale hit
+    rt.announce(0, [0], [OP_ENQ], [9.0], token=3)
+    assert len(rt._inflight) == 1  # chain A retired, chain B still in flight
+    with pytest.raises(StaleTokenError):
+        rt.read_responses(0, token=1)
+    rt.combine_phase()
+    rt.flush()
+    assert rt.read_responses(0, token=2) is not None  # retired, durable
+    assert rt.read_responses(0, token=3) is not None
+    assert _fabric_contents(rt) == sorted(
+        [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]
+    )
+
+
+def test_per_thread_verdicts_name_the_right_ops(tmp_path):
+    """Per-thread detectability: crash between two chained commits — each
+    thread's report must mark exactly its own committed ops applied, with
+    the responses the oracle assigns to THAT thread's batch."""
+    fs = SimFS(tmp_path)
+    rt = ShardedDFCRuntime(
+        ["queue"], 1, CAP, LANES, fs=fs, n_threads=2, depth=2, chain=2,
+    )
+    rt.announce(0, [1, 2], [OP_ENQ] * 2, [1.0, 2.0], token=1)
+    rt.announce(1, [3], [OP_ENQ], [3.0], token=1)
+    rt.combine_phase()  # one chained dispatch, two per-thread batches
+    # crash before retire: both threads' batches in flight
+    rt2, report = ShardedDFCRuntime.recover(
+        fs.crash(), kind=["queue"], n_shards=1, capacity=CAP, lanes=LANES,
+        n_threads=2, depth=2, chain=2,
+    )
+    for t in (0, 1):
+        assert report[t]["token"] == 1
+        assert all(not v.applied for v in report[t]["ops"])
+    assert sorted(rt2.replay_pending(report)) == [0, 1]
+    assert _fabric_contents(rt2) == [1.0, 2.0, 3.0]
+    for t, n_ops in ((0, 2), (1, 1)):
+        val = rt2.read_responses(t, token=1)
+        assert val is not None and len(val["kinds"]) == n_ops
+
+
+# ------------------------------------------------------------- slow grid
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["stack", "queue", "deque"])
+@pytest.mark.parametrize("depth", [2, 3])
+@pytest.mark.parametrize("n_threads", [2, 4])
+def test_multithread_crash_sweep_grid(tmp_path, kind, depth, n_threads):
+    """Full ISSUE-5 grid: crash at EVERY persistence op for n_threads in
+    {2,4} x depth in {2,3} x every structure kind."""
+    _sweep(
+        tmp_path, [kind, kind], n_threads=n_threads, depth=depth,
+        seed=13 * depth + n_threads,
+    )

@@ -22,6 +22,7 @@ from repro.checkpoint.dfc_checkpoint import CrashNow, FaultInjector, SimFS
 from repro.core.jax_dfc import OP_ENQ, OP_PUSH, OP_PUSHR, R_VALUE
 from repro.runtime.dfc_shard import (
     ShardedDFCRuntime,
+    StaleTokenError,
     sequential_hetero_reference,
 )
 
@@ -271,6 +272,35 @@ def test_chain_larger_than_ready_set(tmp_path):
         t = 1 if tok == 2 else 0
         val = rt.read_responses(t, token=tok)
         assert val is not None and len(val["kinds"]) == kinds
+
+
+def test_read_responses_stale_token_raises(tmp_path):
+    """Regression (ISSUE 5): a token that predates BOTH announcement slots
+    must raise a clear ``StaleTokenError`` — previously the lookup fell
+    through to ``None``, indistinguishable from a batch still in flight, so
+    a caller polling an overwritten token would spin forever."""
+    fs = SimFS(tmp_path)
+    rt = ShardedDFCRuntime(["queue"], 1, CAP, LANES, fs=fs, n_threads=1)
+    for tok in (1, 2, 3):
+        rt.announce(0, [1], [OP_ENQ], [float(tok)], token=tok)
+        rt.combine_phase()
+    # slots now hold tokens 2 (older) and 3 (newest): both readable
+    assert rt.read_responses(0, token=2) is not None
+    assert rt.read_responses(0, token=3) is not None
+    with pytest.raises(StaleTokenError):
+        rt.read_responses(0, token=1)
+    # a FUTURE token is pending, not stale: still None, no exception
+    assert rt.read_responses(0, token=99) is None
+    # an announced-but-unretired batch is pending too (pipelined runtime)
+    fs2 = SimFS(tmp_path / "p")
+    rt2 = ShardedDFCRuntime(
+        ["queue"], 1, CAP, LANES, fs=fs2, n_threads=1, depth=2
+    )
+    rt2.announce(0, [1], [OP_ENQ], [1.0], token=1)
+    rt2.combine_phase()  # dispatched, in flight
+    assert rt2.read_responses(0, token=1) is None
+    rt2.flush()
+    assert rt2.read_responses(0, token=1) is not None
 
 
 def test_request_queue_tier_rides_the_ring_path():

@@ -8,6 +8,13 @@ verdicts must match what the oracle says about each op (its response and
 response kind).  The schedule is replayed on all three combine backends
 (``jnp``, ``ref``, ``pallas``) and must agree bit-for-bit.
 
+ISSUE-5 additions: a strategy over SEEDED ANNOUNCER INTERLEAVINGS — random
+multi-thread schedules drawn as (scheduler seed, n_threads, depth), driven
+through ``MultiThreadDriver`` — differential against
+``sequential_hetero_reference`` applied in the driver's recorded dispatch
+order (crash-free, exact), and with random mid-pipeline crashes
+(exactly-once per routed shard), across the same three backends.
+
 Runs through ``tests/_compat.py``: with hypothesis installed these are real
 property tests; without it a deterministic seeded stand-in draws the same
 strategy surface.
@@ -24,9 +31,11 @@ from _compat import hypothesis, st
 
 from repro.checkpoint.dfc_checkpoint import CrashNow, FaultInjector, SimFS
 from repro.core.jax_dfc import R_NONE, STRUCTS
+from repro.runtime.announce_driver import MultiThreadDriver
 from repro.runtime.dfc_shard import (
     R_OVERFLOW,
     ShardedDFCRuntime,
+    StaleTokenError,
     route_keys_host,
     sequential_hetero_reference,
 )
@@ -185,9 +194,12 @@ def test_fuzz_pipeline_crash_free_differential(
             rt.combine_phase()
         rt.flush()
         for token, _, _, _ in phases:
-            val = rt.read_responses(0, token=token)
-            if val is None:
+            try:
+                val = rt.read_responses(0, token=token)
+            except StaleTokenError:
                 continue  # overwritten response slot (token <= last - 2)
+            if val is None:
+                continue  # still in flight at read time
             eresp, ekinds = per_token[token]
             assert val["kinds"] == list(ekinds), (backend, token)
             np.testing.assert_allclose(
@@ -197,3 +209,167 @@ def test_fuzz_pipeline_crash_free_differential(
             np.testing.assert_allclose(
                 rt.shard_contents(s), oracle_shards[s], rtol=1e-6
             )
+
+
+# ------------------------------------------------- seeded interleavings (ISSUE 5)
+def _mt_schedule(kinds, n_threads, n_rounds, batch, rng_draws, insert_only):
+    """Per-thread batch lists whose op codes are valid for each key's routed
+    structure (or insert-only with globally unique params)."""
+    lanes = batch * n_threads  # overflow impossible even fully chained
+    val = [1.0]
+
+    def one_batch():
+        keys = [rng_draws(0, 997) for _ in range(batch)]
+        shard = route_keys_host(np.asarray(keys), len(kinds))
+        if insert_only:
+            ins = {"stack": 1, "queue": 1, "deque": 3}
+            ops = [ins[kinds[s]] for s in shard]
+            params = [val[0] + i for i in range(batch)]
+            val[0] += batch
+        else:
+            ops = [
+                rng_draws(1, STRUCTS[kinds[s]].n_opcodes - 1) for s in shard
+            ]
+            params = [float(rng_draws(1, 10_000)) / 8.0 for _ in range(batch)]
+        return keys, ops, params
+
+    return [
+        [one_batch() for _ in range(n_rounds)] for _ in range(n_threads)
+    ], lanes
+
+
+def _drive_interleaved(kinds, per_thread, lanes, *, seed, depth, backend,
+                       crash_at, tmp):
+    """Submit every thread's batches, run the seeded scheduler; on a crash,
+    recover + replay + re-drive through a fresh driver (tokens continue).
+    Returns (rt, driver, dispatch_order or None-if-crashed)."""
+    inj = FaultInjector(crash_at=crash_at)
+    fs = SimFS(tmp, inj)
+    n_threads = len(per_thread)
+    rt = ShardedDFCRuntime(
+        kinds, len(kinds), CAP, lanes, fs=fs, n_threads=n_threads,
+        depth=depth, chain=min(2, n_threads), backend=backend,
+    )
+    drv = MultiThreadDriver(rt, seed=seed)
+    for t, batches in enumerate(per_thread):
+        for keys, ops, params in batches:
+            drv.submit(t, keys, ops, params)
+    try:
+        drv.run()
+        return rt, drv, list(drv.dispatch_order)
+    except CrashNow:
+        pass
+    rt2, report = ShardedDFCRuntime.recover(
+        fs.crash(), kind=kinds, n_shards=len(kinds), capacity=CAP,
+        lanes=lanes, n_threads=n_threads, depth=depth,
+        chain=min(2, n_threads), backend=backend,
+    )
+    rt2.replay_pending(report)
+    surf = {t: report[t]["token"] or 0 for t in range(n_threads)}
+    drv2 = MultiThreadDriver(rt2, seed=seed + 1, start_tokens=surf)
+    for t, token in drv.unsurfaced(report):
+        keys, ops, params = drv.history[t][token]
+        drv2.submit(t, keys, ops, params)
+    drv2.run()
+    return rt2, drv, None
+
+
+@hypothesis.settings(max_examples=6, deadline=None)
+@hypothesis.given(
+    st.integers(0, len(KIND_SETS) - 1),
+    st.integers(2, 3),  # n_threads
+    st.integers(2, 3),  # depth
+    st.integers(0, 2**20),  # scheduler seed
+    st.data(),
+)
+def test_fuzz_interleaved_multithread_differential(
+    kset, n_threads, depth, seed, data
+):
+    """Crash-free seeded interleavings, mixed ops: the final fabric equals
+    ``sequential_hetero_reference`` applied in the driver's recorded
+    dispatch order, per backend — and all backends agree on the same
+    interleaving (same seed replays the same dispatch order)."""
+    kinds = KIND_SETS[kset]
+    draws = lambda lo, hi: data.draw(st.integers(lo, hi))
+    per_thread, lanes = _mt_schedule(
+        kinds, n_threads, 2, 3, draws, insert_only=False
+    )
+    per_backend = {}
+    orders = []
+    for backend in ("jnp", "ref", "pallas"):
+        tmp = Path(tempfile.mkdtemp(prefix=f"dfc_mtfuzz_{backend}_"))
+        rt, drv, order = _drive_interleaved(
+            kinds, per_thread, lanes, seed=seed, depth=depth,
+            backend=backend, crash_at=None, tmp=tmp,
+        )
+        assert order is not None
+        orders.append(order)
+        per_backend[backend] = [
+            rt.shard_contents(s) for s in range(len(kinds))
+        ]
+        # oracle: each dispatched batch group combines as ONE phase over the
+        # members' concatenated lanes (segment order), groups in dispatch order
+        shards = [[] for _ in kinds]
+        for group in order:
+            keys, ops, params = [], [], []
+            for t, token in group:
+                k, o, p = drv.history[t][token]
+                keys += k
+                ops += o
+                params += p
+            sequential_hetero_reference(
+                kinds, shards, keys, ops, params, lanes
+            )
+        for s in range(len(kinds)):
+            np.testing.assert_allclose(
+                per_backend[backend][s], shards[s], rtol=1e-6,
+                err_msg=f"{backend} shard {s} diverged from dispatch-order oracle",
+            )
+    assert orders[0] == orders[1] == orders[2]  # backend-independent schedule
+    assert (
+        per_backend["jnp"] == per_backend["ref"] == per_backend["pallas"]
+    )
+
+
+@hypothesis.settings(max_examples=6, deadline=None)
+@hypothesis.given(
+    st.integers(0, len(KIND_SETS) - 1),
+    st.integers(2, 3),  # n_threads
+    st.integers(2, 3),  # depth
+    st.integers(1, 120),  # crash point
+    st.integers(0, 2**20),  # scheduler seed
+    st.data(),
+)
+def test_fuzz_interleaved_crash_exactly_once(
+    kset, n_threads, depth, crash_at, seed, data
+):
+    """Random thread schedules + random mid-pipeline crashes: after
+    recovery, replay, and re-drive, every announced value sits in exactly
+    the shard the router assigns it, exactly once — per backend, and the
+    backends agree (insert-only with unique params, so per-shard multiset
+    equality IS exactly-once under replay reordering)."""
+    kinds = KIND_SETS[kset]
+    draws = lambda lo, hi: data.draw(st.integers(lo, hi))
+    per_thread, lanes = _mt_schedule(
+        kinds, n_threads, 2, 3, draws, insert_only=True
+    )
+    # oracle: per-shard multiset from the host router (order-free for inserts)
+    expect = [[] for _ in kinds]
+    for batches in per_thread:
+        for keys, ops, params in batches:
+            for s, p in zip(route_keys_host(np.asarray(keys), len(kinds)), params):
+                expect[int(s)].append(p)
+    expect = [sorted(e) for e in expect]
+    per_backend = {}
+    for backend in ("jnp", "ref", "pallas"):
+        tmp = Path(tempfile.mkdtemp(prefix=f"dfc_mtcrash_{backend}_"))
+        rt, _, _ = _drive_interleaved(
+            kinds, per_thread, lanes, seed=seed, depth=depth,
+            backend=backend, crash_at=crash_at, tmp=tmp,
+        )
+        got = [sorted(rt.shard_contents(s)) for s in range(len(kinds))]
+        assert got == expect, f"{backend}: lost/duplicated/misrouted ops"
+        per_backend[backend] = got
+    assert (
+        per_backend["jnp"] == per_backend["ref"] == per_backend["pallas"]
+    )

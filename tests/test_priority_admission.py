@@ -1,0 +1,221 @@
+"""Priority admission at the serving tier (ISSUE 5).
+
+``RequestQueueTier(priority=True)`` runs its request shards as DEQUES:
+normal arrivals join the back of the line (``OP_PUSH_BACK``), admission
+drains the front (``OP_POP_FRONT``), and a high-priority session jumps the
+line with a front-of-queue push (``OP_PUSH_FRONT``).  The oracle here is a
+plain Python deque model; the tests check the tier against it — including
+across a crash/recover of the serving tier, where the priority ORDER must
+survive because it is fabric state, not launcher bookkeeping.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint.dfc_checkpoint import CrashNow, FaultInjector, SimFS
+from repro.launch.serve import RequestQueueTier
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _drain(tier, total, slots=4):
+    """Admit until the backlog empties, recycling slots; returns sid order."""
+    order = []
+    for _ in range(4 * total + 8):
+        admitted = tier.admit(slots)
+        order += [sid for sid, _ in admitted]
+        tier.submit([], release_slots=[slot for _, slot in admitted])
+        if len(order) >= total or tier.backlog() == 0:
+            break
+    return order
+
+
+def _oracle(arrivals):
+    """Python deque model: (sid, high) arrivals in submit order -> admit
+    order.  Highs push left (front), lows push right; admission pops left."""
+    from collections import deque
+
+    d = deque()
+    for sid, high in arrivals:
+        if high:
+            d.appendleft(sid)
+        else:
+            d.append(sid)
+    return list(d)
+
+
+def test_priority_oracle_front_of_queue():
+    """Single request shard: admitted order equals the deque oracle —
+    high-priority sessions dequeue ahead of the whole backlog, LIFO among
+    themselves, lows stay FIFO."""
+    arrivals = [(1, 0), (2, 0), (3, 1), (4, 0), (5, 1), (6, 0)]
+    tier = RequestQueueTier(
+        n_queues=1, slots=4, capacity=512, lanes=16, durable=True,
+        priority=True,
+    )
+    for sid, high in arrivals:
+        tier.submit([sid], priorities=[high])
+    got = _drain(tier, len(arrivals))
+    assert got == _oracle(arrivals) == [5, 3, 1, 2, 4, 6]
+
+
+def test_priority_batch_submit_matches_oracle():
+    """Mixed-priority batch submits linearize like per-phase oracle steps
+    (within one phase: front pushes land LIFO, back pushes FIFO)."""
+    tier = RequestQueueTier(
+        n_queues=1, slots=8, capacity=512, lanes=16, durable=True,
+        priority=True,
+    )
+    tier.submit([1, 2, 3, 4], priorities=[0, 1, 0, 1])
+    got = _drain(tier, 4, slots=8)
+    assert got == _oracle([(1, 0), (2, 1), (3, 0), (4, 1)]) == [4, 2, 1, 3]
+
+
+def test_fifo_tier_rejects_priorities():
+    tier = RequestQueueTier(n_queues=1, slots=2, capacity=256, lanes=8)
+    with pytest.raises(ValueError):
+        tier.submit([1], priorities=[1])
+
+
+def test_priority_multi_shard_front_of_line_per_shard():
+    """With several request shards, priority is front-of-THEIR-queue: in the
+    admitted order, no high-priority session follows a low of the SAME
+    shard that arrived before it."""
+    tier = RequestQueueTier(
+        n_queues=3, slots=4, capacity=512, lanes=16, durable=True,
+        priority=True,
+    )
+    lows = [1, 2, 3, 4, 5, 6]
+    highs = [7, 8, 9]
+    tier.submit(lows)
+    tier.submit(highs, priorities=[1] * len(highs))
+    shard_of = {
+        sid: int(tier.rt.route_host([tier.session_key(sid)])[0])
+        for sid in lows + highs
+    }
+    got = _drain(tier, len(lows) + len(highs))
+    assert sorted(got) == sorted(lows + highs)
+    for s in set(shard_of.values()):
+        per_shard = [sid for sid in got if shard_of[sid] == s]
+        shard_highs = [sid for sid in per_shard if sid in highs]
+        shard_lows = [sid for sid in per_shard if sid in lows]
+        if shard_highs and shard_lows:
+            last_high = max(per_shard.index(h) for h in shard_highs)
+            first_low = min(per_shard.index(l) for l in shard_lows)
+            assert last_high < first_low, (s, per_shard)
+
+
+def test_priority_survives_crash_recover():
+    """Priority order is fabric state: restart the tier from its durable
+    root mid-backlog and the high-priority sessions still dequeue first."""
+    arrivals = [(1, 0), (2, 0), (3, 0), (4, 1), (5, 1)]
+    tier = RequestQueueTier(
+        n_queues=1, slots=4, capacity=512, lanes=16, durable=True,
+        priority=True,
+    )
+    for sid, high in arrivals:
+        tier.submit([sid], priorities=[high])
+    fs = tier.rt.fs
+    tier2, info = RequestQueueTier.recover(
+        fs, n_queues=1, capacity=512, lanes=16, priority=True
+    )
+    assert info["queued"] == _oracle(arrivals) == [5, 4, 1, 2, 3]
+    assert info["in_flight"] == [] and info["lost_arrivals"] == []
+    assert sorted(info["pool"]) == [0, 1, 2, 3]
+    got = _drain(tier2, len(arrivals))
+    assert got == [5, 4, 1, 2, 3]
+
+
+def _simfs_tmp(crash_at=None):
+    import tempfile
+    from pathlib import Path
+
+    return SimFS(
+        Path(tempfile.mkdtemp(prefix="dfc_prio_")),
+        FaultInjector(crash_at=crash_at),
+    )
+
+
+LOWS, HIGHS = [1, 2, 3], [4, 5]
+
+
+def _drive_priority(fs, served):
+    """Submit lows then highs, drain with 2 slots; admitted sids append to
+    ``served`` IN PLACE as they are admitted (the launcher's served-log
+    analogue), so a crash mid-drain keeps the pre-crash record."""
+    tier = RequestQueueTier(
+        n_queues=1, slots=2, capacity=512, lanes=16, durable=True,
+        fs=fs, priority=True,
+    )
+    tier.submit(LOWS)
+    tier.submit(HIGHS, priorities=[1] * len(HIGHS))
+    for _ in range(32):
+        admitted = tier.admit(2)
+        served += [sid for sid, _ in admitted]
+        tier.submit([], release_slots=[slot for _, slot in admitted])
+        if tier.backlog() == 0:
+            break
+
+
+def _priority_crash_sweep(step):
+    """Crash at every ``step``-th persistence op of the priority schedule:
+    recover + launcher-style reconciliation must serve every session exactly
+    once with every high-priority session ahead of every low."""
+    dry_fs, dry_served = _simfs_tmp(), []
+    _drive_priority(dry_fs, dry_served)
+    assert dry_served == [5, 4, 1, 2, 3]
+    total = dry_fs.injector.count
+    assert total > 40
+    for k in range(1, total + 1, step):
+        fs = _simfs_tmp(crash_at=k)
+        served = []
+        try:
+            _drive_priority(fs, served)
+        except CrashNow:
+            pass
+        tier2, info = RequestQueueTier.recover(
+            fs.crash(), n_queues=1, capacity=512, lanes=16, priority=True
+        )
+        # launcher-style reconciliation (mirrors repro.launch.serve.main):
+        # in-flight dequeues count as served (deduped), lost enqueues are
+        # resubmitted with their original priority, the pool is rebuilt
+        served += [s for s in info["in_flight"] if s not in served]
+        accounted = set(served) | set(info["queued"])
+        missing = [s for s in LOWS + HIGHS if s not in accounted]
+        if missing:
+            tier2.submit(
+                missing, priorities=[int(s in HIGHS) for s in missing]
+            )
+        pool = tier2.pool_slots()
+        free = [i for i in range(2) if i not in set(pool)][: 2 - len(pool)]
+        if free:
+            tier2.submit([], release_slots=free)
+        for _ in range(32):
+            admitted = tier2.admit(2)
+            served += [sid for sid, _ in admitted if sid not in served]
+            tier2.submit([], release_slots=[slot for _, slot in admitted])
+            if tier2.backlog() == 0:
+                break
+        assert sorted(served) == sorted(LOWS + HIGHS), (k, served)
+        assert len(served) == len(set(served)), (k, served)
+        # front-of-queue invariant: lows are only ever admitted once no high
+        # is waiting — highs always sit in front of lows in the fabric, and
+        # the drain never starts before both submits, so every high precedes
+        # every low in the final admission order
+        assert max(served.index(h) for h in HIGHS) < min(
+            served.index(l) for l in LOWS
+        ), (k, served)
+
+
+def test_priority_crash_sweep_exactly_once_in_order():
+    """Tier-1 representative: strided sweep of the priority crash points."""
+    _priority_crash_sweep(step=5)
+
+
+@pytest.mark.slow
+def test_priority_crash_sweep_full():
+    """Full ISSUE-5 sweep: EVERY persistence op of the priority schedule is
+    a safe crash point for order + exactly-once."""
+    _priority_crash_sweep(step=1)
