@@ -1,0 +1,229 @@
+"""Fused K-phase dispatch vs depth-2 pipeline: device phases/s at matched
+pwb/pfence.
+
+The ISSUE-6 measurement.  The depth-2 pipeline dispatches ONE device
+combine per phase and must synchronize with the host between phases (the
+host announces phase k+1 only after fetching phase k's dispatch); the fused
+phase loop dispatches the WHOLE K-phase schedule once — route, combine, and
+per-phase persist-intent accumulation all inside a single ``lax.scan`` —
+and the host drains the intent log behind the device.
+
+Two quantities per config:
+
+- ``device_*_phases_per_s``: the device-side phase rate — time for the
+  fused K-phase ``hetero_phase_loop_step`` vs K single-phase dispatches of
+  the SAME step (each blocked on, as the per-phase host loop must).  This
+  is the quantity the tentpole optimizes and the >= 10x acceptance gate:
+  the durable drain is identical in both modes (identical pwb/pfence
+  counts, asserted below), so the end-to-end difference in the SimFS
+  simulator is bounded by its millisecond-scale *file* I/O standing in for
+  ~100 ns NVM pwb/pfence — the device rate is the honest apples-to-apples.
+- ``e2e_*_phases_per_s``: the full durable drive (announce + combine +
+  persist + respond) both ways, which is where the EXACT pwb and pfence
+  parity between the two modes is measured and enforced.
+
+Emits ``name,value,derived`` rows via ``emit``; script mode writes
+``BENCH_phase_loop.json`` at the repo root (see docs/benchmarks.md) and
+exits non-zero unless pwb/pfence counts match EXACTLY and the device-rate
+speedup clears 10x on every config.  ``--smoke`` is wired into CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.dfc_checkpoint import SimFS
+from repro.runtime.dfc_shard import ShardedDFCRuntime, hetero_phase_loop_step
+
+_ROOT = Path(__file__).resolve().parent.parent  # repo root, CWD-independent
+
+
+def _schedule(rounds, batch, universe=4096, seed=0):
+    """Flat single-thread phase schedule: one mixed insert/pop batch per
+    phase, tokens monotone."""
+    rng = np.random.default_rng(seed)
+    return [
+        (
+            0,
+            r + 1,
+            rng.integers(0, universe, batch),
+            rng.integers(1, 3, batch),
+            rng.random(batch).astype(np.float32),
+        )
+        for r in range(rounds)
+    ]
+
+
+def _drive_pipelined(rt, sched):
+    """The depth-2 baseline: announce + combine per phase, retirement
+    lagging one chain behind, final flush."""
+    for (t, tok, keys, ops, params) in sched:
+        rt.announce(t, keys, ops, params, token=tok)
+        rt.combine_phase()
+    rt.flush()
+
+
+def _device_rates(kind, n_shards, cap, batch, sched, reps):
+    """Pure device-path phase rates: fused K-phase dispatch vs K blocked
+    single-phase dispatches of the same jitted step, both shapes warmed."""
+    k_phases = len(sched)
+    fs = SimFS(Path(tempfile.mkdtemp(prefix="dfc_bench_phase_dev_")))
+    rt = ShardedDFCRuntime(
+        kind, n_shards, cap, batch, fs=fs, n_threads=1, depth=2,
+    )
+    keys = jnp.asarray(np.stack([s[2] for s in sched]), jnp.int32)
+    ops = jnp.asarray(np.stack([s[3] for s in sched]), jnp.int32)
+    params = jnp.asarray(np.stack([s[4] for s in sched]), jnp.float32)
+    table = jnp.asarray(rt.table)
+
+    def dispatch(groups, meta, lo, hi):
+        return hetero_phase_loop_step(
+            groups, table, keys[lo:hi], ops[lo:hi], params[lo:hi], meta,
+            kinds=tuple(rt.kinds), lanes=rt.lanes, backend=rt.backend,
+            unroll=rt.depth, donate=False,
+        )
+
+    jax.block_until_ready(dispatch(rt.groups, rt.meta, 0, k_phases))
+    jax.block_until_ready(dispatch(rt.groups, rt.meta, 0, 1))
+    best_f, best_p = float("inf"), float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(dispatch(rt.groups, rt.meta, 0, k_phases))
+        best_f = min(best_f, time.perf_counter() - t0)
+        groups, meta = rt.groups, rt.meta
+        t0 = time.perf_counter()
+        for k in range(k_phases):
+            out = dispatch(groups, meta, k, k + 1)
+            jax.block_until_ready(out)
+            groups, meta = out[0], out[1]
+        best_p = min(best_p, time.perf_counter() - t0)
+    shutil.rmtree(fs.root, ignore_errors=True)
+    return k_phases / best_f, k_phases / best_p
+
+
+def _one_config(kind, n_shards, batch, rounds, reps, results, emit):
+    cap = batch * (rounds + 2)
+    sched = _schedule(rounds, batch)
+    row = {
+        "kind": kind,
+        "n_shards": n_shards,
+        "batch": batch,
+        "phases": rounds,
+    }
+    # end-to-end durable drives, interleaved best-of (rep 0 compiles)
+    best = {"pipelined": (float("inf"), None), "fused": (float("inf"), None)}
+    root = Path(tempfile.mkdtemp(prefix="dfc_bench_phase_"))
+    try:
+        for rep in range(reps + 1):
+            for mode in ("pipelined", "fused"):
+                fs = SimFS(root / f"{mode}_r{rep}")
+                rt = ShardedDFCRuntime(
+                    kind, n_shards, cap, batch, fs=fs, n_threads=1, depth=2,
+                )
+                t0 = time.perf_counter()
+                if mode == "pipelined":
+                    _drive_pipelined(rt, sched)
+                else:
+                    rt.phase_loop(sched)
+                dt = time.perf_counter() - t0
+                if rep and dt < best[mode][0]:
+                    best[mode] = (dt, dict(fs.stats))
+                shutil.rmtree(root / f"{mode}_r{rep}", ignore_errors=True)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    for mode in ("pipelined", "fused"):
+        dt, stats = best[mode]
+        row[f"e2e_{mode}_phases_per_s"] = rounds / dt
+        row[f"{mode}_pwb"] = stats["pwb"]
+        row[f"{mode}_pfence"] = stats["pfence"]
+    dev_f, dev_p = _device_rates(kind, n_shards, cap, batch, sched, reps)
+    row["device_fused_phases_per_s"] = dev_f
+    row["device_pipelined_phases_per_s"] = dev_p
+    row["device_speedup"] = dev_f / dev_p
+    row["e2e_speedup"] = (
+        row["e2e_fused_phases_per_s"] / row["e2e_pipelined_phases_per_s"]
+    )
+    name = f"phase_loop_{kind}_s{n_shards}_k{rounds}_b{batch}"
+    emit(
+        name,
+        f"{dev_f:.0f}",
+        f"device_phases/s,per_phase={dev_p:.0f},"
+        f"device_speedup={row['device_speedup']:.1f},"
+        f"e2e_speedup={row['e2e_speedup']:.2f},"
+        f"pwb={row['fused_pwb']},pfence={row['fused_pfence']},"
+        f"parity={row['fused_pwb'] == row['pipelined_pwb'] and row['fused_pfence'] == row['pipelined_pfence']}",
+    )
+    results.append(row)
+
+
+def run(emit, smoke: bool = False):
+    results = []
+    if smoke:
+        grid = [("queue", 2), ("stack", 2)]
+        batch, rounds, reps = 8, 96, 3
+    else:
+        grid = [
+            (kind, s)
+            for kind in ("stack", "queue", "deque")
+            for s in (2, 4)
+        ]
+        batch, rounds, reps = 8, 128, 4
+    for kind, n_shards in grid:
+        _one_config(kind, n_shards, batch, rounds, reps, results, emit)
+    return results
+
+
+def check(rows):
+    """The ISSUE-6 acceptance gates; raises SystemExit on violation."""
+    unequal = [
+        (r["kind"], r["n_shards"])
+        for r in rows
+        if r["fused_pwb"] != r["pipelined_pwb"]
+        or r["fused_pfence"] != r["pipelined_pfence"]
+    ]
+    if unequal:
+        raise SystemExit(
+            f"pwb/pfence parity broken (fused != depth-2) on: {unequal}"
+        )
+    slow_cfgs = [
+        (r["kind"], r["n_shards"], round(r["device_speedup"], 2))
+        for r in rows
+        if r["device_speedup"] < 10.0
+    ]
+    if slow_cfgs:
+        raise SystemExit(
+            f"device phase-rate speedup below 10x on: {slow_cfgs}"
+        )
+    print("# pwb/pfence exactly equal and device speedup >= 10x on every config")
+
+
+def main(emit, smoke: bool = True):
+    """Benchmark-harness entry point (smoke-sized by default; run.py and CI
+    call this — the full grid is `python bench_phase_loop.py` without
+    --smoke)."""
+    return run(emit, smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="seconds-scale CI subset")
+    ap.add_argument(
+        "--out",
+        default=str(_ROOT / "BENCH_phase_loop.json"),
+        help="JSON results path (defaults to the repo root)",
+    )
+    args = ap.parse_args()
+    rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)
+    Path(args.out).write_text(json.dumps(rows, indent=2) + "\n")
+    print(f"# wrote {args.out} ({len(rows)} configs)")
+    check(rows)

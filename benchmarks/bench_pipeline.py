@@ -35,6 +35,8 @@ import numpy as np
 from repro.checkpoint.dfc_checkpoint import SimFS
 from repro.runtime.dfc_shard import R_OVERFLOW, ShardedDFCRuntime, StaleTokenError
 
+_ROOT = Path(__file__).resolve().parent.parent  # repo root, CWD-independent
+
 
 def _workload(n_threads, batch, rounds, universe=4096, seed=0):
     """rounds x n_threads identical announcement batches (mixed insert/pop
@@ -177,7 +179,7 @@ def main(emit, smoke: bool = True):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="seconds-scale CI subset")
-    ap.add_argument("--out", default="BENCH_pipeline.json", help="JSON results path")
+    ap.add_argument("--out", default=str(_ROOT / "BENCH_pipeline.json"), help="JSON results path (defaults to the repo root)")
     args = ap.parse_args()
     rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)
     Path(args.out).write_text(json.dumps(rows, indent=2) + "\n")

@@ -28,6 +28,8 @@ import jax
 from repro.checkpoint.dfc_checkpoint import SimFS
 from repro.runtime.dfc_shard import R_OVERFLOW, ShardedDFCRuntime, zipf_keys
 
+_ROOT = Path(__file__).resolve().parent.parent  # repo root, CWD-independent
+
 
 def _one_config(kind, n_shards, skew, batch, phases, results, emit):
     rng = np.random.default_rng(0)
@@ -114,7 +116,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="seconds-scale CI subset")
     ap.add_argument(
-        "--out", default="BENCH_sharded.json", help="JSON results path"
+        "--out", default=str(_ROOT / "BENCH_sharded.json"), help="JSON results path (defaults to the repo root)"
     )
     args = ap.parse_args()
     rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)

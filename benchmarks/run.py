@@ -8,6 +8,7 @@ Prints ``name,value,derived`` CSV.  Figures:
   ckpt   DFC-Checkpoint combining           bench_checkpoint
   shard  sharded multi-object runtime       bench_sharded (smoke grid)
   reshard  split/merge before-during-after  bench_reshard (smoke grid)
+  phase_loop  fused K-phase dispatch        bench_phase_loop (smoke grid)
   roofline  per-cell fractions (from dry-run artifacts, if present)
 
 The bench story (what each module measures, the BENCH_*.json schema) is
@@ -16,15 +17,22 @@ documented in docs/benchmarks.md.
 Every ``benchmarks/bench_*.py`` module is discovered from ONE registry
 (``discover_benches``) built from the directory contents, so adding a bench
 file is all it takes to get it run — the list here can no longer drift.
-Contract: each bench module exposes ``main(emit)``.
+Contract: each bench module exposes ``main(emit)``; when ``main`` returns a
+row list, the harness writes it to ``BENCH_<name>.json`` at the REPO ROOT
+(never the CWD), so every entry point — ``run.py`` and each module's
+``--smoke`` script mode — lands its artifact at the same deterministic
+path.
 """
 
 from __future__ import annotations
 
 import importlib
+import json
 import sys
 import time
 from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent  # repo root, CWD-independent
 
 
 def discover_benches():
@@ -42,7 +50,11 @@ def main() -> None:
 
     t0 = time.time()
     for name, module in discover_benches():
-        module.main(emit)
+        rows = module.main(emit)
+        if rows:  # structured results -> deterministic repo-root artifact
+            out = _ROOT / f"BENCH_{name.removeprefix('bench_')}.json"
+            out.write_text(json.dumps(rows, indent=2) + "\n")
+            print(f"# wrote {out} ({len(rows)} configs)", file=sys.stderr)
     try:
         from benchmarks import roofline
 

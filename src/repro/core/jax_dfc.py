@@ -641,7 +641,18 @@ class AnnounceRing:
 
 
 def init_announce_ring(slots: int) -> AnnounceRing:
-    """STRUCTS-style init: an empty device ring of ``slots`` lanes."""
+    """STRUCTS-style init: an empty device ring of ``slots`` lanes.
+
+    ``slots`` must be a power of two: the device-side ``tail`` is an int32
+    that overflows (wraps mod 2^32) after ~2^31 announced lanes, while the
+    host mirror (``ShardedDFCRuntime._ring_tail``) is an unbounded Python
+    int.  With a power-of-two slot count, ``tail % slots`` is congruent
+    under the int32 wraparound (2^32 is a multiple of ``slots``), so the
+    two counters keep agreeing on slot indices forever; with any other slot
+    count they silently diverge after the overflow.
+    """
+    if slots <= 0 or (slots & (slots - 1)) != 0:
+        raise ValueError(f"ring slots must be a power of two, got {slots}")
     return AnnounceRing(
         keys=jnp.zeros((slots,), jnp.int32),
         ops=jnp.full((slots,), OP_NONE, jnp.int32),
@@ -691,8 +702,66 @@ def ring_drain(ring: AnnounceRing, start: int, n: int):
     path's view; no host round-trip).  ``start`` is the absolute counter the
     span was announced at."""
     slots = int(ring.keys.shape[0])
-    idx = (start + np.arange(n, dtype=np.int32)) % slots
-    return _ring_gather(ring, jnp.asarray(idx))
+    idx = (start + np.arange(n, dtype=np.int64)) % slots
+    return _ring_gather(ring, jnp.asarray(idx, jnp.int32))
+
+
+def ring_announce_phases(
+    ring: AnnounceRing, keys: jax.Array, ops: jax.Array, params: jax.Array
+) -> AnnounceRing:
+    """Land a whole PHASE SCHEDULE — ``[K, pad]`` per-phase batches, padded
+    with ``OP_NONE`` lanes — at the ring tail in ONE device scatter.  The
+    K phases occupy the contiguous span ``[tail, tail + K*pad)``; the fused
+    phase loop reads them back with :func:`ring_drain_phases`."""
+    return ring_announce(
+        ring, keys.reshape(-1), ops.reshape(-1), params.reshape(-1)
+    )
+
+
+def ring_drain_phases(ring: AnnounceRing, start: int, k: int, pad: int):
+    """Consume the announcement ring ACROSS A PHASE AXIS: read the span of
+    ``k`` phases of ``pad`` lanes each announced at absolute position
+    ``start`` back as ``[K, pad]`` device arrays — the fused K-phase
+    dispatch's input view, one gather for the whole schedule instead of one
+    per phase."""
+    keys, ops, params = ring_drain(ring, start, k * pad)
+    return (
+        keys.reshape(k, pad), ops.reshape(k, pad), params.reshape(k, pad)
+    )
+
+
+# ------------------------------------------------------ phase-intent records
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PhaseIntents:
+    """Device-side persist-intent log of a fused K-phase combine.
+
+    A fused dispatch (``dfc_multi_phase_step`` / the runtime's
+    ``phase_loop``) commits NOTHING durably by itself: it accumulates, per
+    phase, everything the host needs to later issue that phase's pwb/pfence
+    batch — which shards the phase touched, the epoch each touched shard
+    must commit to, and the cumulative combiner counters its slot metadata
+    must record.  The host drains this log phase-by-phase behind the device,
+    replaying the exact serial persistence schedule.
+
+    All leaves carry a leading ``K`` (phase) axis over ``S`` shards:
+
+      * ``epoch``      — ``i32[K, S]``: per-shard epoch AFTER phase k (the
+        two-increment commit target of every op phase k routed to shard s),
+      * ``touched``    — ``bool[K, S]``: shard s received ops in phase k
+        (untouched shards keep state AND epoch: no phantom phases),
+      * ``phases_cum`` — ``i32[K, S]``: combining phases absorbed by shard s
+        up to and including phase k, counted from this dispatch's start,
+      * ``ops_cum``    — ``i32[K, S]``: ops combined into shard s likewise.
+
+    The cumulative counters start at zero: the runtime adds its durable
+    ``meta`` baseline when it turns an intent into a slot persist.
+    """
+
+    epoch: jax.Array  # i32[K, S]
+    touched: jax.Array  # bool[K, S]
+    phases_cum: jax.Array  # i32[K, S]
+    ops_cum: jax.Array  # i32[K, S]
 
 
 # ============================================================ shard stacking

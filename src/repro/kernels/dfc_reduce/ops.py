@@ -22,7 +22,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.jax_dfc import OP_NONE, DequeState, QueueState, StackState
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.jax_dfc import (
+    OP_NONE,
+    DequeState,
+    PhaseIntents,
+    QueueState,
+    StackState,
+)
 from repro.kernels.dfc_reduce.kernel import (
     dfc_deque_reduce_call,
     dfc_deque_reduce_grid_call,
@@ -361,6 +370,180 @@ def dfc_hetero_multi_combine_step(
         out[kind] = dfc_sharded_multi_combine_step(
             groups[kind], group_ops[kind], group_params[kind],
             kind=kind, backend=backend, unroll=unroll,
+        )
+    return out
+
+
+# ------------------------------------------------------------ K-phase fusion
+def _phase_grid_combine(kind: str, backend: str, state, ops, params):
+    """Pallas-grid-over-the-phase-axis twin of the scanned K-phase chain.
+
+    One ``pallas_call`` with ``grid=(K,)``: program instance k runs phase k
+    over ALL shards of the kind group, with the working shard-stacked state
+    carried ACROSS grid steps in VMEM scratch (copied in from the input
+    state at k == 0) — the phase chain never round-trips through HBM between
+    phases.  Each instance applies the vectorized combine math (the same
+    ``STRUCTS[kind].combine`` the jnp backend vmaps), honors the
+    pass-through-batch contract (an all-``OP_NONE`` phase leaves state and
+    epoch untouched), and writes phase k's post-state, responses, and kinds
+    into the k-th row of the outputs.
+
+    ``backend`` picks interpret mode (``pallas``) or compiled TPU lowering
+    (``pallas_tpu``); the jnp/ref backends have no grid to run on — use the
+    scan variant.
+    """
+    from repro.core.jax_dfc import STRUCTS
+
+    if backend not in ("pallas", "pallas_tpu"):
+        raise ValueError(
+            f"phase_axis='grid' needs a Pallas backend, got {backend!r}"
+        )
+    k_phases, n_shards, n = ops.shape
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    n_leaves = len(leaves)
+    combine = jax.vmap(STRUCTS[kind].combine)
+
+    def kernel(*refs):
+        state_in = refs[:n_leaves]
+        ops_ref, par_ref = refs[n_leaves], refs[n_leaves + 1]
+        state_out = refs[n_leaves + 2: 2 * n_leaves + 2]
+        resp_ref, kind_ref = refs[2 * n_leaves + 2], refs[2 * n_leaves + 3]
+        scratch = refs[2 * n_leaves + 4:]
+        k = pl.program_id(0)
+
+        @pl.when(k == 0)
+        def _():
+            for dst, src in zip(scratch, state_in):
+                dst[...] = src[...]
+
+        carry = jax.tree_util.tree_unflatten(
+            treedef, [s[...] for s in scratch]
+        )
+        b_ops, b_params = ops_ref[0], par_ref[0]
+        combined, resp, kinds = combine(carry, b_ops, b_params)
+        touched = jnp.any(b_ops != OP_NONE, axis=1)  # bool[S]
+
+        def _select(new_leaf, old_leaf):
+            t = touched.reshape(touched.shape + (1,) * (new_leaf.ndim - 1))
+            return jnp.where(t, new_leaf, old_leaf)
+
+        new_state = jax.tree_util.tree_map(_select, combined, carry)
+        for dst, out, leaf in zip(
+            scratch, state_out, jax.tree_util.tree_leaves(new_state)
+        ):
+            dst[...] = leaf
+            out[0] = leaf
+        resp_ref[0] = resp
+        kind_ref[0] = kinds
+
+    def _whole(leaf):  # one un-tiled block, revisited every grid step
+        nd = leaf.ndim
+        return pl.BlockSpec(leaf.shape, lambda k, _nd=nd: (0,) * _nd)
+
+    def _phase_row(shape):  # (1, ...) block at phase k
+        nd = len(shape)
+        return pl.BlockSpec(
+            (1,) + shape, lambda k, _nd=nd: (k,) + (0,) * _nd
+        )
+
+    # out_shape/out_specs MUST be flat tuples: a nested tuple makes
+    # pallas_call mis-pair specs with shapes and the kernel sees fewer out
+    # refs than leaves (observed: a stray scalar ref where the first state
+    # leaf should be).  Flatten here, regroup after the call.
+    outs = pl.pallas_call(
+        kernel,
+        grid=(k_phases,),
+        out_shape=tuple(
+            jax.ShapeDtypeStruct((k_phases,) + l.shape, l.dtype)
+            for l in leaves
+        )
+        + (
+            jax.ShapeDtypeStruct((k_phases, n_shards, n), jnp.float32),
+            jax.ShapeDtypeStruct((k_phases, n_shards, n), jnp.int32),
+        ),
+        in_specs=[_whole(l) for l in leaves]
+        + [_phase_row((n_shards, n)), _phase_row((n_shards, n))],
+        out_specs=tuple(_phase_row(l.shape) for l in leaves)
+        + (_phase_row((n_shards, n)), _phase_row((n_shards, n))),
+        scratch_shapes=[pltpu.VMEM(l.shape, l.dtype) for l in leaves],
+        interpret=backend == "pallas",
+    )(*leaves, ops, params)
+    states = jax.tree_util.tree_unflatten(treedef, list(outs[:n_leaves]))
+    resp, kinds = outs[n_leaves], outs[n_leaves + 1]
+    return states, resp, kinds
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "backend", "unroll", "phase_axis")
+)
+def dfc_multi_phase_step(
+    state, ops, params, *, kind, backend="ref", unroll=1, phase_axis="scan"
+):
+    """Fuse K combining PHASES of one kind group into a single dispatch and
+    accumulate each phase's persist INTENTS device-side.
+
+    ``ops`` / ``params`` are ``[K, S, N]`` per-phase announcement matrices.
+    The K phases chain exactly like K separate sharded combine calls — built
+    on the same ``_one_sharded_combine`` dispatch and honoring the
+    pass-through-batch contract (an all-``OP_NONE`` phase is a pure no-op:
+    state, epochs, counters untouched) — but nothing leaves the device
+    between phases, and nothing durable happens here at all.  Instead the
+    per-phase epoch/persist intents come back as one
+    :class:`~repro.core.jax_dfc.PhaseIntents` log that the host drains
+    asynchronously behind the device, issuing each phase's pwb/pfence batch
+    in serial commit order (see ``ShardedDFCRuntime.phase_loop``).
+
+    ``phase_axis`` picks the fusion mechanism (both produce identical
+    results):
+
+      * ``"scan"`` — ``lax.scan`` over the phase axis, ``unroll`` phases per
+        step; works on every backend (the scan body dispatches
+        ``_one_sharded_combine``, so kernel backends still run one Pallas
+        grid per phase inside the fused program),
+      * ``"grid"`` — ONE Pallas grid over the phase axis itself
+        (``grid=(K,)``, program instance = phase, shard-stacked state
+        carried in VMEM scratch across grid steps); Pallas backends only.
+
+    Returns ``(states, resp, kinds, intents)``: ``states`` with a leading K
+    axis (``states[-1]`` is the final state), ``resp`` / ``kinds``
+    ``[K, S, N]``, and ``intents`` the ``PhaseIntents`` record (cumulative
+    counters start at zero — the caller adds its durable baseline).
+    """
+    if phase_axis == "grid":
+        states, resp, kinds = _phase_grid_combine(
+            kind, backend, state, ops, params
+        )
+    elif phase_axis == "scan":
+        states, resp, kinds = dfc_sharded_multi_combine_step(
+            state, ops, params, kind=kind, backend=backend, unroll=unroll
+        )
+    else:
+        raise ValueError(f"unknown phase_axis {phase_axis!r}")
+    touched = jnp.any(ops != OP_NONE, axis=2)  # bool[K, S]
+    per_phase_ops = jnp.sum((ops != OP_NONE).astype(jnp.int32), axis=2)
+    intents = PhaseIntents(
+        epoch=states.epoch.astype(jnp.int32),
+        touched=touched,
+        phases_cum=jnp.cumsum(touched.astype(jnp.int32), axis=0),
+        ops_cum=jnp.cumsum(per_phase_ops, axis=0),
+    )
+    return states, resp, kinds, intents
+
+
+def dfc_hetero_multi_phase_step(
+    groups, group_ops, group_params, *, backend="ref", unroll=1,
+    phase_axis="scan",
+):
+    """Heterogeneous K-phase fusion: ``dfc_multi_phase_step`` per kind group
+    present (``group_ops[kind]`` is ``[K, S_kind, N]``).  Returns
+    ``{kind: (states, resp, kinds, intents)}`` — every kind fuses its whole
+    phase chain in one dispatch.  Meant to be called inside an enclosing jit
+    (not jitted itself)."""
+    out = {}
+    for kind in sorted(groups):
+        out[kind] = dfc_multi_phase_step(
+            groups[kind], group_ops[kind], group_params[kind],
+            kind=kind, backend=backend, unroll=unroll, phase_axis=phase_axis,
         )
     return out
 

@@ -243,6 +243,89 @@ class RequestQueueTier:
         self._maybe_split()
         return rejected
 
+    def submit_waves(
+        self,
+        waves: Sequence[
+            Tuple[Sequence[int], Sequence[int], Optional[Sequence[int]]]
+        ],
+    ) -> List[List[int]]:
+        """Commit MANY submit rounds in ONE fused device dispatch — the tier
+        riding the fabric's K-phase ``phase_loop``.
+
+        ``waves`` is a sequence of ``(sids, release_slots, priorities)``
+        rounds (``priorities`` may be ``None``); each wave becomes one
+        combining phase of the fused schedule, with the same durable
+        schedule, commit order, and pwb/pfence counts as that many
+        ``submit`` calls — but the device combines the whole arrival replay
+        in a single dispatch and the host drains the persist intents behind
+        it.  Volatile tiers fall back to one fused ``step`` per wave.
+        Returns the per-wave rejected session ids (re-submit next round).
+
+        Slot-pool retries discovered by wave j's responses are carried in
+        ``_slot_retry`` and re-pushed by the NEXT ``submit``/``submit_waves``
+        call, exactly like the per-round path — they cannot join a later
+        wave of this schedule, which was already committed device-side.
+        """
+        staged = []
+        for wave in waves:
+            sids, release_slots, priorities = wave
+            if priorities is not None and not self.priority:
+                raise ValueError(
+                    "priorities given but tier built without priority=True"
+                )
+            if priorities is not None and len(priorities) != len(sids):
+                raise ValueError(
+                    f"priorities ({len(priorities)}) must parallel "
+                    f"sids ({len(sids)})"
+                )
+            pool = self._slot_retry + list(release_slots)
+            self._slot_retry = pool[self.rt.lanes:]
+            pool = pool[: self.rt.lanes]
+            keys = [self.session_key(s) for s in sids]
+            keys += [self._key_for(self.pool_shard)] * len(pool)
+            if self.priority:
+                pr = list(priorities) if priorities is not None else [0] * len(sids)
+                enq_ops = [
+                    OP_PUSH_FRONT if p > 0 else OP_PUSH_BACK for p in pr
+                ]
+            else:
+                enq_ops = [OP_ENQ] * len(sids)
+            ops = enq_ops + [OP_PUSH] * len(pool)
+            params = [float(s) for s in sids] + [float(s) for s in pool]
+            staged.append((list(sids), pool, keys, ops, params))
+
+        # one phase per non-empty wave, the whole schedule in one dispatch
+        rejected_per_wave: List[List[int]] = [[] for _ in staged]
+        live = [i for i, st in enumerate(staged) if st[3]]
+        if live:
+            if self.durable:
+                schedule = []
+                for i in live:
+                    _, _, keys, ops, params = staged[i]
+                    self._token += 1
+                    schedule.append((0, self._token, keys, ops, params))
+                records = self.rt.phase_loop(schedule)
+                kinds_per_wave = [np.asarray(r["kinds"]) for r in records]
+            else:
+                kinds_per_wave = []
+                for i in live:
+                    _, _, keys, ops, params = staged[i]
+                    _, kinds = self.rt.step(keys, ops, params)
+                    kinds_per_wave.append(np.asarray(kinds))
+            for i, kinds in zip(live, kinds_per_wave):
+                sids, pool, _, _, _ = staged[i]
+                rejected = [
+                    s for j, s in enumerate(sids) if kinds[j] == R_OVERFLOW
+                ]
+                for j, slot in enumerate(pool):
+                    if kinds[len(sids) + j] == R_OVERFLOW:
+                        self._slot_retry.append(slot)
+                self.stats["arrived"] += len(sids)
+                self.stats["rejected"] += len(rejected)
+                rejected_per_wave[i] = rejected
+        self._maybe_split()
+        return rejected_per_wave
+
     def admit(self, max_n: int) -> List[Tuple[int, int]]:
         """Admit up to ``max_n`` sessions: pop free slots from the pool
         stack, then dequeue that many sessions round-robin from the backlogged
@@ -489,6 +572,11 @@ def main():
                          "high-priority (0 = none)")
     ap.add_argument("--reshard-backlog", type=int, default=0,
                     help="split a request shard when its backlog exceeds N")
+    ap.add_argument("--bulk-arrivals", action="store_true",
+                    help="submit the whole arrival schedule up front through "
+                         "the fabric's fused K-phase loop (one device "
+                         "dispatch per schedule), then admit from the "
+                         "committed backlog")
     ap.add_argument("--tier-only", action="store_true",
                     help="skip model init/decode: serve = tier admission "
                          "only (fast crash/resume demos and CI smoke)")
@@ -629,6 +717,24 @@ def main():
                 _log_served(state_dir, sid)
                 completed += 1
             tier.submit([], release_slots=[slot for _, slot in pairs])
+        if args.bulk_arrivals and pending_sids:
+            # the tier rides the fused phase loop: the whole arrival
+            # schedule commits in ONE device dispatch (wave = one phase)
+            bulk_waves = []
+            for i in range(0, len(pending_sids), arrival):
+                fresh = pending_sids[i : i + arrival]
+                prio = (
+                    [1 if s % args.high_every == 0 else 0 for s in fresh]
+                    if args.priority and args.high_every else None
+                )
+                bulk_waves.append((fresh, [], prio))
+            rejected = tier.submit_waves(bulk_waves)
+            waiting = [s for wave in rejected for s in wave]
+            next_idx = len(pending_sids)
+            print(
+                f"bulk arrivals: {len(pending_sids)} sessions committed in "
+                f"{len(bulk_waves)} fused phases ({len(waiting)} to retry)"
+            )
         while completed < n_sessions:
             round_no += 1
             fresh = pending_sids[next_idx : next_idx + arrival]

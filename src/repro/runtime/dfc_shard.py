@@ -117,6 +117,7 @@ Persistence layout (``SimFS``-backed, pwb=write / pfence=fsync):
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import hashlib
@@ -133,12 +134,15 @@ from repro.checkpoint.dfc_checkpoint import BOT, DFCCheckpointManager, SimFS
 from repro.core.jax_dfc import (
     KIND_CODES,
     OP_NONE,
+    PhaseIntents,
     R_NONE,
     STRUCTS,
     init_announce_ring,
     init_sharded,
     ring_announce,
+    ring_announce_phases,
     ring_drain,
+    ring_drain_phases,
     ring_has_room,
     shard_slice,
     stack_shards,
@@ -148,6 +152,7 @@ from repro.kernels.dfc_reduce.ops import (
     SHARDED_COMBINE_STEPS,
     dfc_hetero_combine_step,
     dfc_hetero_multi_combine_step,
+    dfc_hetero_multi_phase_step,
 )
 
 # runtime-level response kind: op rejected because its shard's announcement
@@ -474,6 +479,133 @@ def hetero_multi_step(
     )
 
 
+def _hetero_phase_loop_impl(
+    groups, table, keys, ops, params, meta, *, kinds: Tuple[str, ...],
+    lanes: int, backend: str = "jnp", unroll: int = 1,
+    phase_axis: str = "scan",
+):
+    """Trace body of :func:`hetero_phase_loop_step` (jitted twice below —
+    once with the kind-group buffers donated, once without)."""
+    n_shards = len(kinds)
+
+    def _route(k1, o1, p1):
+        return route_batch(
+            k1, o1, p1, n_shards=n_shards, lanes=lanes, table=table
+        )
+
+    # route ALL K phases in one vmapped pass (no per-phase dispatch)
+    shard_ops, shard_params, shard_b, lane_b, ok_b, ovf_b = jax.vmap(_route)(
+        keys, ops, params
+    )  # [K, S, L], [K, S, L], [K, B], [K, B], ...
+
+    gids = _group_ids(kinds)
+    group_ops = {k: shard_ops[:, jnp.asarray(ids)] for k, ids in gids.items()}
+    group_params = {
+        k: shard_params[:, jnp.asarray(ids)] for k, ids in gids.items()
+    }
+    multi = dfc_hetero_multi_phase_step(
+        groups, group_ops, group_params,
+        backend=backend, unroll=unroll, phase_axis=phase_axis,
+    )
+
+    k_phases = ops.shape[0]
+    resp_mat = jnp.zeros((k_phases, n_shards, lanes), jnp.float32)
+    kind_mat = jnp.full((k_phases, n_shards, lanes), R_NONE, jnp.int32)
+    epochs = jnp.zeros((k_phases, n_shards), jnp.int32)
+    epochs_before = jnp.zeros((n_shards,), jnp.int32)
+    touched_all = jnp.zeros((k_phases, n_shards), bool)
+    phases_cum = jnp.zeros((k_phases, n_shards), jnp.int32)
+    ops_cum = jnp.zeros((k_phases, n_shards), jnp.int32)
+    new_groups, states = {}, {}
+    for k in sorted(gids):
+        rows = jnp.asarray(gids[k])
+        st, s_resp, s_kinds, intents = multi[k]
+        states[k] = st
+        new_groups[k] = jax.tree_util.tree_map(lambda leaf: leaf[-1], st)
+        resp_mat = resp_mat.at[:, rows].set(s_resp)
+        kind_mat = kind_mat.at[:, rows].set(s_kinds)
+        epochs = epochs.at[:, rows].set(intents.epoch)
+        epochs_before = epochs_before.at[rows].set(groups[k].epoch)
+        touched_all = touched_all.at[:, rows].set(intents.touched)
+        # re-base the dispatch-relative cumulative counters on the fabric's
+        # durable meta: row k is then exactly what phase k's slot persists
+        phases_cum = phases_cum.at[:, rows].set(
+            meta["phases"][rows][None] + intents.phases_cum
+        )
+        ops_cum = ops_cum.at[:, rows].set(
+            meta["ops_combined"][rows][None] + intents.ops_cum
+        )
+
+    new_meta = dict(meta)
+    new_meta["phases"] = phases_cum[-1]
+    new_meta["ops_combined"] = ops_cum[-1]
+
+    s = jnp.clip(shard_b, 0, n_shards - 1)
+    ln = jnp.clip(lane_b, 0, lanes - 1)
+    ki = jnp.arange(k_phases)[:, None]
+    responses = jnp.where(ok_b, resp_mat[ki, s, ln], 0.0)
+    out_kinds = jnp.where(ok_b, kind_mat[ki, s, ln], R_NONE)
+    out_kinds = jnp.where(ovf_b, R_OVERFLOW, out_kinds)
+    intents_out = PhaseIntents(
+        epoch=epochs, touched=touched_all,
+        phases_cum=phases_cum, ops_cum=ops_cum,
+    )
+    return (
+        new_groups, new_meta, responses, out_kinds,
+        states, epochs_before, intents_out,
+    )
+
+
+_PHASE_LOOP_STATICS = ("kinds", "lanes", "backend", "unroll", "phase_axis")
+_phase_loop_step_plain = jax.jit(
+    _hetero_phase_loop_impl, static_argnames=_PHASE_LOOP_STATICS
+)
+# donated variant: the old kind-group buffers are consumed by the dispatch,
+# so stacked shard state never leaves the device between phases
+_phase_loop_step_donated = jax.jit(
+    _hetero_phase_loop_impl,
+    static_argnames=_PHASE_LOOP_STATICS,
+    donate_argnums=(0,),
+)
+
+
+def hetero_phase_loop_step(
+    groups, table, keys, ops, params, meta, *, kinds: Tuple[str, ...],
+    lanes: int, backend: str = "jnp", unroll: int = 1,
+    phase_axis: str = "scan", donate: Optional[bool] = None,
+):
+    """Route + combine K PHASES over a heterogeneous fabric in ONE dispatch,
+    accumulating each phase's persist intents device-side.
+
+    ``keys`` / ``ops`` / ``params`` are ``[K, L]`` — K per-phase flat batches
+    padded to a common lane count with ``OP_NONE``.  Each phase is routed
+    independently (one vmapped routing pass) and the chain is fused through
+    ``dfc_hetero_multi_phase_step`` per kind group: phase k+1 combines on
+    top of phase k's post-combine state, exactly as K separate
+    ``hetero_step`` calls would, but the whole schedule costs one dispatch
+    and the stacked shard state never leaves the device between phases
+    (``donate=True`` — the default off-CPU — additionally donates the old
+    group buffers to the dispatch).  ``phase_axis`` picks ``lax.scan``
+    (every backend) or the Pallas grid over the phase axis (Pallas
+    backends); see ``dfc_multi_phase_step``.
+
+    Returns ``(new_groups, new_meta, responses [K, L], out_kinds [K, L],
+    states, epochs_before i32[S], intents)`` where ``states[kind]`` carries
+    the per-phase shard-stacked states (leading K axis) and ``intents`` is
+    the :class:`~repro.core.jax_dfc.PhaseIntents` log with the cumulative
+    counters already re-based on the fabric's durable ``meta`` — everything
+    the host's intent drain needs to replay the serial persistence schedule.
+    """
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    fn = _phase_loop_step_donated if donate else _phase_loop_step_plain
+    return fn(
+        groups, table, keys, ops, params, meta,
+        kinds=kinds, lanes=lanes, backend=backend,
+        unroll=unroll, phase_axis=phase_axis,
+    )
+
+
 # ============================================================== host oracle
 def sequential_hetero_reference(
     kinds, shard_lists, keys, ops, params, lanes, table=None
@@ -627,8 +759,12 @@ class ShardedDFCRuntime:
         # guard in ``announce`` consults, so the hot path never re-reads the
         # durable record it is about to overwrite
         self._slot_tokens: Dict[Tuple[int, int], int] = {}
-        # dispatched-but-unretired chains, oldest first (retire = commit order)
-        self._inflight: List[Dict[str, Any]] = []
+        # dispatched-but-unretired chains, oldest first (retire = commit
+        # order); a deque so the three oldest-first drains (announce's depth
+        # guard, combine_phase stage 2, flush) pop in O(1) instead of the
+        # O(D) head-pop of a list — flush was O(D^2) per call and runs
+        # inside _drain() before every reshard
+        self._inflight: "collections.deque[Dict[str, Any]]" = collections.deque()
         # (thread, token) groups of the most recent dispatch, one tuple per
         # chained batch — the linearization witness drivers/oracles replay
         # (announcements grouped into one batch combine as ONE phase)
@@ -762,7 +898,20 @@ class ShardedDFCRuntime:
         if self._inflight:
             old_tok = self._slot_tokens.get((thread, n_op), -1)
             while old_tok >= 0 and self._chain_holding(thread, old_tok) is not None:
-                self._retire(self._inflight.pop(0))
+                self._retire(self._inflight.popleft())
+        n_op, ann = self._announce_durable(thread, token, keys, ops, params)
+        self._register_live(thread, n_op, token, ann["keys"], ann["ops"], ann["params"])
+
+    def _announce_durable(
+        self, thread: int, token: int, keys, ops, params
+    ) -> Tuple[int, Dict[str, Any]]:
+        """The announce protocol's durable writes alone (paper lines 2-12):
+        record into the inactive slot, pfence, valid flip, pfence, MSB
+        publish — 3 pwb + 2 pfence, shared verbatim by ``announce`` and the
+        fused phase loop's intent drain so the two paths cannot drift.
+        Returns ``(slot, record)``."""
+        valid = self._read_valid(thread)
+        n_op = 1 - (valid & 1)
         ann = {
             "token": token,
             "keys": [int(k) for k in np.asarray(keys)],
@@ -775,7 +924,7 @@ class ShardedDFCRuntime:
         self.fs.write(self._valid_path(thread), str(n_op).encode())
         self.fs.fsync([self._valid_path(thread)])
         self.fs.write(self._valid_path(thread), str(2 | n_op).encode())  # MSB
-        self._register_live(thread, n_op, token, ann["keys"], ann["ops"], ann["params"])
+        return n_op, ann
 
     def _register_live(
         self, thread: int, slot: int, token: int, keys, ops, params
@@ -1068,7 +1217,7 @@ class ShardedDFCRuntime:
         # stage 2: retire the oldest chains, in commit order, while the
         # device combines — keep at most depth-1 chains in flight
         while len(self._inflight) > self.depth - 1:
-            self._retire(self._inflight.pop(0))
+            self._retire(self._inflight.popleft())
         return [seg["thread"] for info in batches for seg in info["threads"]]
 
     def _retire(self, fl: Dict[str, Any]) -> List[int]:
@@ -1139,7 +1288,7 @@ class ShardedDFCRuntime:
         durable."""
         retired: List[int] = []
         while self._inflight:
-            retired += self._retire(self._inflight.pop(0))
+            retired += self._retire(self._inflight.popleft())
         return retired
 
     def _drain(self) -> None:
@@ -1147,6 +1296,181 @@ class ShardedDFCRuntime:
         quiescent point resharding transactions start from."""
         self.combine_phase()
         self.flush()
+
+    # ------------------------------------------------------ fused phase loop
+    def phase_loop(
+        self,
+        schedule: Sequence[Tuple[int, int, Any, Any, Any]],
+        *,
+        unroll: Optional[int] = None,
+        phase_axis: str = "scan",
+    ) -> List[Dict[str, Any]]:
+        """Fuse K combining phases into ONE device dispatch, then drain the
+        per-phase persist intents host-side — subsuming ``combine_phase`` +
+        ``_retire`` for a whole schedule of batches.
+
+        ``schedule`` is K per-phase entries ``(thread, token, keys, ops,
+        params)``: each entry is one thread's announced batch, combined as
+        its OWN phase (phase order = schedule order; per-thread tokens must
+        be monotone across the schedule, the ``announce`` contract).  The
+        device side routes, combines, and accumulates every phase's
+        epoch/persist intents in device arrays (``hetero_phase_loop_step``:
+        one ``lax.scan`` — or one Pallas grid over the phase axis — per kind
+        group, group buffers donated off-CPU so stacked shard state never
+        leaves the device between phases), with the whole schedule staged
+        through the announcement ring in one scatter when it fits.  The host
+        then drains the intent log in strict serial order — for each phase:
+        the batch's durable announce (3 pwb + 2 pfence, the exact
+        ``announce`` write sequence), the touched shards' slot persists, the
+        response record write, ONE pfence, the per-shard two-increment epoch
+        commits — so oldest-first commit order and the serial path's
+        pwb/pfence counts are preserved EXACTLY (``bench_phase_loop.py``
+        asserts both, the way ``bench_multithread.py`` asserts for depth).
+
+        A crash anywhere in the drain leaves the durable log shaped exactly
+        like a serial run that crashed at the same persistence op — up to
+        K phases of device-combined intents simply vanish with the volatile
+        state — so ``recover`` / ``replay_pending`` roll the log forward to
+        the last committed epoch with per-thread detectability verdicts
+        intact, and phases whose announce never reached the log are the
+        driver's to re-drive (same contract as the pipelined sweeps).
+
+        Because a thread's double-buffered records retain only its last two
+        batches, responses for the whole schedule are RETURNED (one record
+        per phase, in phase order: ``{"thread", "token", "resp", "kinds",
+        "shards", "targets", "repoch"}``); ``read_responses`` still serves
+        each thread's final two tokens afterwards.
+        """
+        assert self.fs is not None, "phase_loop needs a SimFS"
+        self._drain()  # quiescent start: no ready announcements, no chains
+        if not schedule:
+            return []
+
+        k_phases = len(schedule)
+        batches = []
+        for thread, token, keys, ops, params in schedule:
+            batches.append((
+                int(thread), int(token),
+                np.asarray(keys, np.int64),
+                np.asarray(ops, np.int32),
+                np.asarray(params, np.float32),
+            ))
+        maxlen = max(b[3].shape[0] for b in batches)
+        pad = max(8, 1 << max(0, (maxlen - 1)).bit_length())
+        keys_h = np.zeros((k_phases, pad), np.int64)
+        ops_h = np.full((k_phases, pad), OP_NONE, np.int32)
+        params_h = np.zeros((k_phases, pad), np.float32)
+        for j, (_, _, keys, ops, params) in enumerate(batches):
+            n = ops.shape[0]
+            keys_h[j, :n] = keys
+            ops_h[j, :n] = ops
+            params_h[j, :n] = params
+
+        # stage the whole schedule through the announcement ring (one device
+        # scatter + one phase-axis gather) when it fits; host upload if not
+        dev = None
+        if self.ring is not None and k_phases * pad:
+            slots = int(self.ring.keys.shape[0])
+            oldest = min(
+                (s0 for s0, _ in self._ring_spans.values()),
+                default=self._ring_tail,
+            )
+            if ring_has_room(slots, self._ring_tail, oldest, k_phases * pad):
+                self.ring = ring_announce_phases(
+                    self.ring,
+                    jnp.asarray(keys_h.astype(np.int32)),
+                    jnp.asarray(ops_h),
+                    jnp.asarray(params_h),
+                )
+                start = self._ring_tail
+                self._ring_tail += k_phases * pad
+                dev = ring_drain_phases(self.ring, start, k_phases, pad)
+        if dev is None:
+            dev = (
+                jnp.asarray(keys_h.astype(np.int32)),
+                jnp.asarray(ops_h),
+                jnp.asarray(params_h),
+            )
+
+        # ONE fused dispatch for the whole schedule
+        (
+            self.groups, self.meta, resp, out_kinds,
+            states, epochs_before, intents,
+        ) = hetero_phase_loop_step(
+            self.groups,
+            jnp.asarray(self.table),
+            dev[0], dev[1], dev[2],
+            self.meta,
+            kinds=tuple(self.kinds),
+            lanes=self.lanes,
+            backend=self.backend,
+            unroll=self.depth if unroll is None else int(unroll),
+            phase_axis=phase_axis,
+        )
+        self.last_dispatch = [((t, tok),) for t, tok, *_ in batches]
+
+        # fetch the intent log: one device->host transfer per stacked leaf
+        resp_np = np.asarray(resp)
+        kinds_np = np.asarray(out_kinds)
+        epochs = np.asarray(intents.epoch)  # [K, S]
+        phases_cum = np.asarray(intents.phases_cum)
+        ops_cum = np.asarray(intents.ops_cum)
+        prev_epochs = np.asarray(epochs_before)
+        states_np = {
+            k: jax.tree_util.tree_map(np.asarray, st)
+            for k, st in states.items()
+        }
+
+        def phase_shard_state(j, s):
+            k, r = self.kinds[s], self._row(s)
+            return jax.tree_util.tree_map(
+                lambda leaf: leaf[j, r], states_np[k]
+            )
+
+        # host intent drain: replay the exact serial durable schedule,
+        # phase by phase, behind the device
+        out_records: List[Dict[str, Any]] = []
+        for j, (thread, token, keys, ops, params) in enumerate(batches):
+            n = ops.shape[0]
+            slot, ann = self._announce_durable(thread, token, keys, ops, params)
+            self._slot_tokens[(thread, slot)] = token
+            self._live[thread] = {
+                "token": token, "slot": slot, "n": n,
+                "keys": keys, "ops": ops, "params": params,
+                "ring_start": None,
+            }
+            e_j = epochs[j]
+            touched = [int(s) for s in np.nonzero(e_j != prev_epochs)[0]]
+            files: List[str] = []
+            for s in touched:
+                files += self._persist_shard(
+                    s,
+                    int(e_j[s]),
+                    state=phase_shard_state(j, s),
+                    counters=(phases_cum[j][s], ops_cum[j][s]),
+                )
+            shard = self.route_host(keys)
+            targets = e_j[shard]
+            ann["val"] = {
+                "resp": [float(v) for v in resp_np[j][:n]],
+                "kinds": [int(k) for k in kinds_np[j][:n]],
+                "shards": [int(s) for s in shard],
+                "targets": [int(e) for e in targets],
+                "repoch": self.r_epoch,
+            }
+            rel = self._ann_path(thread, slot)
+            self.fs.write(rel, json.dumps(ann).encode())
+            files.append(rel)
+            self.fs.fsync(files)  # ONE pfence for slots + responses
+            self._promote_elision()
+            for s in touched:  # per-shard two-increment epoch commit
+                e = int(e_j[s])
+                self.fs.write(self._epoch_path(s), str(e - 1).encode())
+                self.fs.fsync([self._epoch_path(s)])
+                self.fs.write(self._epoch_path(s), str(e).encode())
+            prev_epochs = e_j
+            out_records.append(dict(ann["val"], thread=thread, token=token))
+        return out_records
 
     def read_responses(
         self, thread: int, token: Optional[int] = None
@@ -1181,12 +1505,20 @@ class ShardedDFCRuntime:
                 return dict(ann["val"], token=ann["token"])
             if t >= 0:
                 held.append(t)
-        if held and token < min(held):
+        # Staleness: per-thread tokens are MONOTONE, so a requested token
+        # below the NEWEST retained one provably predates the retained
+        # slot(s) — either it was announced and its record has been
+        # overwritten, or it was skipped and can never be announced now.
+        # (Comparing against min(held) missed the gap case — a token between
+        # the two retained ones, or below the only retained one while the
+        # other slot is still unannounced — and silently returned None,
+        # indistinguishable from "pending", so pollers spun forever.)
+        if held and token < max(held):
             raise StaleTokenError(
-                f"thread {thread} token {token} predates both announcement "
-                f"slots (oldest retained: {min(held)}); its response record "
-                "was overwritten — read responses before announcing two "
-                "successor batches"
+                f"thread {thread} token {token} predates retained "
+                f"announcement slot(s) (tokens held: {sorted(held)}); its "
+                "response record was overwritten or never announced — read "
+                "responses before announcing two successor batches"
             )
         return None
 

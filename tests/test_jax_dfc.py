@@ -147,3 +147,90 @@ def test_property_conservation(data):
         popped += [float(v) for v, k in zip(np.asarray(resp), np.asarray(kinds)) if k == R_VALUE]
     remaining = list(np.asarray(state.values[: int(state.active_size())]))
     assert sorted(popped + [float(r) for r in remaining]) == sorted(pushed)
+
+
+# ------------------------------------------------- announcement ring wraparound
+def _ring_vals(n, base=0.0):
+    keys = jnp.arange(n, dtype=jnp.int32)
+    ops = jnp.full((n,), OP_PUSH, jnp.int32)
+    params = jnp.arange(n, dtype=jnp.float32) + base
+    return keys, ops, params
+
+
+def test_ring_fill_to_exactly_slots_drain_one_announce_again():
+    """Directed ISSUE-6 audit: fill the ring to EXACTLY ``slots`` lanes,
+    drain (retire) one lane, announce one more.  The admission check must
+    reject the extra lane while the ring is brim-full, admit it the moment
+    one lane retires, and the wrapped write must land on the retired slot
+    without clobbering the still-live span."""
+    from repro.core.jax_dfc import (
+        init_announce_ring,
+        ring_announce,
+        ring_drain,
+        ring_has_room,
+    )
+
+    slots = 8
+    ring = init_announce_ring(slots)
+    # exactly-full is admissible from empty...
+    assert ring_has_room(slots, 0, 0, slots)
+    # ...but not one lane more, and never a span longer than the ring
+    assert not ring_has_room(slots, 0, 0, slots + 1)
+    ring = ring_announce(ring, *_ring_vals(slots))
+    assert int(ring.tail) == slots
+    # brim-full with the whole span live: nothing fits
+    assert not ring_has_room(slots, slots, 0, 1)
+    # retire ONE lane -> oldest_live advances by one -> one lane fits again
+    assert ring_has_room(slots, slots, 1, 1)
+    assert not ring_has_room(slots, slots, 1, 2)
+    ring = ring_announce(
+        ring,
+        jnp.asarray([99], jnp.int32),
+        jnp.asarray([OP_PUSH], jnp.int32),
+        jnp.asarray([99.0], jnp.float32),
+    )
+    # the wrapped lane landed at absolute position ``slots`` (slot 0)
+    k, o, p = ring_drain(ring, slots, 1)
+    assert int(k[0]) == 99 and float(p[0]) == 99.0
+    # and the still-live span [1, slots) is intact
+    k, o, p = ring_drain(ring, 1, slots - 1)
+    np.testing.assert_array_equal(np.asarray(k), np.arange(1, slots))
+    np.testing.assert_allclose(np.asarray(p), np.arange(1, slots, dtype=np.float32))
+
+
+def test_ring_slots_must_be_power_of_two():
+    """The device tail is an int32 that wraps mod 2^32; only a power-of-two
+    slot count keeps ``tail % slots`` congruent across that wrap, so any
+    other count is rejected at init."""
+    from repro.core.jax_dfc import init_announce_ring
+
+    for bad in (0, -4, 3, 6, 12, 100):
+        with pytest.raises(ValueError):
+            init_announce_ring(bad)
+    for ok in (1, 2, 8, 64, 4096):
+        ring = init_announce_ring(ok)
+        assert ring.keys.shape == (ok,)
+
+
+def test_ring_tail_int32_overflow_keeps_host_device_congruent():
+    """Near-2^31 regression: after ~2^31 announced lanes the device tail
+    overflows int32 while the host mirror counts on in unbounded Python
+    ints.  With power-of-two slots the two stay congruent mod ``slots``
+    across the overflow — announcing through the wrap and draining by the
+    HOST absolute position must read back the announced values."""
+    import dataclasses
+
+    from repro.core.jax_dfc import init_announce_ring, ring_announce, ring_drain
+
+    slots = 8
+    host_tail = 2**31 - 4  # a real host mirror would hold this Python int
+    ring = init_announce_ring(slots)
+    ring = dataclasses.replace(
+        ring, tail=jnp.asarray(np.int32(host_tail))  # device twin, about to wrap
+    )
+    ring = ring_announce(ring, *_ring_vals(8, base=100.0))  # crosses 2^31
+    assert int(np.asarray(ring.tail)) < 0  # device counter DID overflow
+    # host-side drain at the unbounded absolute position still finds them
+    k, o, p = ring_drain(ring, host_tail, 8)
+    np.testing.assert_array_equal(np.asarray(k), np.arange(8))
+    np.testing.assert_allclose(np.asarray(p), np.arange(8, dtype=np.float32) + 100.0)

@@ -166,6 +166,19 @@ def test_depth3_holds_two_chains_in_flight(tmp_path):
     rt = ShardedDFCRuntime(
         ["queue"], 1, CAP, LANES, fs=fs, n_threads=4, depth=3,
     )
+    # record the order chains retire in (ISSUE-6: _inflight became a deque
+    # for O(1) flush — commit order must stay oldest-first regardless)
+    retire_order = []
+    orig_retire = rt._retire
+
+    def _recording_retire(fl):
+        retire_order.append(
+            sorted({seg["token"] for info in fl["batches"]
+                    for seg in info["threads"]})
+        )
+        return orig_retire(fl)
+
+    rt._retire = _recording_retire
     for t in range(4):
         rt.announce(t, [t], [OP_ENQ], [float(t + 1)], token=1)
     rt.combine_phase()  # chain A dispatched, in flight
@@ -190,6 +203,9 @@ def test_depth3_holds_two_chains_in_flight(tmp_path):
     assert _fabric_contents(rt) == sorted(
         [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]
     )
+    # chains retired strictly oldest-first: A (force-retire on slot
+    # reclaim), then B and C drained by flush in dispatch order
+    assert retire_order == [[1], [2], [3]]
 
 
 def test_per_thread_verdicts_name_the_right_ops(tmp_path):

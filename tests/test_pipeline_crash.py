@@ -303,6 +303,32 @@ def test_read_responses_stale_token_raises(tmp_path):
     assert rt2.read_responses(0, token=1) is not None
 
 
+def test_read_responses_gap_token_raises(tmp_path):
+    """Regression (ISSUE 6): a requested token may predate the RETAINED
+    slots without predating ``min(held)`` — per-thread tokens are monotone
+    but not dense, so with held tokens {5, 9} a request for 7 was never
+    announced and can never surface.  The old ``token < min(held)`` check
+    let it fall through to ``None`` (a forever-spin for the caller); any
+    token below ``max(held)`` that is not itself retained is provably
+    stale and must raise."""
+    fs = SimFS(tmp_path)
+    rt = ShardedDFCRuntime(["queue"], 1, CAP, LANES, fs=fs, n_threads=1)
+    for tok in (5, 9):  # sparse token sequence: slots retain {5, 9}
+        rt.announce(0, [1], [OP_ENQ], [float(tok)], token=tok)
+        rt.combine_phase()
+    assert rt.read_responses(0, token=5) is not None
+    assert rt.read_responses(0, token=9) is not None
+    # 7 sits in the gap: newer than min(held)=5, older than max(held)=9,
+    # never announced -> provably stale, not pending
+    with pytest.raises(StaleTokenError):
+        rt.read_responses(0, token=7)
+    # and below the whole window stays stale too
+    with pytest.raises(StaleTokenError):
+        rt.read_responses(0, token=4)
+    # above the window is genuinely pending
+    assert rt.read_responses(0, token=10) is None
+
+
 def test_request_queue_tier_rides_the_ring_path():
     """The serving tier's durable phases flow through the device-side
     announcement ring (payload spans registered and consumed), in both the
