@@ -1,0 +1,70 @@
+"""Shared benchmark plumbing: BENCH artifact writing with a ``meta`` block.
+
+Every BENCH_*.json row carries a ``meta`` object — git sha, jax backend and
+version, and the row's schedule shape — so the perf trajectory across PRs
+is attributable: two rows are comparable iff their meta says they measured
+the same schedule on the same stack.  ``write_rows`` is the one artifact
+writer shared by ``run.py`` and every bench module's ``--smoke`` script
+path (docs/benchmarks.md documents the schema; tools/check_bench_schema.py
+enforces it in CI).
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+_ROOT = Path(__file__).resolve().parent.parent  # repo root, CWD-independent
+
+# Row columns that describe the measured schedule's shape; whichever of
+# these a row carries become its ``meta.schedule`` (plus the entry-point
+# extras the caller passes).
+_SHAPE_KEYS = (
+    "kind", "n_shards", "n_threads", "n_queues", "batch", "rounds",
+    "phases", "sessions", "depth", "chain",
+)
+
+
+def git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=_ROOT, capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+        return out or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def bench_meta() -> Dict[str, Any]:
+    """The row-independent half of the meta block (sha, backend, version)."""
+    import jax
+
+    return {
+        "git_sha": git_sha(),
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+    }
+
+
+def write_rows(
+    out,
+    rows: List[Dict[str, Any]],
+    extra: Optional[Dict[str, Any]] = None,
+) -> Path:
+    """Stamp every row with its ``meta`` block and write the artifact.
+
+    ``meta.schedule`` is the row's own shape columns (so a mixed-grid
+    artifact stays self-describing) merged with ``extra`` (entry point,
+    smoke flag).  Returns the written path."""
+    base = bench_meta()
+    for r in rows:
+        schedule = {k: r[k] for k in _SHAPE_KEYS if k in r}
+        if extra:
+            schedule.update(extra)
+        r["meta"] = dict(base, schedule=schedule)
+    out = Path(out)
+    out.write_text(json.dumps(rows, indent=2) + "\n")
+    return out

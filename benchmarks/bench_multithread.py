@@ -27,7 +27,6 @@ into CI.
 from __future__ import annotations
 
 import argparse
-import json
 import shutil
 import tempfile
 import time
@@ -123,7 +122,7 @@ def _one_config(kind, n_shards, n_threads, batch, rounds, results, emit):
                 applied = _drive_lockstep(rt, schedule)
                 dt = time.perf_counter() - t0
                 if rep and dt < best[d][0]:
-                    best[d] = (dt, applied, dict(fs.stats))
+                    best[d] = (dt, applied, fs.pstats.snapshot())
                 fs2 = SimFS(root / f"il{d}_r{rep}")
                 rt2 = ShardedDFCRuntime(
                     kind, n_shards, capacity, lanes, fs=fs2,
@@ -140,11 +139,12 @@ def _one_config(kind, n_shards, n_threads, batch, rounds, results, emit):
         shutil.rmtree(root, ignore_errors=True)
     phases = rounds * n_threads
     for d in depths:
-        dt, applied, stats = best[d]
+        dt, applied, snap = best[d]
         row[f"depth{d}_phases_per_s"] = phases / dt
         row[f"depth{d}_ops_per_s"] = applied / dt
-        row[f"depth{d}_pwb_per_op"] = stats["pwb"] / max(applied, 1)
-        row[f"depth{d}_pfence_per_op"] = stats["pfence"] / max(applied, 1)
+        row[f"depth{d}_pwb_per_op"] = snap.total_pwb() / max(applied, 1)
+        row[f"depth{d}_pfence_per_op"] = snap.total_pfence() / max(applied, 1)
+        row[f"depth{d}_persist"] = snap.as_dict()  # per-tag metrics snapshot
         row[f"depth{d}_interleaved_phases_per_s"] = phases / best_il[d]
     row["speedup_d2"] = row["depth2_phases_per_s"] / row["depth1_phases_per_s"]
     row["speedup_d3"] = row["depth3_phases_per_s"] / row["depth1_phases_per_s"]
@@ -191,7 +191,11 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=str(_ROOT / "BENCH_multithread.json"), help="JSON results path (defaults to the repo root)")
     args = ap.parse_args()
     rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)
-    Path(args.out).write_text(json.dumps(rows, indent=2) + "\n")
+    try:
+        from benchmarks.bench_common import write_rows
+    except ImportError:
+        from bench_common import write_rows
+    write_rows(args.out, rows, extra={"entry": "script", "smoke": args.smoke})
     print(f"# wrote {args.out} ({len(rows)} configs)")
     # acceptance: deeper pipelines only RE-TIME the durable schedule, so the
     # per-op persistence cost must never exceed the serial cost

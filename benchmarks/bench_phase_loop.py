@@ -31,7 +31,6 @@ speedup clears 10x on every config.  ``--smoke`` is wired into CI.
 from __future__ import annotations
 
 import argparse
-import json
 import shutil
 import tempfile
 import time
@@ -137,15 +136,16 @@ def _one_config(kind, n_shards, batch, rounds, reps, results, emit):
                     rt.phase_loop(sched)
                 dt = time.perf_counter() - t0
                 if rep and dt < best[mode][0]:
-                    best[mode] = (dt, dict(fs.stats))
+                    best[mode] = (dt, fs.pstats.snapshot())
                 shutil.rmtree(root / f"{mode}_r{rep}", ignore_errors=True)
     finally:
         shutil.rmtree(root, ignore_errors=True)
     for mode in ("pipelined", "fused"):
-        dt, stats = best[mode]
+        dt, snap = best[mode]
         row[f"e2e_{mode}_phases_per_s"] = rounds / dt
-        row[f"{mode}_pwb"] = stats["pwb"]
-        row[f"{mode}_pfence"] = stats["pfence"]
+        row[f"{mode}_pwb"] = snap.total_pwb()
+        row[f"{mode}_pfence"] = snap.total_pfence()
+        row[f"{mode}_persist"] = snap.as_dict()  # per-tag metrics snapshot
     dev_f, dev_p = _device_rates(kind, n_shards, cap, batch, sched, reps)
     row["device_fused_phases_per_s"] = dev_f
     row["device_pipelined_phases_per_s"] = dev_p
@@ -184,16 +184,19 @@ def run(emit, smoke: bool = False):
 
 
 def check(rows):
-    """The ISSUE-6 acceptance gates; raises SystemExit on violation."""
+    """The ISSUE-6 acceptance gates; raises SystemExit on violation.
+
+    Parity is enforced PER TAG (announce/slot/resp/phase/epoch), not just on
+    totals — a mode that moved a fence from the phase barrier to the epoch
+    commit would pass a total-count check while breaking the protocol."""
     unequal = [
         (r["kind"], r["n_shards"])
         for r in rows
-        if r["fused_pwb"] != r["pipelined_pwb"]
-        or r["fused_pfence"] != r["pipelined_pfence"]
+        if r["fused_persist"] != r["pipelined_persist"]
     ]
     if unequal:
         raise SystemExit(
-            f"pwb/pfence parity broken (fused != depth-2) on: {unequal}"
+            f"per-tag pwb/pfence parity broken (fused != depth-2) on: {unequal}"
         )
     slow_cfgs = [
         (r["kind"], r["n_shards"], round(r["device_speedup"], 2))
@@ -224,6 +227,10 @@ if __name__ == "__main__":
     )
     args = ap.parse_args()
     rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)
-    Path(args.out).write_text(json.dumps(rows, indent=2) + "\n")
+    try:
+        from benchmarks.bench_common import write_rows
+    except ImportError:
+        from bench_common import write_rows
+    write_rows(args.out, rows, extra={"entry": "script", "smoke": args.smoke})
     print(f"# wrote {args.out} ({len(rows)} configs)")
     check(rows)

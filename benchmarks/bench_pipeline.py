@@ -24,7 +24,6 @@ into CI.
 from __future__ import annotations
 
 import argparse
-import json
 import shutil
 import tempfile
 import time
@@ -123,17 +122,18 @@ def _one_config(kind, n_shards, n_threads, batch, rounds, results, emit):
                 applied = _drive(rt, schedule, pipelined=kw["pipeline"])
                 dt = time.perf_counter() - t0
                 if rep and dt < best[mode][0]:
-                    best[mode] = (dt, applied, dict(fs.stats))
+                    best[mode] = (dt, applied, fs.pstats.snapshot())
                 shutil.rmtree(root / f"{mode}_r{rep}", ignore_errors=True)
     finally:
         shutil.rmtree(root, ignore_errors=True)
     for mode, _ in modes:
-        dt, applied, stats = best[mode]
+        dt, applied, snap = best[mode]
         phases = rounds * n_threads
         row[f"{mode}_phases_per_s"] = phases / dt
         row[f"{mode}_ops_per_s"] = applied / dt
-        row[f"{mode}_pwb_per_op"] = stats["pwb"] / max(applied, 1)
-        row[f"{mode}_pfence_per_op"] = stats["pfence"] / max(applied, 1)
+        row[f"{mode}_pwb_per_op"] = snap.total_pwb() / max(applied, 1)
+        row[f"{mode}_pfence_per_op"] = snap.total_pfence() / max(applied, 1)
+        row[f"{mode}_persist"] = snap.as_dict()  # per-tag metrics snapshot
     row["speedup"] = row["pipelined_phases_per_s"] / row["serial_phases_per_s"]
     name = f"pipeline_{kind}_s{n_shards}_t{n_threads}_b{batch}"
     emit(
@@ -182,7 +182,11 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=str(_ROOT / "BENCH_pipeline.json"), help="JSON results path (defaults to the repo root)")
     args = ap.parse_args()
     rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)
-    Path(args.out).write_text(json.dumps(rows, indent=2) + "\n")
+    try:
+        from benchmarks.bench_common import write_rows
+    except ImportError:
+        from bench_common import write_rows
+    write_rows(args.out, rows, extra={"entry": "script", "smoke": args.smoke})
     print(f"# wrote {args.out} ({len(rows)} configs)")
     slower = [
         r for r in rows if r["pipelined_phases_per_s"] <= r["serial_phases_per_s"]

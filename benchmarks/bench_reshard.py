@@ -23,7 +23,6 @@ seconds-scale subset on CPU jax — wired into CI so resharding cannot rot.
 from __future__ import annotations
 
 import argparse
-import json
 import shutil
 import tempfile
 import time
@@ -40,6 +39,7 @@ _ROOT = Path(__file__).resolve().parent.parent  # repo root, CWD-independent
 def _window(rt, fs, rng, batch, phases, token0):
     """Drive ``phases`` durable announce+combine rounds; return metrics."""
     pwb0, pf0 = fs.stats["pwb"], fs.stats["pfence"]
+    snap0 = fs.pstats.snapshot()
     applied = overflow = 0
     t0 = time.perf_counter()
     for i in range(phases):
@@ -56,6 +56,7 @@ def _window(rt, fs, rng, batch, phases, token0):
         "ops_per_s": applied / dt,
         "pwb_per_op": (fs.stats["pwb"] - pwb0) / max(applied, 1),
         "pfence_per_op": (fs.stats["pfence"] - pf0) / max(applied, 1),
+        "persist": fs.pstats.diff(snap0).as_dict(),  # this window's tags only
         "overflow": overflow,
         "n_shards": rt.n_shards,
     }
@@ -123,5 +124,9 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=str(_ROOT / "BENCH_reshard.json"), help="JSON results path (defaults to the repo root)")
     args = ap.parse_args()
     rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)
-    Path(args.out).write_text(json.dumps(rows, indent=2) + "\n")
+    try:
+        from benchmarks.bench_common import write_rows
+    except ImportError:
+        from bench_common import write_rows
+    write_rows(args.out, rows, extra={"entry": "script", "smoke": args.smoke})
     print(f"# wrote {args.out} ({len(rows)} configs)")

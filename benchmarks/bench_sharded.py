@@ -15,7 +15,6 @@ seconds-scale subset on CPU jax — wired into CI so the subsystem cannot rot.
 from __future__ import annotations
 
 import argparse
-import json
 import shutil
 import tempfile
 import time
@@ -67,6 +66,7 @@ def _one_config(kind, n_shards, skew, batch, phases, results, emit):
             applied += int(np.sum(kinds != R_OVERFLOW))
         pwb_op = fs.stats["pwb"] / max(applied, 1)
         pfence_op = fs.stats["pfence"] / max(applied, 1)
+        persist = fs.pstats.as_dict()  # per-tag metrics snapshot
     finally:
         shutil.rmtree(root, ignore_errors=True)
 
@@ -82,6 +82,7 @@ def _one_config(kind, n_shards, skew, batch, phases, results, emit):
             "ops_per_s": ops_s,
             "pwb_per_op": pwb_op,
             "pfence_per_op": pfence_op,
+            "persist": persist,
             "touched_shards": touched,
         }
     )
@@ -120,5 +121,9 @@ if __name__ == "__main__":
     )
     args = ap.parse_args()
     rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)
-    Path(args.out).write_text(json.dumps(rows, indent=2) + "\n")
+    try:
+        from benchmarks.bench_common import write_rows
+    except ImportError:
+        from bench_common import write_rows
+    write_rows(args.out, rows, extra={"entry": "script", "smoke": args.smoke})
     print(f"# wrote {args.out} ({len(rows)} configs)")

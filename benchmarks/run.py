@@ -27,7 +27,6 @@ path.
 from __future__ import annotations
 
 import importlib
-import json
 import sys
 import time
 from pathlib import Path
@@ -40,7 +39,9 @@ def discover_benches():
     here = Path(__file__).resolve().parent
     if str(here.parent) not in sys.path:  # `python benchmarks/run.py` puts
         sys.path.insert(0, str(here.parent))  # benchmarks/ itself first
-    names = sorted(p.stem for p in here.glob("bench_*.py"))
+    names = sorted(  # bench_common is shared plumbing, not a bench
+        p.stem for p in here.glob("bench_*.py") if p.stem != "bench_common"
+    )
     return [(name, importlib.import_module(f"benchmarks.{name}")) for name in names]
 
 
@@ -52,8 +53,13 @@ def main() -> None:
     for name, module in discover_benches():
         rows = module.main(emit)
         if rows:  # structured results -> deterministic repo-root artifact
-            out = _ROOT / f"BENCH_{name.removeprefix('bench_')}.json"
-            out.write_text(json.dumps(rows, indent=2) + "\n")
+            from benchmarks.bench_common import write_rows
+
+            out = write_rows(
+                _ROOT / f"BENCH_{name.removeprefix('bench_')}.json",
+                rows,
+                extra={"entry": "run.py", "smoke": True},
+            )
             print(f"# wrote {out} ({len(rows)} configs)", file=sys.stderr)
     try:
         from benchmarks import roofline

@@ -40,6 +40,9 @@ import numpy as np
 
 import jax
 
+from repro.nvm.memory import PersistStats
+from repro.obs import NULL_OBS
+
 
 class CrashNow(Exception):
     """Raised by FaultInjector at the scheduled persistence op."""
@@ -60,7 +63,16 @@ class FaultInjector:
 
 class SimFS:
     """Buffered filesystem: content reaches disk only at fsync (pwb=write,
-    pfence=fsync).  Crash drops unsynced buffers."""
+    pfence=fsync).  Crash drops unsynced buffers.
+
+    Persistence ops carry an optional attribution ``tag`` (announce, slot,
+    resp, epoch, routing, ...) counted into ``pstats`` — a
+    :class:`PersistStats` partitioning the legacy ``stats`` totals by
+    protocol step.  An observer (``repro.obs.FabricObserver``) may be
+    attached via ``obs``; its hooks run strictly AFTER the counters, the
+    fault-injector tick, and the durable work, so tracing can never perturb
+    counts, crash points, or on-disk bytes.
+    """
 
     def __init__(self, root: Path, injector: Optional[FaultInjector] = None):
         self.root = Path(root)
@@ -68,19 +80,24 @@ class SimFS:
         self.pending: Dict[str, bytes] = {}
         self.injector = injector or FaultInjector()
         self.stats = {"pwb": 0, "pfence": 0}
+        self.pstats = PersistStats()
+        self.obs = NULL_OBS
 
     def _p(self, rel: str) -> Path:
         return self.root / rel
 
-    def write(self, rel: str, data: bytes) -> None:
+    def write(self, rel: str, data: bytes, tag: Optional[str] = None) -> None:
         """pwb: buffered write — NOT durable until fsync."""
         self.stats["pwb"] += 1
+        self.pstats.count_pwb(tag)
         self.injector.tick()
         self.pending[rel] = data
+        self.obs.on_pwb(rel, tag)
 
-    def fsync(self, rels: Optional[List[str]] = None) -> None:
+    def fsync(self, rels: Optional[List[str]] = None, tag: Optional[str] = None) -> None:
         """pfence: flush pending writes to the real filesystem."""
         self.stats["pfence"] += 1
+        self.pstats.count_pfence(tag)
         self.injector.tick()
         items = (
             list(self.pending.items())
@@ -92,6 +109,7 @@ class SimFS:
             p.parent.mkdir(parents=True, exist_ok=True)
             p.write_bytes(data)
             self.pending.pop(rel, None)
+        self.obs.on_pfence(rels, tag)
 
     def read(self, rel: str) -> Optional[bytes]:
         """Reads see the buffered (volatile) view, like a CPU cache."""

@@ -101,6 +101,7 @@ class RequestQueueTier:
         pipeline: bool = False,
         depth: Optional[int] = None,
         priority: bool = False,
+        obs=None,
         _seed_slots: bool = True,
         _rt: Optional[ShardedDFCRuntime] = None,
     ):
@@ -123,7 +124,15 @@ class RequestQueueTier:
             n_buckets=n_buckets,
             table=self._default_table(n_queues, n_buckets),
             pipeline=pipeline, depth=depth,
+            obs=obs,
         )
+        # the tier and the fabric share ONE observer: per-request lifecycle
+        # spans (arrive -> admit -> served) land in the same timeline as the
+        # durable-path events, and admission latency histograms live in the
+        # same registry as the per-shard gauges
+        self.obs = obs if obs is not None else self.rt.obs
+        self._arrival_t: Dict[int, float] = {}  # sid -> arrival perf_counter
+        self._admit_t: Dict[int, float] = {}  # sid -> admission perf_counter
         self.reshard_backlog = reshard_backlog
         self._rep_keys: Dict[int, int] = {}
         self._slot_retry: List[int] = []  # pool pushes that overflowed a phase
@@ -233,6 +242,9 @@ class RequestQueueTier:
         params = [float(s) for s in sids] + [float(s) for s in pool]
         if not ops:
             return []
+        now = time.perf_counter()
+        for s in sids:  # first-arrival timestamp survives overflow retries
+            self._arrival_t.setdefault(int(s), now)
         resp, kinds = self._phase(keys, ops, params)
         rejected = [s for i, s in enumerate(sids) if kinds[i] == R_OVERFLOW]
         for j, slot in enumerate(pool):
@@ -240,6 +252,13 @@ class RequestQueueTier:
                 self._slot_retry.append(slot)
         self.stats["arrived"] += len(sids)
         self.stats["rejected"] += len(rejected)
+        if self.obs.enabled and sids:
+            self.obs.event(
+                "request",
+                stage="arrive",
+                sids=[int(s) for s in sids],
+                rejected=[int(s) for s in rejected],
+            )
         self._maybe_split()
         return rejected
 
@@ -292,6 +311,9 @@ class RequestQueueTier:
                 enq_ops = [OP_ENQ] * len(sids)
             ops = enq_ops + [OP_PUSH] * len(pool)
             params = [float(s) for s in sids] + [float(s) for s in pool]
+            now = time.perf_counter()
+            for s in sids:
+                self._arrival_t.setdefault(int(s), now)
             staged.append((list(sids), pool, keys, ops, params))
 
         # one phase per non-empty wave, the whole schedule in one dispatch
@@ -323,6 +345,14 @@ class RequestQueueTier:
                 self.stats["arrived"] += len(sids)
                 self.stats["rejected"] += len(rejected)
                 rejected_per_wave[i] = rejected
+                if self.obs.enabled and sids:
+                    self.obs.event(
+                        "request",
+                        stage="arrive",
+                        wave=i,
+                        sids=[int(s) for s in sids],
+                        rejected=[int(s) for s in rejected],
+                    )
         self._maybe_split()
         return rejected_per_wave
 
@@ -366,6 +396,20 @@ class RequestQueueTier:
         if spare:
             self.submit([], release_slots=spare)
         self.stats["admitted"] += len(admitted)
+        if self.obs.enabled and admitted:
+            now = time.perf_counter()
+            for sid, slot in admitted:
+                t_arr = self._arrival_t.get(sid)
+                self._admit_t[sid] = now
+                if t_arr is not None:
+                    self.obs.metrics.observe(
+                        "admission_ms", (now - t_arr) * 1e3
+                    )
+            self.obs.event(
+                "request",
+                stage="admit",
+                pairs=[[int(s), int(sl)] for s, sl in admitted],
+            )
         return admitted
 
     def backlog(self) -> int:
@@ -410,6 +454,34 @@ class RequestQueueTier:
             "pfence_per_op": self.rt.fs.stats["pfence"] / ops,
         }
 
+    def mark_served(self, sid: int) -> None:
+        """Record the request lifecycle's final stage: service latency
+        (admit -> served) and end-to-end latency (arrive -> served) land in
+        the metrics registry, the event in the trace.  No-op when the tier
+        runs unobserved."""
+        if not self.obs.enabled:
+            return
+        now = time.perf_counter()
+        t_adm = self._admit_t.pop(sid, None)
+        t_arr = self._arrival_t.pop(sid, None)
+        if t_adm is not None:
+            self.obs.metrics.observe("service_ms", (now - t_adm) * 1e3)
+        if t_arr is not None:
+            self.obs.metrics.observe("e2e_ms", (now - t_arr) * 1e3)
+        self.obs.event("request", stage="served", sid=int(sid))
+
+    def latency_stats(self) -> Optional[Dict[str, Dict[str, float]]]:
+        """p50/p99 (plus count/mean/min/max) per latency histogram —
+        ``admission_ms`` always, ``service_ms``/``e2e_ms`` when
+        ``mark_served`` ran.  None when the tier runs unobserved."""
+        if not self.obs.enabled:
+            return None
+        return {
+            name: h.summary()
+            for name, h in sorted(self.obs.metrics.histograms.items())
+            if name.endswith("_ms")
+        }
+
     # -------------------------------------------------------------- recovery
     @classmethod
     def recover(
@@ -424,6 +496,7 @@ class RequestQueueTier:
         reshard_backlog: Optional[int] = None,
         pipeline: bool = False,
         depth: Optional[int] = None,
+        obs=None,
     ) -> Tuple["RequestQueueTier", Dict[str, Any]]:
         """Recover a durable tier after a crash.
 
@@ -463,12 +536,13 @@ class RequestQueueTier:
             table=cls._default_table(n_queues, n_buckets),
             pipeline=pipeline,
             depth=depth,
+            obs=obs,
         )
         tier = cls(
             n_queues=n_queues, slots=0, capacity=capacity, lanes=lanes,
             durable=True, fs=fs, reshard_backlog=reshard_backlog,
             n_buckets=n_buckets, pipeline=pipeline, depth=depth,
-            priority=priority, _seed_slots=False, _rt=rt,
+            priority=priority, obs=obs, _seed_slots=False, _rt=rt,
         )
         tier.n_queues = sum(
             1 for k in rt.kinds if k in ("queue", "deque")
@@ -592,6 +666,11 @@ def main():
     ap.add_argument("--expect-exactly-once", action="store_true",
                     help="with --resume: assert every session was served "
                          "exactly once across crash + resume")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable the fabric flight recorder: durable trace "
+                         "sidecar under the tier root (with --state-dir), "
+                         "metrics + Chrome trace exports, and p50/p99 "
+                         "admission latency in the tier report")
     args = ap.parse_args()
 
     cfg = apply_tuning(get_reduced(args.arch) if args.reduced else get_config(args.arch))
@@ -626,6 +705,14 @@ def main():
             FaultInjector(crash_at=args.crash_at or None),
         )
 
+    obs = None
+    if args.trace:
+        from repro.obs import FabricObserver
+
+        # durable tiers get the crash-durable sidecar under the tier root;
+        # volatile tiers trace in memory (metrics + ring only)
+        obs = FabricObserver(root=fs.root if fs is not None else None)
+
     tier_kw = dict(
         n_queues=args.queues,
         capacity=4096,
@@ -634,6 +721,7 @@ def main():
         pipeline=args.pipeline,
         depth=depth,
         priority=args.priority,
+        obs=obs,
     )
     served_before = _read_served(state_dir) if state_dir else []
     in_flight: List[int] = []
@@ -715,6 +803,7 @@ def main():
             decoded_tokens += 0 if args.tier_only else args.gen * len(pairs)
             for sid, slot in pairs:
                 _log_served(state_dir, sid)
+                tier.mark_served(sid)
                 completed += 1
             tier.submit([], release_slots=[slot for _, slot in pairs])
         if args.bulk_arrivals and pending_sids:
@@ -754,6 +843,7 @@ def main():
             decoded_tokens += 0 if args.tier_only else args.gen * len(sids)
             for sid in sids:
                 _log_served(state_dir, sid)
+                tier.mark_served(sid)
             completed += len(sids)
             # sessions finished: their decode slots go back through the fabric
             tier.submit([], release_slots=[slot for _, slot in admitted])
@@ -781,6 +871,28 @@ def main():
     p = tier.persistence_stats()
     if p:
         print(f"pwb/op: {p['pwb_per_op']:.2f}  pfence/op: {p['pfence_per_op']:.2f}")
+    lat = tier.latency_stats()
+    if lat:
+        for name, s in lat.items():
+            print(
+                f"{name}: p50={s['p50']:.3f} p99={s['p99']:.3f} "
+                f"mean={s['mean']:.3f} n={int(s['count'])}"
+            )
+    if obs is not None:
+        from repro.obs import bridge_persist_stats, to_chrome_trace
+
+        if tier.durable:
+            bridge_persist_stats(obs.metrics, tier.rt.fs.pstats)
+        obs.flush()  # clean shutdown: durable-tail the last partial fence
+        if obs.root is not None:
+            n_m = obs.metrics.to_jsonl(obs.root / "obs" / "metrics.jsonl")
+            n_e = to_chrome_trace(
+                obs.trace.events(), obs.root / "obs" / "trace_chrome.json"
+            )
+            print(
+                f"trace: {obs.trace_path} (+{n_m} metrics, "
+                f"{n_e} chrome events under {obs.root / 'obs'})"
+            )
     if args.expect_exactly_once:
         served = _read_served(state_dir)
         expect = sorted(range(1, n_sessions + 1))

@@ -42,17 +42,29 @@ class CrashMode(enum.Enum):
     RANDOM = "random"  # uniformly random prefix-point per line, >= fenced
 
 
+#: Tag bucket for persistence ops issued without an attribution tag, so the
+#: tag dicts always partition the totals (nothing is silently untagged).
+DEFAULT_TAG = "untagged"
+
+
 @dataclasses.dataclass
 class PersistStats:
-    """pwb/pfence counters, attributed by tag."""
+    """pwb/pfence counters, attributed by tag.
+
+    ``snapshot()``/``diff()`` give benchmarks and tests a windowed view
+    (counts since a mark) without hand-rolled total arithmetic; untagged
+    ops land in the :data:`DEFAULT_TAG` bucket.
+    """
 
     pwb: Dict[str, int] = dataclasses.field(default_factory=dict)
     pfence: Dict[str, int] = dataclasses.field(default_factory=dict)
 
-    def count_pwb(self, tag: str) -> None:
+    def count_pwb(self, tag: Optional[str] = None) -> None:
+        tag = tag or DEFAULT_TAG
         self.pwb[tag] = self.pwb.get(tag, 0) + 1
 
-    def count_pfence(self, tag: str) -> None:
+    def count_pfence(self, tag: Optional[str] = None) -> None:
+        tag = tag or DEFAULT_TAG
         self.pfence[tag] = self.pfence.get(tag, 0) + 1
 
     def total_pwb(self) -> int:
@@ -60,6 +72,30 @@ class PersistStats:
 
     def total_pfence(self) -> int:
         return sum(self.pfence.values())
+
+    def snapshot(self) -> "PersistStats":
+        """An immutable-by-convention copy of the current counters."""
+        return PersistStats(pwb=dict(self.pwb), pfence=dict(self.pfence))
+
+    def diff(self, since: "PersistStats") -> "PersistStats":
+        """Counters accumulated since ``since`` (an earlier snapshot):
+        per-tag subtraction, tags absent then treated as zero."""
+        return PersistStats(
+            pwb={
+                t: n - since.pwb.get(t, 0)
+                for t, n in self.pwb.items()
+                if n != since.pwb.get(t, 0)
+            },
+            pfence={
+                t: n - since.pfence.get(t, 0)
+                for t, n in self.pfence.items()
+                if n != since.pfence.get(t, 0)
+            },
+        )
+
+    def as_dict(self) -> Dict[str, Dict[str, int]]:
+        """JSON-ready view (for BENCH rows and metrics snapshots)."""
+        return {"pwb": dict(self.pwb), "pfence": dict(self.pfence)}
 
     def clear(self) -> None:
         self.pwb.clear()

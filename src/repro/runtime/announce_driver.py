@@ -135,9 +135,18 @@ class MultiThreadDriver:
         if not acts:
             return None
         act = acts[int(self.rng.integers(len(acts)))]
+        obs = self.rt.obs
         if act[0] == "announce":
             t = act[1]
             token, keys, ops, params = self.pending[t][0]
+            if obs.enabled:  # interleaving trace: the scheduler's pick,
+                obs.event(  # recorded BEFORE the action so a crash inside
+                    "sched",  # it still shows what was being attempted
+                    action="announce",
+                    thread=t,
+                    token=token,
+                    choices=len(acts),
+                )
             # announce may force-retire in-flight chains (slot reclaim, depth
             # > 2); pop the batch only after it lands so a crash inside the
             # announce leaves it resubmittable
@@ -146,6 +155,13 @@ class MultiThreadDriver:
             self._ready[t] = token
             self.trace.append(("announce", t, token))
         else:
+            if obs.enabled:
+                obs.event(
+                    "sched",
+                    action="combine",
+                    ready=sorted(self._ready),
+                    choices=len(acts),
+                )
             self.rt.last_dispatch = []
             self.rt.combine_phase()
             groups = [tuple(g) for g in self.rt.last_dispatch]

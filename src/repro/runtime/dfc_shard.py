@@ -131,6 +131,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.dfc_checkpoint import BOT, DFCCheckpointManager, SimFS
+from repro.obs import (
+    EV_ANNOUNCE,
+    EV_DISPATCH,
+    EV_DRAIN,
+    EV_EPOCH,
+    EV_RECOVER,
+    EV_RESHARD,
+    EV_RETIRE,
+    EV_VERDICT,
+    NULL_OBS,
+)
 from repro.core.jax_dfc import (
     KIND_CODES,
     OP_NONE,
@@ -708,6 +719,7 @@ class ShardedDFCRuntime:
         depth: Optional[int] = None,
         chain: int = 1,
         ring_slots: int = 2048,
+        obs=None,
     ):
         kinds = [kind] * n_shards if isinstance(kind, str) else list(kind)
         if len(kinds) != n_shards:
@@ -779,6 +791,24 @@ class ShardedDFCRuntime:
         else:
             self.state = state
         self.meta = _init_meta(kinds) if meta is None else meta
+        # Observability (repro.obs): disabled no-op observer by default.  A
+        # live observer is shared with the SimFS so persistence hooks, span
+        # events, and metrics land in ONE timeline; the hooks run after the
+        # counters/injector/durable work, so tracing cannot perturb the
+        # protocol (the obs parity test pins this).
+        self.obs = obs if obs is not None else NULL_OBS
+        if fs is not None and self.obs.enabled:
+            fs.obs = self.obs
+            self.obs.event(
+                "topology",
+                kinds=list(kinds),
+                n_shards=n_shards,
+                n_buckets=self.n_buckets,
+                capacity=capacity,
+                lanes=lanes,
+                depth=self.depth,
+                chain=self.chain,
+            )
 
     # ----------------------------------------------------- state as groups
     @property
@@ -919,11 +949,23 @@ class ShardedDFCRuntime:
             "params": [float(p) for p in np.asarray(params)],
             "val": BOT,
         }
-        self.fs.write(self._ann_path(thread, n_op), json.dumps(ann).encode())
-        self.fs.fsync([self._ann_path(thread, n_op)])
-        self.fs.write(self._valid_path(thread), str(n_op).encode())
-        self.fs.fsync([self._valid_path(thread)])
-        self.fs.write(self._valid_path(thread), str(2 | n_op).encode())  # MSB
+        self.fs.write(
+            self._ann_path(thread, n_op), json.dumps(ann).encode(), tag="announce"
+        )
+        self.fs.fsync([self._ann_path(thread, n_op)], tag="announce")
+        self.fs.write(self._valid_path(thread), str(n_op).encode(), tag="announce")
+        self.fs.fsync([self._valid_path(thread)], tag="announce")
+        self.fs.write(
+            self._valid_path(thread), str(2 | n_op).encode(), tag="announce"
+        )  # MSB
+        if self.obs.enabled:
+            self.obs.event(
+                EV_ANNOUNCE,
+                thread=thread,
+                token=token,
+                slot=n_op,
+                n=len(ann["ops"]),
+            )
         return n_op, ann
 
     def _register_live(
@@ -1024,14 +1066,17 @@ class ShardedDFCRuntime:
             rel = f"{slot}/leaf_{i}.npy"
             digest = hashlib.blake2b(data, digest_size=16).digest()
             if self._elide.get(rel) != digest:
-                self.fs.write(rel, data)
+                self.fs.write(rel, data, tag="slot")
                 files.append(rel)
                 self._elide_pending[rel] = digest
+                self.obs.metrics.counter("elision_miss", shard=s)
+            else:
+                self.obs.metrics.counter("elision_hit", shard=s)
             meta["leaves"].append(
                 {"file": f"leaf_{i}.npy", "shape": list(arr.shape), "dtype": str(arr.dtype)}
             )
         rel = f"{slot}/meta.json"
-        self.fs.write(rel, json.dumps(meta).encode())
+        self.fs.write(rel, json.dumps(meta).encode(), tag="slot")
         files.append(rel)
         return files
 
@@ -1214,10 +1259,22 @@ class ShardedDFCRuntime:
             for info in batches
             if info["threads"]
         ]
+        if self.obs.enabled:
+            self.obs.event(
+                EV_DISPATCH,
+                batches=[
+                    [[seg["thread"], seg["token"]] for seg in info["threads"]]
+                    for info in batches
+                ],
+                inflight=len(self._inflight),
+            )
+            self.obs.metrics.gauge("inflight_chains", len(self._inflight))
         # stage 2: retire the oldest chains, in commit order, while the
         # device combines — keep at most depth-1 chains in flight
         while len(self._inflight) > self.depth - 1:
             self._retire(self._inflight.popleft())
+        if self.obs.enabled:
+            self.obs.observe_fabric(self)
         return [seg["thread"] for info in batches for seg in info["threads"]]
 
     def _retire(self, fl: Dict[str, Any]) -> List[int]:
@@ -1268,16 +1325,27 @@ class ShardedDFCRuntime:
                     "repoch": fl["repoch"],
                 }
                 rel = self._ann_path(seg["thread"], seg["slot"])
-                self.fs.write(rel, json.dumps(ann).encode())
+                self.fs.write(rel, json.dumps(ann).encode(), tag="resp")
                 files.append(rel)
                 retired.append(seg["thread"])
-            self.fs.fsync(files)  # ONE pfence for slots + responses
+            self.fs.fsync(files, tag="phase")  # ONE pfence for slots + responses
             self._promote_elision()
             for s in touched:  # per-shard two-increment epoch commit
                 e = int(e_b[s])
-                self.fs.write(self._epoch_path(s), str(e - 1).encode())
-                self.fs.fsync([self._epoch_path(s)])
-                self.fs.write(self._epoch_path(s), str(e).encode())
+                self.fs.write(self._epoch_path(s), str(e - 1).encode(), tag="epoch")
+                self.fs.fsync([self._epoch_path(s)], tag="epoch")
+                self.fs.write(self._epoch_path(s), str(e).encode(), tag="epoch")
+                self.obs.event(EV_EPOCH, shard=s, epoch=e)
+            if self.obs.enabled:
+                self.obs.event(
+                    EV_RETIRE,
+                    batch=b,
+                    threads=[
+                        [seg["thread"], seg["token"]] for seg in info["threads"]
+                    ],
+                    touched=touched,
+                    files=len(files),
+                )
             prev_epochs = e_b
         return retired
 
@@ -1408,6 +1476,15 @@ class ShardedDFCRuntime:
             phase_axis=phase_axis,
         )
         self.last_dispatch = [((t, tok),) for t, tok, *_ in batches]
+        if self.obs.enabled:
+            self.obs.event(
+                EV_DISPATCH,
+                fused=True,
+                k_phases=k_phases,
+                pad=pad,
+                phase_axis=phase_axis,
+                batches=[[t, tok] for t, tok, *_ in batches],
+            )
 
         # fetch the intent log: one device->host transfer per stacked leaf
         resp_np = np.asarray(resp)
@@ -1459,17 +1536,29 @@ class ShardedDFCRuntime:
                 "repoch": self.r_epoch,
             }
             rel = self._ann_path(thread, slot)
-            self.fs.write(rel, json.dumps(ann).encode())
+            self.fs.write(rel, json.dumps(ann).encode(), tag="resp")
             files.append(rel)
-            self.fs.fsync(files)  # ONE pfence for slots + responses
+            self.fs.fsync(files, tag="phase")  # ONE pfence for slots + responses
             self._promote_elision()
             for s in touched:  # per-shard two-increment epoch commit
                 e = int(e_j[s])
-                self.fs.write(self._epoch_path(s), str(e - 1).encode())
-                self.fs.fsync([self._epoch_path(s)])
-                self.fs.write(self._epoch_path(s), str(e).encode())
+                self.fs.write(self._epoch_path(s), str(e - 1).encode(), tag="epoch")
+                self.fs.fsync([self._epoch_path(s)], tag="epoch")
+                self.fs.write(self._epoch_path(s), str(e).encode(), tag="epoch")
+                self.obs.event(EV_EPOCH, shard=s, epoch=e)
+            if self.obs.enabled:
+                self.obs.event(
+                    EV_DRAIN,
+                    phase=j,
+                    thread=thread,
+                    token=token,
+                    touched=touched,
+                    files=len(files),
+                )
             prev_epochs = e_j
             out_records.append(dict(ann["val"], thread=thread, token=token))
+        if self.obs.enabled:
+            self.obs.observe_fabric(self)
         return out_records
 
     def read_responses(
@@ -1549,17 +1638,25 @@ class ShardedDFCRuntime:
         pre-written shard slots), ONE pfence, then the rEpoch two-increment
         commit — the transaction's commit point."""
         target = self.r_epoch + 2
-        self.fs.write(self._INTENT_PATH, json.dumps(intent).encode())
-        self.fs.fsync([self._INTENT_PATH])
+        self.fs.write(self._INTENT_PATH, json.dumps(intent).encode(), tag="routing")
+        self.fs.fsync([self._INTENT_PATH], tag="routing")
         slot = self._routing_slot(self.r_epoch, nxt=True)
         self.fs.write(
             slot,
             json.dumps(self._routing_record(target, new_table, new_kinds)).encode(),
+            tag="routing",
         )
-        self.fs.fsync(shard_files + [slot])
-        self.fs.write(self._REPOCH_PATH, str(target - 1).encode())
-        self.fs.fsync([self._REPOCH_PATH])
-        self.fs.write(self._REPOCH_PATH, str(target).encode())
+        self.fs.fsync(shard_files + [slot], tag="routing")
+        self.fs.write(self._REPOCH_PATH, str(target - 1).encode(), tag="routing")
+        self.fs.fsync([self._REPOCH_PATH], tag="routing")
+        self.fs.write(self._REPOCH_PATH, str(target).encode(), tag="routing")
+        if self.obs.enabled:
+            self.obs.event(
+                EV_RESHARD,
+                op=intent.get("op"),
+                target_repoch=target,
+                n_shards=len(new_kinds),
+            )
 
     def split_shard(self, donor: int) -> int:
         """Split a hot shard: move half of the donor's buckets to a NEW empty
@@ -1666,9 +1763,10 @@ class ShardedDFCRuntime:
             self._commit_routing(intent, new_table, self.kinds, files)
             self._promote_elision()
             for sid, tgt in ((src, t_src), (dst, t_dst)):
-                self.fs.write(self._epoch_path(sid), str(tgt - 1).encode())
-                self.fs.fsync([self._epoch_path(sid)])
-                self.fs.write(self._epoch_path(sid), str(tgt).encode())
+                self.fs.write(self._epoch_path(sid), str(tgt - 1).encode(), tag="epoch")
+                self.fs.fsync([self._epoch_path(sid)], tag="epoch")
+                self.fs.write(self._epoch_path(sid), str(tgt).encode(), tag="epoch")
+                self.obs.event(EV_EPOCH, shard=sid, epoch=tgt)
             self.fs.delete(self._INTENT_PATH)
 
         self._set_shard_state(src, src_new)
@@ -1694,6 +1792,7 @@ class ShardedDFCRuntime:
         depth: Optional[int] = None,
         chain: int = 1,
         ring_slots: int = 2048,
+        obs=None,
     ) -> Tuple["ShardedDFCRuntime", Dict[int, Dict[str, Any]]]:
         """Recover the fabric + per-thread/per-op detectability report.
 
@@ -1728,13 +1827,21 @@ class ShardedDFCRuntime:
         history (its durable responses are readable via
         ``read_responses(t, token=...)``) and is not reported.
         """
+        # Attach the observer FIRST so recovery's own repair writes join the
+        # durable timeline the pre-crash incarnation left behind (the
+        # recorder continues the sidecar's sequence numbering).
+        obs = obs if obs is not None else NULL_OBS
+        if obs.enabled:
+            fs.obs = obs
+            obs.event(EV_RECOVER, stage="begin")
+
         # --- routing epoch: round odd up (finish the second increment)
         raw = fs.read(cls._REPOCH_PATH)
         repoch = int(raw.decode()) if raw else 0
         if repoch % 2 == 1:
             repoch += 1
-            fs.write(cls._REPOCH_PATH, str(repoch).encode())
-            fs.fsync([cls._REPOCH_PATH])
+            fs.write(cls._REPOCH_PATH, str(repoch).encode(), tag="recovery")
+            fs.fsync([cls._REPOCH_PATH], tag="recovery")
 
         # --- adopt the committed routing record, if any
         kinds = [kind] * n_shards if isinstance(kind, str) else list(kind)
@@ -1761,8 +1868,8 @@ class ShardedDFCRuntime:
                     raw_e = fs.read(p)
                     cur = int(raw_e.decode()) if raw_e else 0
                     if cur < int(tgt):
-                        fs.write(p, str(int(tgt)).encode())
-                        fs.fsync([p])
+                        fs.write(p, str(int(tgt)).encode(), tag="recovery")
+                        fs.fsync([p], tag="recovery")
             else:
                 # aborted: routing and shard epochs are still pre-reshard;
                 # drop the half-written inactive routing slot
@@ -1774,6 +1881,7 @@ class ShardedDFCRuntime:
             backend=backend, fs=fs, n_threads=n_threads,
             n_buckets=n_buckets, table=table,
             pipeline=pipeline, depth=depth, chain=chain, ring_slots=ring_slots,
+            obs=obs,
         )
         rt.r_epoch = repoch
 
@@ -1786,8 +1894,8 @@ class ShardedDFCRuntime:
             epoch = rt._read_shard_epoch(s)
             if epoch % 2 == 1:  # crashed between the two increments
                 epoch += 1
-                fs.write(rt._epoch_path(s), str(epoch).encode())
-                fs.fsync([rt._epoch_path(s)])
+                fs.write(rt._epoch_path(s), str(epoch).encode(), tag="recovery")
+                fs.fsync([rt._epoch_path(s)], tag="recovery")
             committed_epochs[s] = epoch
             active = rt._slot_dir(s, epoch, nxt=False)
             inactive = rt._slot_dir(s, epoch, nxt=True)
@@ -1855,7 +1963,7 @@ class ShardedDFCRuntime:
             v = rt._read_valid(t)
             lsb = v & 1
             if (v >> 1) & 1 == 0:  # re-publish a half-written valid selector
-                fs.write(rt._valid_path(t), str(2 | lsb).encode())
+                fs.write(rt._valid_path(t), str(2 | lsb).encode(), tag="recovery")
             ann = rt._read_ann(t, lsb)
             if ann.get("token", -1) < 0:
                 report[t] = {"token": None, "ops": [], "prev": None}
@@ -1880,6 +1988,32 @@ class ShardedDFCRuntime:
                 rt._register_live(
                     t, lsb, ann["token"], ann["keys"], ann["ops"], ann["params"]
                 )
+        if obs.enabled:
+            # Extend the pre-crash durable trace prefix with the recovery
+            # timeline: one verdict event per announced thread, then flush
+            # the sidecar explicitly (a sanctioned host-side flush point —
+            # recovery has no pfence of its own to ride here).
+            for t, rep in report.items():
+                if rep["token"] is None:
+                    continue
+                obs.event(
+                    EV_VERDICT,
+                    thread=t,
+                    token=rep["token"],
+                    applied=[bool(v.applied) for v in rep["ops"]],
+                    prev_token=(rep["prev"] or {}).get("token"),
+                    prev_applied=[
+                        bool(v.applied) for v in (rep["prev"] or {}).get("ops", [])
+                    ],
+                )
+            obs.event(
+                EV_RECOVER,
+                stage="end",
+                repoch=repoch,
+                epochs=[int(e) for e in committed_epochs],
+                threads=sum(1 for r in report.values() if r["token"] is not None),
+            )
+            obs.flush()
         return rt, report
 
     def replay_pending(self, report: Dict[int, Dict[str, Any]]) -> List[int]:

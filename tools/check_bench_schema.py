@@ -1,0 +1,84 @@
+"""BENCH artifact schema check: rows without a ``meta`` block fail the build.
+
+Every ``BENCH_*.json`` at the repo root must be a list of row objects, each
+carrying the ``meta`` block ``benchmarks/bench_common.write_rows`` stamps
+(documented in docs/benchmarks.md):
+
+    meta.git_sha      str   commit the numbers were measured at
+    meta.backend      str   jax backend ("cpu", "gpu", "tpu")
+    meta.jax_version  str
+    meta.schedule     dict  the row's schedule shape + entry point
+
+Without it a BENCH row is an unattributable number — no way to tell which
+commit, stack, or schedule produced it — so CI runs this right after the
+smoke benches regenerate the artifacts (they are git-ignored).
+
+Run:  python tools/check_bench_schema.py  [paths...]
+(defaults to every BENCH_*.json at the repo root; exits non-zero listing
+every violation)
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+
+_META_KEYS = {
+    "git_sha": str,
+    "backend": str,
+    "jax_version": str,
+    "schedule": dict,
+}
+
+
+def check_file(path: Path) -> list:
+    """All schema violations in one artifact, as (path, message) pairs."""
+    bad = []
+    try:
+        rows = json.loads(path.read_text())
+    except Exception as e:
+        return [(path, f"unreadable JSON: {e!r}")]
+    if not isinstance(rows, list) or not rows:
+        return [(path, "expected a non-empty list of row objects")]
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            bad.append((path, f"row {i}: not an object"))
+            continue
+        meta = row.get("meta")
+        if not isinstance(meta, dict):
+            bad.append((path, f"row {i}: missing meta block"))
+            continue
+        for key, typ in _META_KEYS.items():
+            if not isinstance(meta.get(key), typ):
+                bad.append(
+                    (path, f"row {i}: meta.{key} missing or not {typ.__name__}")
+                )
+    return bad
+
+
+def main(argv=None) -> int:
+    paths = [Path(p) for p in (argv or sys.argv[1:])]
+    if not paths:
+        paths = sorted(_ROOT.glob("BENCH_*.json"))
+    if not paths:
+        print("no BENCH_*.json artifacts found (run the smoke benches first)",
+              file=sys.stderr)
+        return 1
+    bad = []
+    for p in paths:
+        bad.extend(check_file(p))
+    for path, msg in bad:
+        print(f"BAD {path.name}: {msg}")
+    if bad:
+        print(f"{len(bad)} schema violation(s)", file=sys.stderr)
+        return 1
+    n_rows = sum(len(json.loads(p.read_text())) for p in paths)
+    print(f"bench schema check: {len(paths)} artifact(s), {n_rows} rows OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

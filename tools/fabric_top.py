@@ -1,0 +1,169 @@
+"""fabric_top: render a per-shard activity table from a fabric trace.
+
+Reads a flight-recorder trace (``obs/trace.jsonl`` written by
+``FabricObserver``, or any JSONL of trace events) and aggregates it into
+the operator's view of the fabric:
+
+  * one row per shard — kind, last sampled backlog, last committed epoch,
+    commit count, and how many retired batches touched it;
+  * a persistence section — pwb/pfence counts by tag, straight from the
+    EV_PWB/EV_PFENCE events the SimFS hooks emit;
+  * a phase section — announcements per thread, dispatches (chained and
+    fused), drains, recovery verdicts.
+
+Run:  python tools/fabric_top.py <trace.jsonl>
+(``render`` is importable for tests and tools/obs_smoke.py.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from collections import Counter
+from pathlib import Path
+from typing import Any, Dict, List
+
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT / "src"))
+
+from repro.obs import (  # noqa: E402
+    EV_ANNOUNCE,
+    EV_DISPATCH,
+    EV_DRAIN,
+    EV_EPOCH,
+    EV_FABRIC,
+    EV_PFENCE,
+    EV_PWB,
+    EV_RECOVER,
+    EV_RESHARD,
+    EV_RETIRE,
+    EV_TOPOLOGY,
+    EV_VERDICT,
+    read_trace,
+)
+
+
+def aggregate(events: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Fold a trace into the summary ``render`` prints (kept separate so
+    tests can assert on numbers instead of formatting)."""
+    agg: Dict[str, Any] = {
+        "kinds": [],
+        "backlog": {},      # shard -> last sampled size
+        "epoch": {},        # shard -> last committed epoch
+        "commits": Counter(),  # shard -> EV_EPOCH count
+        "touches": Counter(),  # shard -> retired/drained batches touching it
+        "pwb": Counter(),   # tag -> count
+        "pfence": Counter(),
+        "announces": Counter(),  # thread -> count
+        "last_token": {},   # thread -> last announced token
+        "dispatches": 0,
+        "fused_dispatches": 0,
+        "drains": 0,
+        "retires": 0,
+        "reshards": 0,
+        "inflight": 0,
+        "verdicts": [],
+        "recover_stages": [],
+        "n_events": len(events),
+        "seq_range": (
+            (events[0]["seq"], events[-1]["seq"]) if events else (None, None)
+        ),
+    }
+    for e in events:
+        ev = e.get("ev")
+        if ev == EV_TOPOLOGY:
+            agg["kinds"] = list(e.get("kinds", []))
+        elif ev == EV_FABRIC:
+            for s, size in enumerate(e.get("backlog", [])):
+                agg["backlog"][s] = int(size)
+            for s, ep in enumerate(e.get("epochs", [])):
+                agg["epoch"][s] = int(ep)
+            agg["inflight"] = int(e.get("inflight", 0))
+        elif ev == EV_EPOCH:
+            s = int(e["shard"])
+            agg["commits"][s] += 1
+            agg["epoch"][s] = int(e["epoch"])
+        elif ev in (EV_RETIRE, EV_DRAIN):
+            agg["retires" if ev == EV_RETIRE else "drains"] += 1
+            for s in e.get("touched", []):
+                agg["touches"][int(s)] += 1
+        elif ev == EV_PWB:
+            agg["pwb"][e.get("tag") or "untagged"] += 1
+        elif ev == EV_PFENCE:
+            agg["pfence"][e.get("tag") or "untagged"] += 1
+        elif ev == EV_ANNOUNCE:
+            t = int(e["thread"])
+            agg["announces"][t] += 1
+            agg["last_token"][t] = int(e["token"])
+        elif ev == EV_DISPATCH:
+            agg["fused_dispatches" if e.get("fused") else "dispatches"] += 1
+        elif ev == EV_RESHARD:
+            agg["reshards"] += 1
+        elif ev == EV_VERDICT:
+            agg["verdicts"].append(
+                (int(e["thread"]), e.get("token"), e.get("applied", []))
+            )
+        elif ev == EV_RECOVER:
+            agg["recover_stages"].append(e.get("stage"))
+    return agg
+
+
+def render(events: List[Dict[str, Any]]) -> str:
+    a = aggregate(events)
+    shards = sorted(
+        set(a["backlog"]) | set(a["epoch"]) | set(a["commits"]) | set(a["touches"])
+        | set(range(len(a["kinds"])))
+    )
+    lines = [
+        f"fabric_top — {a['n_events']} events, seq "
+        f"{a['seq_range'][0]}..{a['seq_range'][1]}",
+        "",
+        f"{'shard':>5}  {'kind':<6} {'backlog':>7} {'epoch':>6} "
+        f"{'commits':>7} {'touches':>7}",
+    ]
+    for s in shards:
+        kind = a["kinds"][s] if s < len(a["kinds"]) else "?"
+        lines.append(
+            f"{s:>5}  {kind:<6} {a['backlog'].get(s, '-'):>7} "
+            f"{a['epoch'].get(s, '-'):>6} {a['commits'].get(s, 0):>7} "
+            f"{a['touches'].get(s, 0):>7}"
+        )
+    lines.append("")
+    pwb = " ".join(f"{t}={n}" for t, n in sorted(a["pwb"].items())) or "-"
+    pf = " ".join(f"{t}={n}" for t, n in sorted(a["pfence"].items())) or "-"
+    lines.append(f"pwb    ({sum(a['pwb'].values())}): {pwb}")
+    lines.append(f"pfence ({sum(a['pfence'].values())}): {pf}")
+    lines.append(
+        f"phases: dispatch={a['dispatches']} fused={a['fused_dispatches']} "
+        f"retire={a['retires']} drain={a['drains']} reshard={a['reshards']} "
+        f"inflight={a['inflight']}"
+    )
+    ann = " ".join(
+        f"t{t}={n}(tok {a['last_token'].get(t, '-')})"
+        for t, n in sorted(a["announces"].items())
+    ) or "-"
+    lines.append(f"announce: {ann}")
+    if a["recover_stages"]:
+        lines.append(f"recovery: stages={a['recover_stages']}")
+        for t, tok, applied in a["verdicts"]:
+            lines.append(
+                f"  verdict t{t} token={tok} "
+                f"applied={sum(bool(x) for x in applied)}/{len(applied)}"
+            )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="path to a trace JSONL (obs/trace.jsonl)")
+    args = ap.parse_args(argv)
+    events = read_trace(Path(args.trace))
+    if not events:
+        print(f"no events in {args.trace}", file=sys.stderr)
+        return 1
+    print(render(events))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
