@@ -77,6 +77,16 @@ R_ACK = 1
 R_VALUE = 2
 R_EMPTY = 3
 
+# announcement lanes (per-side combiners, ISSUE 8): every op code of a
+# two-sided structure belongs to exactly one combining lane — the HEAD lane
+# (the consuming side: queue dequeues, deque left-side ops) or the TAIL lane
+# (the producing side: queue enqueues, deque right-side ops).  Single-sided
+# structures (the stack) have one combiner and no lane split.  LANE_NONE
+# marks op codes with no lane (OP_NONE, or any op on a single-lane kind).
+LANE_NONE = -1
+LANE_HEAD = 0
+LANE_TAIL = 1
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -541,6 +551,13 @@ class StructSpec:
     ``init``/``combine``/``reference`` are the single-object entry points
     above; ``n_opcodes`` bounds the valid op-code range [0, n_opcodes) so a
     router can generate well-formed random workloads per structure.
+
+    ``op_lanes`` maps each op code to its announcement lane (per-side
+    combiners, ISSUE 8): ``LANE_HEAD`` for the consuming side (dequeue /
+    left-side deque ops), ``LANE_TAIL`` for the producing side (enqueue /
+    right-side deque ops), ``LANE_NONE`` for OP_NONE or any op on a
+    single-lane kind.  A kind is lane-splittable iff some op code maps to
+    each of the two lanes.
     """
 
     kind: str
@@ -549,11 +566,17 @@ class StructSpec:
     combine: Callable[..., Any]
     reference: Callable[..., Any]
     n_opcodes: int
+    op_lanes: Tuple[int, ...] = ()
+
+    @property
+    def lane_splittable(self) -> bool:
+        return LANE_HEAD in self.op_lanes and LANE_TAIL in self.op_lanes
 
 
 STRUCTS: Dict[str, StructSpec] = {
     "stack": StructSpec(
-        "stack", StackState, init_stack, combine, sequential_reference, 3
+        "stack", StackState, init_stack, combine, sequential_reference, 3,
+        op_lanes=(LANE_NONE, LANE_NONE, LANE_NONE),  # one combiner, no split
     ),
     "queue": StructSpec(
         "queue",
@@ -562,6 +585,8 @@ STRUCTS: Dict[str, StructSpec] = {
         combine_queue,
         sequential_reference_queue,
         3,
+        # OP_ENQ produces at the tail, OP_DEQ consumes at the head
+        op_lanes=(LANE_NONE, LANE_TAIL, LANE_HEAD),
     ),
     "deque": StructSpec(
         "deque",
@@ -570,8 +595,29 @@ STRUCTS: Dict[str, StructSpec] = {
         combine_deque,
         sequential_reference_deque,
         5,
+        # left-side ops (pushL/popL) ride the head lane, right-side ops
+        # (pushR/popR) the tail lane — the serving tier's arrivals
+        # (push_back) and admission pops (pop_front) land on opposite lanes
+        op_lanes=(LANE_NONE, LANE_HEAD, LANE_HEAD, LANE_TAIL, LANE_TAIL),
     ),
 }
+
+
+def lane_of_ops(kind: str, ops) -> jax.Array:
+    """Per-op announcement lane of a batch targeting ``kind`` shards
+    (device path): LANE_HEAD / LANE_TAIL / LANE_NONE, via the kind's
+    ``op_lanes`` table."""
+    table = jnp.asarray(STRUCTS[kind].op_lanes, jnp.int32)
+    o = jnp.asarray(ops, jnp.int32)
+    return table[jnp.clip(o, 0, table.shape[0] - 1)]
+
+
+def lane_of_ops_host(kind: str, ops) -> np.ndarray:
+    """NumPy twin of :func:`lane_of_ops` for the runtime's host-side lane
+    routing and oracles."""
+    table = np.asarray(STRUCTS[kind].op_lanes, np.int32)
+    o = np.asarray(ops, np.int32)
+    return table[np.clip(o, 0, table.shape[0] - 1)]
 
 
 def struct_kind(state) -> str:
@@ -632,11 +678,18 @@ class AnnounceRing:
     counter % slots.  Consumption bookkeeping (which spans are still live) is
     host-side: the ring itself is volatile staging, rebuilt from the durable
     announcement mirror on recovery.
+
+    ``lanes`` (ISSUE 8) is the per-slot announcement lane of the staged op —
+    LANE_HEAD / LANE_TAIL for ops targeting a lane-split shard, LANE_NONE
+    otherwise — so a per-side combine dispatch can drain one lane's ops
+    straight off the device ring (``ring_drain(..., lane=...)`` masks the
+    other lane's slots to OP_NONE without a host round-trip).
     """
 
     keys: jax.Array  # i32[slots]
     ops: jax.Array  # i32[slots]
     params: jax.Array  # f32[slots]
+    lanes: jax.Array  # i32[slots] — LANE_HEAD/LANE_TAIL/LANE_NONE per slot
     tail: jax.Array  # i32[] — absolute producer counter
 
 
@@ -657,27 +710,41 @@ def init_announce_ring(slots: int) -> AnnounceRing:
         keys=jnp.zeros((slots,), jnp.int32),
         ops=jnp.full((slots,), OP_NONE, jnp.int32),
         params=jnp.zeros((slots,), jnp.float32),
+        lanes=jnp.full((slots,), LANE_NONE, jnp.int32),
         tail=jnp.zeros((), jnp.int32),
     )
 
 
 @jax.jit
 def ring_announce(
-    ring: AnnounceRing, keys: jax.Array, ops: jax.Array, params: jax.Array
+    ring: AnnounceRing,
+    keys: jax.Array,
+    ops: jax.Array,
+    params: jax.Array,
+    lanes: jax.Array = None,
 ) -> AnnounceRing:
     """Land one announced batch at the ring tail (device-side scatter).
 
     The caller guarantees the span [tail, tail+n) does not overlap a span
     that is still awaiting its combining phase (host-side bookkeeping in the
-    runtime); the write itself is one masked scatter per field.
+    runtime); the write itself is one masked scatter per field.  ``lanes``
+    (optional) stages each op's announcement lane alongside it — the
+    lane-split runtime computes it once at announce time (op code x target
+    shard kind) so per-side drains never recompute routing.
     """
     n = ops.shape[0]
     slots = ring.keys.shape[0]
     pos = (ring.tail + jnp.arange(n)) % slots
+    lane_col = (
+        jnp.full((n,), LANE_NONE, jnp.int32)
+        if lanes is None
+        else jnp.asarray(lanes).astype(jnp.int32)
+    )
     return AnnounceRing(
         keys=ring.keys.at[pos].set(jnp.asarray(keys).astype(jnp.int32)),
         ops=ring.ops.at[pos].set(jnp.asarray(ops).astype(jnp.int32)),
         params=ring.params.at[pos].set(jnp.asarray(params).astype(jnp.float32)),
+        lanes=ring.lanes.at[pos].set(lane_col),
         tail=ring.tail + n,
     )
 
@@ -697,34 +764,57 @@ def _ring_gather(ring: AnnounceRing, idx: jax.Array):
     return ring.keys[idx], ring.ops[idx], ring.params[idx]
 
 
-def ring_drain(ring: AnnounceRing, start: int, n: int):
+@functools.partial(jax.jit, static_argnames=("lane",))
+def _ring_gather_lane(ring: AnnounceRing, idx: jax.Array, lane: int):
+    keys, ops, params = _ring_gather(ring, idx)
+    keep = ring.lanes[idx] == lane
+    return keys, jnp.where(keep, ops, OP_NONE), params
+
+
+def ring_drain(ring: AnnounceRing, start: int, n: int, lane: int = None):
     """Read span [start, start+n) of the ring as device arrays (the combine
     path's view; no host round-trip).  ``start`` is the absolute counter the
-    span was announced at."""
+    span was announced at.  With ``lane``, ops staged on the OTHER lane are
+    masked to OP_NONE (lane positions are preserved, so per-op bookkeeping
+    still lines up with the unfiltered span) — the per-side combine
+    dispatch's view of a mixed span."""
     slots = int(ring.keys.shape[0])
     idx = (start + np.arange(n, dtype=np.int64)) % slots
-    return _ring_gather(ring, jnp.asarray(idx, jnp.int32))
+    if lane is None:
+        return _ring_gather(ring, jnp.asarray(idx, jnp.int32))
+    return _ring_gather_lane(ring, jnp.asarray(idx, jnp.int32), int(lane))
 
 
 def ring_announce_phases(
-    ring: AnnounceRing, keys: jax.Array, ops: jax.Array, params: jax.Array
+    ring: AnnounceRing,
+    keys: jax.Array,
+    ops: jax.Array,
+    params: jax.Array,
+    lanes: jax.Array = None,
 ) -> AnnounceRing:
     """Land a whole PHASE SCHEDULE — ``[K, pad]`` per-phase batches, padded
     with ``OP_NONE`` lanes — at the ring tail in ONE device scatter.  The
     K phases occupy the contiguous span ``[tail, tail + K*pad)``; the fused
     phase loop reads them back with :func:`ring_drain_phases`."""
     return ring_announce(
-        ring, keys.reshape(-1), ops.reshape(-1), params.reshape(-1)
+        ring,
+        keys.reshape(-1),
+        ops.reshape(-1),
+        params.reshape(-1),
+        None if lanes is None else lanes.reshape(-1),
     )
 
 
-def ring_drain_phases(ring: AnnounceRing, start: int, k: int, pad: int):
+def ring_drain_phases(
+    ring: AnnounceRing, start: int, k: int, pad: int, lane: int = None
+):
     """Consume the announcement ring ACROSS A PHASE AXIS: read the span of
     ``k`` phases of ``pad`` lanes each announced at absolute position
     ``start`` back as ``[K, pad]`` device arrays — the fused K-phase
     dispatch's input view, one gather for the whole schedule instead of one
-    per phase."""
-    keys, ops, params = ring_drain(ring, start, k * pad)
+    per phase.  ``lane`` filters to one announcement lane, as in
+    :func:`ring_drain`."""
+    keys, ops, params = ring_drain(ring, start, k * pad, lane=lane)
     return (
         keys.reshape(k, pad), ops.reshape(k, pad), params.reshape(k, pad)
     )

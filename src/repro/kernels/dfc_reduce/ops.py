@@ -303,6 +303,50 @@ def _one_sharded_combine(kind: str, backend: str, state, ops, params):
     return SHARDED_COMBINE_STEPS[kind](state, ops, params, backend=backend)
 
 
+# ---------------------------------------------------- per-side lanes (ISSUE 8)
+def _lane_mask_ops(kind: str, ops, lane: int):
+    """Mask a per-shard announcement matrix down to ONE announcement lane:
+    ops whose side is not ``lane`` become OP_NONE (positions preserved, so
+    per-op bookkeeping lines up with the unmasked batch)."""
+    from repro.core.jax_dfc import lane_of_ops
+
+    return jnp.where(lane_of_ops(kind, ops) == lane, ops, OP_NONE)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "lane", "backend"))
+def dfc_lane_combine_step(state, ops, params, *, kind, lane, backend="jnp"):
+    """One PER-SIDE combining phase: combine only the ``lane``-side ops
+    (LANE_HEAD = consuming side, LANE_TAIL = producing side) of each shard's
+    announcement matrix, leaving the opposite side's ops untouched
+    (their response lanes come back R_NONE).
+
+    This is the device half of a split (two-lane) shard's ordinary phase:
+    head-lane traffic moves only the head/left counter, tail-lane traffic
+    only the values region and the tail/right counter, so the durable
+    commit behind each dispatch persists just its own side.  Works for the
+    vmap (``jnp``) and Pallas-grid (``ref`` / ``pallas`` / ``pallas_tpu``)
+    paths via the shared ``_one_sharded_combine`` dispatch.
+    """
+    masked = _lane_mask_ops(kind, ops, lane)
+    return _one_sharded_combine(kind, backend, state, masked, params)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "backend"))
+def dfc_handoff_combine_step(state, ops, params, *, kind, backend="jnp"):
+    """The DRAINED-QUEUE HANDOFF step: both lanes' ops of a split shard in
+    ONE combining phase, reusing the existing elimination math unchanged —
+    when the head lane's pops outrun the tail lane's committed pushes, the
+    two sides synchronize here (queue: drained two-sided elimination pairs
+    deq rank size+k with enq rank k; deque: same-side elimination), and the
+    runtime commits BOTH lane epochs atomically behind this dispatch.
+
+    Semantically identical to the one-lane combine of the same batch (that
+    is the point: a handoff phase must linearize exactly like the unsplit
+    fabric would), for both the vmap and Pallas-grid paths.
+    """
+    return _one_sharded_combine(kind, backend, state, ops, params)
+
+
 @functools.partial(jax.jit, static_argnames=("kind", "backend", "unroll"))
 def dfc_sharded_multi_combine_step(
     state, ops, params, *, kind, backend="ref", unroll=1

@@ -101,6 +101,7 @@ class RequestQueueTier:
         pipeline: bool = False,
         depth: Optional[int] = None,
         priority: bool = False,
+        split_lanes: bool = False,
         obs=None,
         _seed_slots: bool = True,
         _rt: Optional[ShardedDFCRuntime] = None,
@@ -116,6 +117,11 @@ class RequestQueueTier:
             fs = SimFS(Path(tempfile.mkdtemp(prefix="dfc_serve_tier_")))
         self.durable = durable
         self.pipeline = pipeline or (depth or 1) > 1
+        # per-side combiners (``split_lanes=True``): arrivals (enqueues /
+        # back-pushes) ride each request shard's TAIL lane while admission
+        # pops ride its HEAD lane, each with its own epoch and commit — the
+        # op->lane routing in the runtime makes this automatic
+        self.split_lanes = split_lanes
         # ``_rt`` lets ``recover`` mount an already-recovered fabric instead
         # of building a throwaway one just to replace it
         self.rt = _rt if _rt is not None else ShardedDFCRuntime(
@@ -124,6 +130,7 @@ class RequestQueueTier:
             n_buckets=n_buckets,
             table=self._default_table(n_queues, n_buckets),
             pipeline=pipeline, depth=depth,
+            split_lanes=split_lanes,
             obs=obs,
         )
         # the tier and the fabric share ONE observer: per-request lifecycle
@@ -496,6 +503,7 @@ class RequestQueueTier:
         reshard_backlog: Optional[int] = None,
         pipeline: bool = False,
         depth: Optional[int] = None,
+        split_lanes: bool = False,
         obs=None,
     ) -> Tuple["RequestQueueTier", Dict[str, Any]]:
         """Recover a durable tier after a crash.
@@ -536,13 +544,15 @@ class RequestQueueTier:
             table=cls._default_table(n_queues, n_buckets),
             pipeline=pipeline,
             depth=depth,
+            split_lanes=split_lanes,
             obs=obs,
         )
         tier = cls(
             n_queues=n_queues, slots=0, capacity=capacity, lanes=lanes,
             durable=True, fs=fs, reshard_backlog=reshard_backlog,
             n_buckets=n_buckets, pipeline=pipeline, depth=depth,
-            priority=priority, obs=obs, _seed_slots=False, _rt=rt,
+            priority=priority, split_lanes=rt.split_lanes, obs=obs,
+            _seed_slots=False, _rt=rt,
         )
         tier.n_queues = sum(
             1 for k in rt.kinds if k in ("queue", "deque")
@@ -641,6 +651,10 @@ def main():
     ap.add_argument("--priority", action="store_true",
                     help="deque request shards: high-priority sessions jump "
                          "the line (front-of-queue push)")
+    ap.add_argument("--split-lanes", action="store_true",
+                    help="per-side combiners: arrivals ride each request "
+                         "shard's tail lane, admission pops its head lane, "
+                         "with independent epochs and commits")
     ap.add_argument("--high-every", type=int, default=0,
                     help="with --priority: every Nth session arrives "
                          "high-priority (0 = none)")
@@ -721,6 +735,7 @@ def main():
         pipeline=args.pipeline,
         depth=depth,
         priority=args.priority,
+        split_lanes=args.split_lanes,
         obs=obs,
     )
     served_before = _read_served(state_dir) if state_dir else []
@@ -868,6 +883,12 @@ def main():
         f"rejected={tier.stats['rejected']} splits={tier.stats['splits']} "
         f"backlog={tier.backlog()}"
     )
+    if tier.split_lanes:
+        ls = tier.rt.lane_stats() or {}
+        pairs = " ".join(
+            f"s{s}=[{e[0]},{e[1]}]" for s, e in sorted(ls.get("epochs", {}).items())
+        )
+        print(f"split lanes: head/tail epochs {pairs}")
     p = tier.persistence_stats()
     if p:
         print(f"pwb/op: {p['pwb_per_op']:.2f}  pfence/op: {p['pfence_per_op']:.2f}")

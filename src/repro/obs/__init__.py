@@ -155,9 +155,34 @@ class FabricObserver(NullObserver):
             spans = getattr(rt, "_ring_spans", {})
             head = min((s0 for s0, _ in spans.values()), default=tail)
             self.metrics.gauge("ring_occupancy", tail - head)
+        # per-side combiners (split-lane fabrics): committed [eH, eT] pairs
+        # and announced-but-uncombined backlog per (shard, lane)
+        lane_stats = None
+        getter = getattr(rt, "lane_stats", None)
+        if callable(getter):
+            lane_stats = getter()
+        extra = {}
+        if lane_stats:
+            for s, pair in lane_stats.get("epochs", {}).items():
+                self.metrics.gauge("lane_epoch_head", int(pair[0]), shard=s)
+                self.metrics.gauge("lane_epoch_tail", int(pair[1]), shard=s)
+            for s, bl in lane_stats.get("backlog", {}).items():
+                self.metrics.gauge("lane_backlog_head", int(bl[0]), shard=s)
+                self.metrics.gauge("lane_backlog_tail", int(bl[1]), shard=s)
+            extra = {
+                "lane_epochs": {
+                    str(s): [int(e) for e in pair]
+                    for s, pair in lane_stats.get("epochs", {}).items()
+                },
+                "lane_backlog": {
+                    str(s): [int(x) for x in bl]
+                    for s, bl in lane_stats.get("backlog", {}).items()
+                },
+            }
         self.event(
             EV_FABRIC,
             backlog=[int(x) for x in sizes],
             epochs=[int(e) for e in epochs],
             inflight=inflight,
+            **extra,
         )

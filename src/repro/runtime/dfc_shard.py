@@ -144,11 +144,15 @@ from repro.obs import (
 )
 from repro.core.jax_dfc import (
     KIND_CODES,
+    LANE_HEAD,
+    LANE_NONE,
+    LANE_TAIL,
     OP_NONE,
     PhaseIntents,
     R_NONE,
     STRUCTS,
     init_announce_ring,
+    lane_of_ops_host,
     init_sharded,
     ring_announce,
     ring_announce_phases,
@@ -169,6 +173,39 @@ from repro.kernels.dfc_reduce.ops import (
 # runtime-level response kind: op rejected because its shard's announcement
 # lanes were full this phase — never applied, safe to re-announce.
 R_OVERFLOW = 4
+
+# ---------------------------------------------------------------------------
+# Per-side combiners (ISSUE 8, after Persistent Software Combining 2107.03492
+# and Highly-Efficient Persistent FIFO Queues 2402.17674): with
+# ``split_lanes=True`` every queue/deque shard commits through TWO
+# announcement lanes — a HEAD lane (consuming side: OP_DEQ / OP_POPL,
+# plus OP_PUSHL which also lives on the deque's left end) and a TAIL lane
+# (producing side: OP_ENQ / OP_PUSHR / OP_POPR) — each with its own durable
+# record, its own epoch, and its own one-pfence-per-phase commit, so
+# opposite-side traffic never shares a persistence barrier:
+#
+#   shard_{s}/laneH{0,1}/rec.json [+ values.npy]   head-lane slots
+#   shard_{s}/laneT{0,1}/rec.json + values.npy     tail-lane slots
+#   shard_{s}/cEpoch = "[eH, eT]"                  composite epoch pair
+#
+# Each lane's slot parity follows ITS OWN epoch; the composite cEpoch file
+# makes the pair atomic (SimFS file writes are all-or-nothing), which is what
+# the drained-queue HANDOFF commit relies on: a phase that mixes both sides —
+# or a head-side phase that drains the queue to empty, i.e. the moment the
+# head lane's pops catch the tail lane's pushes — commits BOTH lanes in one
+# two-increment step ([eH+1, eT+1] -> fsync -> [eH+2, eT+2]), the same
+# discipline resharding uses, so recovery resolves a crash on either side of
+# it (before the fsync: both lanes roll back together; after: both round up).
+#
+# ``values`` ownership per lane: the queue's head lane never writes values
+# (pops only advance the head counter), so its record is a single tiny JSON —
+# that asymmetry is the pwb/op win the jitter test pins.  The deque's LEFT
+# side pushes into values too, so both deque lane records carry values (with
+# dirty-leaf elision); recovery picks the values of the lane whose record
+# carries the larger ``phases`` counter (a per-shard commit sequence number),
+# which is the chronologically last committed copy.
+_LANE_WRITES_VALUES = {"queue": (False, True), "deque": (True, True)}
+_LANE_TAGS = ("H", "T")  # indexed by LANE_HEAD / LANE_TAIL
 
 
 class StaleTokenError(LookupError):
@@ -719,6 +756,7 @@ class ShardedDFCRuntime:
         depth: Optional[int] = None,
         chain: int = 1,
         ring_slots: int = 2048,
+        split_lanes: bool = False,
         obs=None,
     ):
         kinds = [kind] * n_shards if isinstance(kind, str) else list(kind)
@@ -748,6 +786,14 @@ class ShardedDFCRuntime:
             raise ValueError("table must have n_buckets entries")
         self.r_epoch = 0  # routing epoch (even at rest)
         self._reshard_seq = 0
+        # per-side combiners (ISSUE 8): when enabled, queue/deque shards
+        # commit through independent head/tail lanes.  ``lane_epochs`` is the
+        # host mirror of each split shard's committed ``[eH, eT]`` pair (even
+        # at rest), advanced strictly in commit order by the retire/drain
+        # paths; the device epoch stays free-running (+2 per touched phase)
+        # and recovery rebuilds it as eH + eT.
+        self.split_lanes = bool(split_lanes)
+        self.lane_epochs: Dict[int, List[int]] = {}
         # --- pipelined durable path (ISSUE 4/5): device-side announcement
         # ring, a depth-D ring of in-flight chains, dirty-leaf persist elision.
         # ``depth`` is the pipeline depth: a combine_phase dispatches a fresh
@@ -808,6 +854,7 @@ class ShardedDFCRuntime:
                 lanes=lanes,
                 depth=self.depth,
                 chain=self.chain,
+                split_lanes=self.split_lanes,
             )
 
     # ----------------------------------------------------- state as groups
@@ -986,11 +1033,21 @@ class ShardedDFCRuntime:
             spans = [v for t, v in self._ring_spans.items() if t != thread]
             oldest = min((s0 for s0, _ in spans), default=self._ring_tail)
             if ring_has_room(slots, self._ring_tail, oldest, n):
+                # split-lane fabrics annotate each ring slot with its op's
+                # announcement lane (head/tail by target-shard structure),
+                # so lane-filtered drains (``ring_drain(..., lane=...)``)
+                # can feed a per-side combine dispatch straight off device
+                lane_col = (
+                    jnp.asarray(self._op_lanes_host(ops, self.route_host(keys)))
+                    if self.split_lanes
+                    else None
+                )
                 self.ring = ring_announce(
                     self.ring,
                     jnp.asarray(keys.astype(np.int32)),
                     jnp.asarray(ops),
                     jnp.asarray(params),
+                    lane_col,
                 )
                 start = self._ring_tail
                 self._ring_tail += n
@@ -1086,6 +1143,224 @@ class ShardedDFCRuntime:
         self._elide.update(self._elide_pending)
         self._elide_pending.clear()
 
+    # ------------------------------------------- per-side lanes (ISSUE 8)
+    def _is_split(self, s: int) -> bool:
+        """Whether shard ``s`` commits through independent head/tail lanes."""
+        return self.split_lanes and STRUCTS[self.kinds[s]].lane_splittable
+
+    def _lane_epoch_pair(self, s: int) -> List[int]:
+        """Host mirror of split shard ``s``'s committed ``[eH, eT]``."""
+        return self.lane_epochs.setdefault(s, [0, 0])
+
+    def _op_lanes_host(self, ops, shards) -> np.ndarray:
+        """Per-op announcement lane (LANE_HEAD/LANE_TAIL, LANE_NONE for ops
+        on unsplit shards): an op's lane is defined by its TARGET shard's
+        structure, so the same op code can be head-side on one shard and
+        tail-side on another in a mixed fabric."""
+        ops = np.asarray(ops, np.int32)
+        shards = np.asarray(shards)
+        out = np.full(ops.shape, LANE_NONE, np.int32)
+        for j in range(ops.shape[0]):
+            s = int(shards[j]) if j < shards.shape[0] else -1
+            if ops[j] != OP_NONE and 0 <= s < self.n_shards and self._is_split(s):
+                out[j] = int(lane_of_ops_host(self.kinds[s], ops[j : j + 1])[0])
+        return out
+
+    def _lane_slot_dir(self, s: int, lane: int, lane_epoch: int, nxt: bool) -> str:
+        """A lane's alternating slot dir, parity from ITS OWN epoch."""
+        p = (lane_epoch // 2 + (1 if nxt else 0)) % 2
+        return f"shard_{s}/lane{_LANE_TAGS[lane]}{p}"
+
+    def _read_lane_epochs(self, s: int) -> List[int]:
+        """Durable ``[eH, eT]`` of a split shard (``[0, 0]`` if it never
+        committed).  The composite pair lives in ONE cEpoch file so the
+        handoff commit can advance both lanes atomically."""
+        raw = self.fs.read(self._epoch_path(s))
+        if not raw:
+            return [0, 0]
+        txt = raw.decode()
+        if txt.lstrip().startswith("["):
+            e = json.loads(txt)
+            return [int(e[0]), int(e[1])]
+        return [0, int(txt)]  # pre-split history: all commits were one-lane
+
+    def _lane_mode(
+        self, s: int, ops_host, kinds_host, shard_host, post_state
+    ) -> str:
+        """Classify one batch's phase on split shard ``s``: ``"head"`` /
+        ``"tail"`` (single-side — only that lane's epoch advances) or
+        ``"handoff"`` (both lanes commit atomically).
+
+        Handoff triggers when the batch mixes both sides, and ALSO when a
+        head-side phase leaves the structure DRAINED (head counter == tail
+        counter): that is the moment the head lane's pops have consumed
+        everything the tail lane ever published — the lanes are synchronized
+        by construction, and committing both epochs here gives recovery one
+        crash-consistent point to resolve either side against (the
+        drained-queue handoff of arXiv 2107.03492 / 2402.17674).
+        """
+        ops_a = np.asarray(ops_host, np.int32)
+        kinds_a = np.asarray(kinds_host)[: ops_a.shape[0]]
+        sel = (
+            (np.asarray(shard_host) == s)
+            & (ops_a != OP_NONE)
+            & (kinds_a != R_OVERFLOW)
+        )
+        lanes = lane_of_ops_host(self.kinds[s], ops_a[sel])
+        has_h = bool(np.any(lanes == LANE_HEAD))
+        has_t = bool(np.any(lanes == LANE_TAIL))
+        if has_h and has_t:
+            return "handoff"
+        ends = np.asarray(post_state.ends)
+        active = (int(post_state.epoch) // 2) % 2
+        drained = int(ends[active][0]) == int(ends[active][1])
+        if has_h and drained:
+            return "handoff"
+        return "head" if has_h else "tail"
+
+    def _persist_split_shard(
+        self, s: int, mode: str, lane_targets: Sequence[int], state, counters
+    ) -> List[str]:
+        """pwb split shard ``s``'s post-phase lane record(s) into their
+        inactive lane slots (the split twin of ``_persist_shard``).
+
+        Only the committing lane(s) write: a head-side queue phase writes ONE
+        tiny ``rec.json`` — no values leaf, no ends leaf, no epoch leaf —
+        which is where the two-lane pwb/op win comes from.  Lanes that own
+        values writes (``_LANE_WRITES_VALUES``) persist ``values.npy`` with
+        the same dirty-leaf digest elision as the one-lane path, so a phase
+        that only moved counters (drained elimination, window-served pops)
+        costs no values pwb in either layout.
+        """
+        one = state if state is not None else self._shard_state(s)
+        kind = self.kinds[s]
+        ends = np.asarray(one.ends)
+        active = (int(one.epoch) // 2) % 2
+        ctr = (int(ends[active][0]), int(ends[active][1]))  # (head, tail)
+        if counters is None:
+            counters = (
+                int(self.meta["phases"][s]),
+                int(self.meta["ops_combined"][s]),
+            )
+        commit_lanes = {
+            "head": (LANE_HEAD,),
+            "tail": (LANE_TAIL,),
+            "handoff": (LANE_HEAD, LANE_TAIL),
+        }[mode]
+        files: List[str] = []
+        for lane in commit_lanes:
+            target = int(lane_targets[lane])
+            sdir = self._lane_slot_dir(s, lane, target - 2, nxt=True)
+            if _LANE_WRITES_VALUES[kind][lane]:
+                arr = np.asarray(one.values)
+                buf = io.BytesIO()
+                np.save(buf, arr)
+                data = buf.getvalue()
+                rel = f"{sdir}/values.npy"
+                digest = hashlib.blake2b(data, digest_size=16).digest()
+                if self._elide.get(rel) != digest:
+                    self.fs.write(rel, data, tag="slot")
+                    files.append(rel)
+                    self._elide_pending[rel] = digest
+                    self.obs.metrics.counter("elision_miss", shard=s)
+                else:
+                    self.obs.metrics.counter("elision_hit", shard=s)
+            rec = {
+                "kind": kind,
+                "lane": _LANE_TAGS[lane],
+                "epoch": target,
+                "ctr": ctr[lane],
+                "phases": int(counters[0]),
+                "ops_combined": int(counters[1]),
+            }
+            rel = f"{sdir}/rec.json"
+            self.fs.write(rel, json.dumps(rec).encode(), tag="slot")
+            files.append(rel)
+        return files
+
+    def _commit_lane_epochs(
+        self, s: int, mode: str, lane_targets: Sequence[int]
+    ) -> None:
+        """Two-increment commit of a split shard's composite epoch pair:
+        write the pair with the advancing lane(s) odd, fsync (THE commit
+        point), publish the even pair unsynced.  Because the pair shares one
+        file, a handoff's two lanes commit or roll back together — recovery
+        rounds odd components up independently but a crash can never land
+        between them."""
+        tH, tT = int(lane_targets[LANE_HEAD]), int(lane_targets[LANE_TAIL])
+        adv_h = mode in ("head", "handoff")
+        adv_t = mode in ("tail", "handoff")
+        odd = [tH - 1 if adv_h else tH, tT - 1 if adv_t else tT]
+        path = self._epoch_path(s)
+        self.fs.write(path, json.dumps(odd).encode(), tag="epoch")
+        self.fs.fsync([path], tag="epoch")
+        self.fs.write(path, json.dumps([tH, tT]).encode(), tag="epoch")
+        self.lane_epochs[s] = [tH, tT]
+        self.obs.event(
+            EV_EPOCH, shard=s, epoch=tH + tT, lanes=[tH, tT], mode=mode
+        )
+
+    def _plan_lane_commit(
+        self, s: int, ops_host, kinds_host, shard_host, post_state
+    ) -> Tuple[str, List[int]]:
+        """One touched split shard's commit plan for one phase:
+        ``(mode, [eH', eT'])`` where the advancing lane(s) are the current
+        mirror + 2 and the quiescent lane keeps its committed epoch (so
+        per-op verdict targets on the quiescent lane are already met)."""
+        mode = self._lane_mode(s, ops_host, kinds_host, shard_host, post_state)
+        eH, eT = self._lane_epoch_pair(s)
+        tH = eH + 2 if mode in ("head", "handoff") else eH
+        tT = eT + 2 if mode in ("tail", "handoff") else eT
+        return mode, [tH, tT]
+
+    def _lane_targets_per_op(
+        self, ops_host, shard_host, plans: Dict[int, Tuple[str, List[int]]],
+        fallback_targets,
+    ) -> Tuple[List[int], List[int]]:
+        """Per-op ``(targets, lanes)`` for the durable response record.  An
+        op on a split shard targets ITS LANE's post-phase epoch (quiescent
+        lane ops of an untouched/other-side shard target the already
+        committed value); unsplit ops keep the scalar device-epoch target
+        with lane ``LANE_NONE``."""
+        ops_a = np.asarray(ops_host, np.int32)
+        shards_a = np.asarray(shard_host)
+        lanes = self._op_lanes_host(ops_a, shards_a)
+        targets: List[int] = []
+        for j in range(ops_a.shape[0]):
+            s = int(shards_a[j])
+            if lanes[j] == LANE_NONE:
+                targets.append(int(fallback_targets[j]))
+            else:
+                pair = (
+                    plans[s][1] if s in plans else self._lane_epoch_pair(s)
+                )
+                targets.append(int(pair[lanes[j]]))
+        return targets, [int(x) for x in lanes]
+
+    def lane_stats(self) -> Optional[Dict[str, Any]]:
+        """Per-lane observability snapshot (``None`` when lanes are off):
+        committed ``[eH, eT]`` per split shard plus the per-lane BACKLOG —
+        announced-but-uncombined ops bucketed by (shard, lane) — consumed by
+        ``obs.observe_fabric`` and ``tools/fabric_top.py``."""
+        if not self.split_lanes:
+            return None
+        epochs = {}
+        for s in range(self.n_shards):
+            if self._is_split(s):
+                epochs[s] = list(self._lane_epoch_pair(s))
+        backlog: Dict[int, List[int]] = {s: [0, 0] for s in epochs}
+        if self.fs is not None:
+            for t in self.ready_announcements():
+                rec = self._live.get(t)
+                if rec is None:
+                    continue
+                shards = self.route_host(rec["keys"])
+                lanes = self._op_lanes_host(rec["ops"], shards)
+                for j in range(lanes.shape[0]):
+                    if lanes[j] != LANE_NONE:
+                        backlog[int(shards[j])][int(lanes[j])] += 1
+        return {"epochs": epochs, "backlog": backlog}
+
     # ------------------------------------------------- durable routing layout
     _REPOCH_PATH = "routing/rEpoch"
     _INTENT_PATH = "reshard/intent.json"
@@ -1102,6 +1377,7 @@ class ShardedDFCRuntime:
             "n_buckets": self.n_buckets,
             "capacity": self.capacity,
             "lanes": self.lanes,
+            "split_lanes": self.split_lanes,
         }
 
     # --------------------------------------------------------- combine phase
@@ -1228,8 +1504,13 @@ class ShardedDFCRuntime:
                 np.concatenate([rec["keys"] for _, rec in g])
                 if g else np.zeros((0,), np.int64)
             )
+            host_ops = (
+                np.concatenate([rec["ops"] for _, rec in g])
+                if g else np.zeros((0,), np.int32)
+            )
             batches.append(
-                {"threads": segs, "shard": self.route_host(host_keys)}
+                {"threads": segs, "shard": self.route_host(host_keys),
+                 "ops": host_ops}
             )
 
         # stage 1: dispatch the chained device combine (async under jit)
@@ -1304,16 +1585,41 @@ class ShardedDFCRuntime:
             touched = [int(s) for s in np.nonzero(e_b != prev_epochs)[0]]
             if not info["threads"] and not touched:
                 continue  # chain-padding pass-through: no durable work
+            shard = info["shard"]
+            ops_host = info["ops"]
+            kinds_row = kinds[b][: len(ops_host)]
+            # per-side lanes: plan each touched split shard's commit (which
+            # lane(s) advance, or a handoff) from the batch's op mix + the
+            # post-phase counters, BEFORE any durable write of this phase
+            plans: Dict[int, Tuple[str, List[int]]] = {}
+            for s in touched:
+                if self._is_split(s):
+                    plans[s] = self._plan_lane_commit(
+                        s, ops_host, kinds_row, shard, batch_shard_state(b, s)
+                    )
             files: List[str] = []
             for s in touched:
-                files += self._persist_shard(
-                    s,
-                    int(e_b[s]),
-                    state=batch_shard_state(b, s),
-                    counters=(phases_cum[b][s], ops_cum[b][s]),
+                if s in plans:
+                    files += self._persist_split_shard(
+                        s, plans[s][0], plans[s][1],
+                        state=batch_shard_state(b, s),
+                        counters=(phases_cum[b][s], ops_cum[b][s]),
+                    )
+                else:
+                    files += self._persist_shard(
+                        s,
+                        int(e_b[s]),
+                        state=batch_shard_state(b, s),
+                        counters=(phases_cum[b][s], ops_cum[b][s]),
+                    )
+            fallback = e_b[shard]  # per-op commit target (its shard)
+            if self.split_lanes:
+                targets, op_lanes = self._lane_targets_per_op(
+                    ops_host, shard, plans, fallback
                 )
-            shard = info["shard"]
-            targets = e_b[shard]  # per-op commit target (its shard)
+            else:
+                targets = [int(e) for e in fallback]
+                op_lanes = None
             for seg in info["threads"]:
                 sl = slice(seg["off"], seg["off"] + seg["n"])
                 ann = self._read_ann(seg["thread"], seg["slot"])
@@ -1321,9 +1627,11 @@ class ShardedDFCRuntime:
                     "resp": [float(v) for v in resp[b][sl]],
                     "kinds": [int(k) for k in kinds[b][sl]],
                     "shards": [int(s) for s in shard[sl]],
-                    "targets": [int(e) for e in targets[sl]],
+                    "targets": list(targets[sl]),
                     "repoch": fl["repoch"],
                 }
+                if op_lanes is not None:
+                    ann["val"]["lanes"] = list(op_lanes[sl])
                 rel = self._ann_path(seg["thread"], seg["slot"])
                 self.fs.write(rel, json.dumps(ann).encode(), tag="resp")
                 files.append(rel)
@@ -1331,6 +1639,9 @@ class ShardedDFCRuntime:
             self.fs.fsync(files, tag="phase")  # ONE pfence for slots + responses
             self._promote_elision()
             for s in touched:  # per-shard two-increment epoch commit
+                if s in plans:
+                    self._commit_lane_epochs(s, plans[s][0], plans[s][1])
+                    continue
                 e = int(e_b[s])
                 self.fs.write(self._epoch_path(s), str(e - 1).encode(), tag="epoch")
                 self.fs.fsync([self._epoch_path(s)], tag="epoch")
@@ -1518,29 +1829,55 @@ class ShardedDFCRuntime:
             }
             e_j = epochs[j]
             touched = [int(s) for s in np.nonzero(e_j != prev_epochs)[0]]
+            shard = self.route_host(keys)
+            kinds_row = kinds_np[j][:n]
+            plans: Dict[int, Tuple[str, List[int]]] = {}
+            for s in touched:
+                if self._is_split(s):
+                    plans[s] = self._plan_lane_commit(
+                        s, ops, kinds_row, shard, phase_shard_state(j, s)
+                    )
             files: List[str] = []
             for s in touched:
-                files += self._persist_shard(
-                    s,
-                    int(e_j[s]),
-                    state=phase_shard_state(j, s),
-                    counters=(phases_cum[j][s], ops_cum[j][s]),
+                if s in plans:
+                    files += self._persist_split_shard(
+                        s, plans[s][0], plans[s][1],
+                        state=phase_shard_state(j, s),
+                        counters=(phases_cum[j][s], ops_cum[j][s]),
+                    )
+                else:
+                    files += self._persist_shard(
+                        s,
+                        int(e_j[s]),
+                        state=phase_shard_state(j, s),
+                        counters=(phases_cum[j][s], ops_cum[j][s]),
+                    )
+            fallback = e_j[shard]
+            if self.split_lanes:
+                targets, op_lanes = self._lane_targets_per_op(
+                    ops, shard, plans, fallback
                 )
-            shard = self.route_host(keys)
-            targets = e_j[shard]
+            else:
+                targets = [int(e) for e in fallback]
+                op_lanes = None
             ann["val"] = {
                 "resp": [float(v) for v in resp_np[j][:n]],
-                "kinds": [int(k) for k in kinds_np[j][:n]],
+                "kinds": [int(k) for k in kinds_row],
                 "shards": [int(s) for s in shard],
-                "targets": [int(e) for e in targets],
+                "targets": list(targets),
                 "repoch": self.r_epoch,
             }
+            if op_lanes is not None:
+                ann["val"]["lanes"] = list(op_lanes)
             rel = self._ann_path(thread, slot)
             self.fs.write(rel, json.dumps(ann).encode(), tag="resp")
             files.append(rel)
             self.fs.fsync(files, tag="phase")  # ONE pfence for slots + responses
             self._promote_elision()
             for s in touched:  # per-shard two-increment epoch commit
+                if s in plans:
+                    self._commit_lane_epochs(s, plans[s][0], plans[s][1])
+                    continue
                 e = int(e_j[s])
                 self.fs.write(self._epoch_path(s), str(e - 1).encode(), tag="epoch")
                 self.fs.fsync([self._epoch_path(s)], tag="epoch")
@@ -1562,7 +1899,8 @@ class ShardedDFCRuntime:
         return out_records
 
     def read_responses(
-        self, thread: int, token: Optional[int] = None
+        self, thread: int, token: Optional[int] = None,
+        lane: Optional[int] = None,
     ) -> Optional[Dict[str, Any]]:
         """A thread's combined announcement, or None while still pending.
 
@@ -1573,17 +1911,42 @@ class ShardedDFCRuntime:
         thread's previous batch retires while its newest is still in flight,
         so the response being read usually lives in the older slot.
 
+        With ``lane`` (split-lane fabrics), the returned record is filtered
+        to the ops that rode that announcement lane (``LANE_HEAD`` /
+        ``LANE_TAIL``; ops on unsplit shards are ``LANE_NONE``).  The filter
+        applies AFTER the slot search and AFTER staleness detection: with
+        per-side combiners a thread's retained slots can hold one head-side
+        and one tail-side batch with interleaved tokens, and the monotone
+        staleness rule below must still judge ``token`` against the NEWEST
+        retained token across BOTH lanes — a lane-local view would mistake
+        an overwritten token of the other lane for "pending" and spin
+        forever (the PR-6 gap-token regression, per-side edition).
+
         Raises :class:`StaleTokenError` when ``token`` predates both
         retained slots (its record was overwritten by two later
         announcements); returns ``None`` only while the batch is genuinely
         pending (announced and not yet retired, or not yet announced).
         """
+
+        def _lane_view(val: Dict[str, Any], tok: int):
+            out = dict(val, token=tok)
+            if lane is None:
+                return out
+            lanes = val.get("lanes")
+            if lanes is None:
+                lanes = [LANE_NONE] * len(val.get("kinds", []))
+            idx = [i for i, ln in enumerate(lanes) if ln == lane]
+            for key in ("resp", "kinds", "shards", "targets", "lanes"):
+                if key in out and isinstance(out[key], list):
+                    out[key] = [out[key][i] for i in idx]
+            return out
+
         v = self._read_valid(thread)
         if token is None:
             ann = self._read_ann(thread, v & 1)
             if ann.get("val") is BOT:
                 return None
-            return dict(ann["val"], token=ann["token"])
+            return _lane_view(ann["val"], ann["token"])
         held = []
         for slot in (v & 1, 1 - (v & 1)):
             ann = self._read_ann(thread, slot)
@@ -1591,7 +1954,7 @@ class ShardedDFCRuntime:
             if t == token:
                 if ann.get("val") is BOT:
                     return None  # announced, not yet combined/retired
-                return dict(ann["val"], token=ann["token"])
+                return _lane_view(ann["val"], ann["token"])
             if t >= 0:
                 held.append(t)
         # Staleness: per-thread tokens are MONOTONE, so a requested token
@@ -1749,6 +2112,20 @@ class ShardedDFCRuntime:
 
         if self.fs is not None:
             self._snapshot_donor(src, "merge")
+            # split shards reshard handoff-style: BOTH lanes advance, the
+            # intent records the lane pair, and recovery rolls the composite
+            # epoch forward componentwise
+            split = self._is_split(src)
+            if split:
+                lane_targets = {
+                    sid: [e + 2 for e in self._lane_epoch_pair(sid)]
+                    for sid in (src, dst)
+                }
+                intent_targets = {
+                    str(sid): list(lane_targets[sid]) for sid in (src, dst)
+                }
+            else:
+                intent_targets = {str(src): t_src, str(dst): t_dst}
             intent = {
                 "op": "merge",
                 "src": int(src),
@@ -1756,17 +2133,31 @@ class ShardedDFCRuntime:
                 "kind": kind,
                 "pre_repoch": self.r_epoch,
                 "target_repoch": self.r_epoch + 2,
-                "target_epochs": {str(src): t_src, str(dst): t_dst},
+                "target_epochs": intent_targets,
             }
-            files = self._persist_shard(src, t_src, state=src_new)
-            files += self._persist_shard(dst, t_dst, state=dst_new)
+            if split:
+                files = self._persist_split_shard(
+                    src, "handoff", lane_targets[src], state=src_new,
+                    counters=None,
+                )
+                files += self._persist_split_shard(
+                    dst, "handoff", lane_targets[dst], state=dst_new,
+                    counters=None,
+                )
+            else:
+                files = self._persist_shard(src, t_src, state=src_new)
+                files += self._persist_shard(dst, t_dst, state=dst_new)
             self._commit_routing(intent, new_table, self.kinds, files)
             self._promote_elision()
-            for sid, tgt in ((src, t_src), (dst, t_dst)):
-                self.fs.write(self._epoch_path(sid), str(tgt - 1).encode(), tag="epoch")
-                self.fs.fsync([self._epoch_path(sid)], tag="epoch")
-                self.fs.write(self._epoch_path(sid), str(tgt).encode(), tag="epoch")
-                self.obs.event(EV_EPOCH, shard=sid, epoch=tgt)
+            if split:
+                for sid in (src, dst):
+                    self._commit_lane_epochs(sid, "handoff", lane_targets[sid])
+            else:
+                for sid, tgt in ((src, t_src), (dst, t_dst)):
+                    self.fs.write(self._epoch_path(sid), str(tgt - 1).encode(), tag="epoch")
+                    self.fs.fsync([self._epoch_path(sid)], tag="epoch")
+                    self.fs.write(self._epoch_path(sid), str(tgt).encode(), tag="epoch")
+                    self.obs.event(EV_EPOCH, shard=sid, epoch=tgt)
             self.fs.delete(self._INTENT_PATH)
 
         self._set_shard_state(src, src_new)
@@ -1792,6 +2183,7 @@ class ShardedDFCRuntime:
         depth: Optional[int] = None,
         chain: int = 1,
         ring_slots: int = 2048,
+        split_lanes: bool = False,
         obs=None,
     ) -> Tuple["ShardedDFCRuntime", Dict[int, Dict[str, Any]]]:
         """Recover the fabric + per-thread/per-op detectability report.
@@ -1854,6 +2246,7 @@ class ShardedDFCRuntime:
             n_buckets = int(rec["n_buckets"])
             capacity = int(rec.get("capacity", capacity))
             lanes = int(rec.get("lanes", lanes))
+            split_lanes = bool(rec.get("split_lanes", split_lanes))
             table = np.asarray(rec["table"], np.int32)
 
         # --- resolve an interrupted reshard via its intent record
@@ -1862,10 +2255,24 @@ class ShardedDFCRuntime:
             intent = json.loads(intent_raw.decode())
             if intent["target_repoch"] <= repoch:
                 # committed: roll the touched shards' cEpochs forward (their
-                # slot data was pfenced before the rEpoch commit)
+                # slot data was pfenced before the rEpoch commit).  Split
+                # shards record a ``[eH, eT]`` lane pair; roll each
+                # component forward and keep the pair in one atomic file.
                 for sid_str, tgt in intent.get("target_epochs", {}).items():
                     p = f"shard_{int(sid_str)}/cEpoch"
                     raw_e = fs.read(p)
+                    if isinstance(tgt, list):
+                        txt = raw_e.decode() if raw_e else ""
+                        cur = (
+                            json.loads(txt)
+                            if txt.lstrip().startswith("[")
+                            else [0, int(txt)] if txt else [0, 0]
+                        )
+                        new = [max(int(cur[i]), int(tgt[i])) for i in (0, 1)]
+                        if new != [int(cur[0]), int(cur[1])]:
+                            fs.write(p, json.dumps(new).encode(), tag="recovery")
+                            fs.fsync([p], tag="recovery")
+                        continue
                     cur = int(raw_e.decode()) if raw_e else 0
                     if cur < int(tgt):
                         fs.write(p, str(int(tgt)).encode(), tag="recovery")
@@ -1881,7 +2288,7 @@ class ShardedDFCRuntime:
             backend=backend, fs=fs, n_threads=n_threads,
             n_buckets=n_buckets, table=table,
             pipeline=pipeline, depth=depth, chain=chain, ring_slots=ring_slots,
-            obs=obs,
+            split_lanes=split_lanes, obs=obs,
         )
         rt.r_epoch = repoch
 
@@ -1889,8 +2296,77 @@ class ShardedDFCRuntime:
         phases = np.zeros((n_shards,), np.int32)
         ops_combined = np.zeros((n_shards,), np.int32)
         committed_epochs = np.zeros((n_shards,), np.int64)
+        committed_lane_epochs: Dict[int, List[int]] = {}
         for s in range(n_shards):
             fresh = STRUCTS[kinds[s]].init(capacity)
+            if rt._is_split(s):
+                # --- split shard: round each lane's odd epoch component up
+                # (the composite pair file keeps a handoff's two components
+                # atomic — a crash can never land between them), reload the
+                # two ACTIVE lane records, and reassemble one state
+                pair = rt._read_lane_epochs(s)
+                if any(e % 2 == 1 for e in pair):
+                    pair = [e + (e % 2) for e in pair]
+                    fs.write(
+                        rt._epoch_path(s), json.dumps(pair).encode(),
+                        tag="recovery",
+                    )
+                    fs.fsync([rt._epoch_path(s)], tag="recovery")
+                committed_lane_epochs[s] = list(pair)
+                rt.lane_epochs[s] = list(pair)
+                committed_epochs[s] = pair[0] + pair[1]
+                recs: List[Optional[Dict[str, Any]]] = [None, None]
+                live = set()
+                for lane in (LANE_HEAD, LANE_TAIL):
+                    adir = rt._lane_slot_dir(s, lane, pair[lane], nxt=False)
+                    rrel = f"{adir}/rec.json"
+                    raw_rec = fs.read_durable(rrel)
+                    if raw_rec:
+                        recs[lane] = json.loads(raw_rec.decode())
+                        live.add(rrel)
+                        if _LANE_WRITES_VALUES[kinds[s]][lane]:
+                            live.add(f"{adir}/values.npy")
+                f_ends = np.asarray(fresh.ends)[0]
+                h = int(recs[LANE_HEAD]["ctr"]) if recs[LANE_HEAD] else int(f_ends[0])
+                t = int(recs[LANE_TAIL]["ctr"]) if recs[LANE_TAIL] else int(f_ends[1])
+                # values: the lane whose record carries the larger ``phases``
+                # commit-sequence number holds the chronologically last
+                # committed copy (each values-owning lane re-validates its
+                # slot's values at every commit, elided when identical)
+                values = np.asarray(fresh.values)
+                best = (-1, None)
+                for lane in (LANE_HEAD, LANE_TAIL):
+                    r = recs[lane]
+                    if r is None or not _LANE_WRITES_VALUES[kinds[s]][lane]:
+                        continue
+                    if int(r.get("phases", 0)) > best[0]:
+                        adir = rt._lane_slot_dir(s, lane, pair[lane], nxt=False)
+                        best = (int(r.get("phases", 0)), f"{adir}/values.npy")
+                if best[1] is not None:
+                    raw_v = fs.read_durable(best[1])
+                    if raw_v:
+                        values = np.load(io.BytesIO(raw_v))
+                shard_states.append(
+                    fresh.__class__(
+                        values=jnp.asarray(values),
+                        ends=jnp.asarray([[h, t], [h, t]], jnp.int32),
+                        epoch=jnp.asarray(pair[0] + pair[1], jnp.int32),
+                    )
+                )
+                phases[s] = max(
+                    int(r.get("phases", 0)) for r in recs if r is not None
+                ) if any(r is not None for r in recs) else 0
+                ops_combined[s] = max(
+                    int(r.get("ops_combined", 0)) for r in recs if r is not None
+                ) if any(r is not None for r in recs) else 0
+                # GC: drop partial lane-slot writes of the interrupted phase
+                for lane in (LANE_HEAD, LANE_TAIL):
+                    for p in (0, 1):
+                        d = f"shard_{s}/lane{_LANE_TAGS[lane]}{p}"
+                        for rel in list(fs.listdir(d)):
+                            if rel not in live:
+                                fs.delete(rel)
+                continue
             epoch = rt._read_shard_epoch(s)
             if epoch % 2 == 1:  # crashed between the two increments
                 epoch += 1
@@ -1935,17 +2411,25 @@ class ShardedDFCRuntime:
 
         def _slot_verdicts(ann) -> Tuple[List[OpVerdict], bool]:
             """Per-op verdicts of one announcement record + whether the
-            record's phase fully committed (every target epoch reached)."""
+            record's phase fully committed (every target epoch reached).
+            Split-lane ops carry their LANE's target: committed iff that
+            lane's composite-epoch component reached it — the other lane's
+            progress neither commits nor rolls back this op."""
             verdicts: List[OpVerdict] = []
             val = ann.get("val")
             n_ops = len(ann.get("ops", []))
             if val is BOT:
                 return [OpVerdict(applied=False) for _ in range(n_ops)], False
+            op_lanes = val.get("lanes")
             fully = True
             for i in range(n_ops):
                 s = val["shards"][i]
                 k = val["kinds"][i]
-                committed = committed_epochs[s] >= val["targets"][i]
+                ln = op_lanes[i] if op_lanes is not None else LANE_NONE
+                if ln != LANE_NONE and s in committed_lane_epochs:
+                    committed = committed_lane_epochs[s][ln] >= val["targets"][i]
+                else:
+                    committed = committed_epochs[s] >= val["targets"][i]
                 fully = fully and bool(committed)
                 applied = bool(committed) and k != R_OVERFLOW and k != R_NONE
                 verdicts.append(

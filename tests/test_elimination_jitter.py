@@ -87,6 +87,81 @@ def test_queue_eliminates_only_when_drained():
     assert stack_j == pytest.approx(stack_0)
 
 
+def _queue_lane_cost(split: bool, skewed: bool) -> dict:
+    """Measured steady-state pwb/op AND pfence/op of a one-shard queue
+    fabric, one-lane (``split=False``) or two-lane (``split=True``).
+
+    ``skewed=True`` models arrival skew: a standing backlog (producers
+    ``3*M`` ahead) with alternating tail-only enqueue bursts and head-only
+    dequeue bursts — each burst is a single-lane phase, so the split fabric
+    commits just that side's record and epoch.  ``skewed=False`` is the
+    drained balanced workload: every phase fully eliminates, so neither
+    layout persists values or counters and the two must pay IDENTICAL
+    persistence (a drained balanced phase is a handoff — the split fabric's
+    two lane records cost exactly the one-lane layout's state leaves)."""
+    fs = SimFS(Path(tempfile.mkdtemp(prefix=f"dfc_lanejit_{int(split)}_")))
+    rt = ShardedDFCRuntime(
+        "queue", 1, CAP, LANES, fs=fs, n_threads=1, split_lanes=split
+    )
+    token = 0
+    key = rt.key_for_shard(0)
+
+    def phase(ops, params):
+        nonlocal token
+        token += 1
+        rt.announce(0, [key] * len(ops), ops, params, token=token)
+        rt.combine_phase()
+
+    def burst_pair(p):
+        phase([OP_PUSH] * M, [100.0 * p + i for i in range(M)])
+        phase([OP_POP] * M, [0.0] * M)
+
+    if skewed:
+        phase([OP_PUSH] * (3 * M), [float(i) for i in range(3 * M)])  # lag
+        burst_pair(1)  # warm-up: cold persist of every leaf, both slots
+        burst_pair(2)
+        base = dict(fs.stats)
+        for p in range(PHASES):
+            burst_pair(10 + p)
+    else:
+        for p in (1, 2):  # warm-up
+            phase([OP_PUSH] * M + [OP_POP] * M,
+                  [float(i) for i in range(2 * M)])
+        base = dict(fs.stats)
+        for p in range(PHASES):
+            phase([OP_PUSH] * M + [OP_POP] * M,
+                  [10.0 * p + i for i in range(2 * M)])
+    ops_measured = PHASES * 2 * M
+    return {
+        "pwb": (fs.stats["pwb"] - base["pwb"]) / ops_measured,
+        "pfence": (fs.stats["pfence"] - base["pfence"]) / ops_measured,
+    }
+
+
+def test_split_lanes_beat_one_lane_under_skew():
+    """Per-side combiners (ISSUE 8): under arrival skew a two-lane queue
+    commits only the active side per phase — strictly fewer pwb/op than the
+    one-lane layout, which re-persists the shared counter pair and epoch
+    for BOTH sides every phase.  Drained, the balanced workload fully
+    eliminates and the two layouts pay identical pwb/op and pfence/op (a
+    split fabric must never tax the drained fast path)."""
+    one_skew = _queue_lane_cost(split=False, skewed=True)
+    two_skew = _queue_lane_cost(split=True, skewed=True)
+    one_drained = _queue_lane_cost(split=False, skewed=False)
+    two_drained = _queue_lane_cost(split=True, skewed=False)
+
+    assert two_skew["pwb"] < one_skew["pwb"], (
+        f"two-lane ({two_skew['pwb']:.3f}) should beat one-lane "
+        f"({one_skew['pwb']:.3f}) pwb/op under arrival skew"
+    )
+    # drained: serial-identical persistence, down to the pfence schedule
+    assert two_drained["pwb"] == pytest.approx(one_drained["pwb"])
+    assert two_drained["pfence"] == pytest.approx(one_drained["pfence"])
+    # skew costs every layout more than the drained fast path
+    assert one_skew["pwb"] > one_drained["pwb"]
+    assert two_skew["pwb"] > two_drained["pwb"]
+
+
 def test_stack_elides_untouched_values_leaf():
     """Mechanism check for the measurement above: a fully-eliminating stack
     phase re-persists epoch + manifest but NOT the untouched values array

@@ -329,6 +329,42 @@ def test_read_responses_gap_token_raises(tmp_path):
     assert rt.read_responses(0, token=10) is None
 
 
+def test_read_responses_lane_filter_keeps_staleness_monotone(tmp_path):
+    """Regression (ISSUE 8): the per-lane ``read_responses`` view must apply
+    the lane filter AFTER staleness detection.  With split lanes a thread's
+    two slots can hold tokens from DIFFERENT lanes (here a head-lane batch
+    at token 5 and a tail-lane batch at token 9); a gap token like 7 is
+    provably stale regardless of which lane the caller asks about — if the
+    filter ran first, the head slot would vanish from the tail-lane view
+    and the stale request would fall through to ``None`` (a forever-spin)."""
+    from repro.core.jax_dfc import LANE_HEAD, LANE_TAIL
+
+    fs = SimFS(tmp_path)
+    rt = ShardedDFCRuntime(
+        ["queue"], 1, CAP, LANES, fs=fs, n_threads=1, split_lanes=True
+    )
+    rt.announce(0, [1, 2], [OP_ENQ] * 2, [1.0, 2.0], token=1)
+    rt.combine_phase()
+    rt.announce(0, [1], [2], [0.0], token=5)  # OP_DEQ: head lane
+    rt.combine_phase()
+    rt.announce(0, [3], [OP_ENQ], [3.0], token=9)  # tail lane
+    rt.combine_phase()
+    # slots hold interleaved-lane tokens {5 (head), 9 (tail)}: both readable,
+    # and the lane views split one batch's responses by side
+    head = rt.read_responses(0, token=5, lane=LANE_HEAD)
+    assert head is not None and head["resp"] == [1.0]  # FIFO head
+    assert rt.read_responses(0, token=5, lane=LANE_TAIL)["kinds"] == []
+    tail = rt.read_responses(0, token=9, lane=LANE_TAIL)
+    assert tail is not None and len(tail["kinds"]) == 1
+    # gap token 7 predates max(held)=9 and was never announced: stale in
+    # EVERY lane view, never None
+    for lane in (None, LANE_HEAD, LANE_TAIL):
+        with pytest.raises(StaleTokenError):
+            rt.read_responses(0, token=7, lane=lane)
+    # and a token above the window stays pending in every view
+    assert rt.read_responses(0, token=10, lane=LANE_TAIL) is None
+
+
 def test_request_queue_tier_rides_the_ring_path():
     """The serving tier's durable phases flow through the device-side
     announcement ring (payload spans registered and consumed), in both the

@@ -331,6 +331,107 @@ def test_fuzz_interleaved_multithread_differential(
     )
 
 
+# ------------------------------------------------- per-side lanes (ISSUE 8)
+LANE_KIND_SETS = [
+    ["queue", "queue"],
+    ["deque", "queue"],
+    ["deque", "deque"],
+]
+LANE_MIXES = ["enq-heavy", "deq-heavy", "drain-oscillating"]
+
+
+def _lane_mix_schedule(kinds, n_phases, batch, rng_draws, mix):
+    """Lane-aware schedule generator: op mixes chosen to stress the
+    head/tail lane classifier.  ``enq-heavy`` keeps most phases tail-only
+    (producing side), ``deq-heavy`` keeps the consuming side hot against a
+    mostly-empty fabric (drained handoffs dominate), and
+    ``drain-oscillating`` alternates pure push bursts with pure pop bursts
+    so shards repeatedly cross the drained boundary both ways."""
+    lanes = batch
+    phases = []
+    for p in range(n_phases):
+        keys = [rng_draws(0, 997) for _ in range(batch)]
+        shard = route_keys_host(np.asarray(keys), len(kinds))
+        ops = []
+        for s in shard:
+            push = [1] if kinds[s] == "queue" else [1, 3]
+            pop = [2] if kinds[s] == "queue" else [2, 4]
+            if mix == "enq-heavy":
+                heavy = rng_draws(0, 9) < 8
+            elif mix == "deq-heavy":
+                heavy = rng_draws(0, 9) >= 8
+            else:
+                heavy = p % 2 == 0  # alternate pure bursts phase by phase
+            codes = push if heavy else pop
+            ops.append(codes[rng_draws(0, len(codes) - 1)])
+        params = [float(rng_draws(1, 10_000)) / 8.0 for _ in range(batch)]
+        phases.append((p + 1, keys, ops, params))
+    return phases, lanes
+
+
+@hypothesis.settings(max_examples=6, deadline=None)
+@hypothesis.given(
+    st.integers(0, len(LANE_KIND_SETS) - 1),
+    st.integers(2, 4),  # phases
+    st.integers(3, 6),  # batch
+    st.sampled_from(LANE_MIXES),
+    st.data(),
+)
+def test_fuzz_split_lanes_differential(kset, n_phases, batch, mix, data):
+    """Two-lane fabrics are semantically IDENTICAL to one-lane fabrics: a
+    split runtime driven with skewed lane mixes produces the oracle's
+    responses and contents on every backend, bit-for-bit equal to the
+    unsplit runtime over the same schedule — the lanes only change the
+    durable commit layout, never the linearization."""
+    kinds = LANE_KIND_SETS[kset]
+    draws = lambda lo, hi: data.draw(st.integers(lo, hi))
+    phases, lanes = _lane_mix_schedule(kinds, n_phases, batch, draws, mix)
+    oracle_shards, per_token = _oracle_run(kinds, phases, lanes)
+    per_config = {}
+    for backend in ("jnp", "ref", "pallas"):
+        for split in (False, True):
+            fs = SimFS(Path(tempfile.mkdtemp(
+                prefix=f"dfc_lanefuzz_{backend}_{int(split)}_"
+            )))
+            rt = ShardedDFCRuntime(
+                kinds, len(kinds), CAP, lanes, fs=fs, n_threads=1,
+                backend=backend, split_lanes=split,
+            )
+            for token, keys, ops, params in phases:
+                rt.announce(0, keys, ops, params, token=token)
+                rt.combine_phase()
+            rt.flush()
+            for token, _, _, _ in phases:
+                try:
+                    val = rt.read_responses(0, token=token)
+                except StaleTokenError:
+                    continue  # overwritten response slot
+                eresp, ekinds = per_token[token]
+                assert val["kinds"] == list(ekinds), (backend, split, token)
+                np.testing.assert_allclose(
+                    val["resp"], np.asarray(eresp, np.float32), rtol=1e-6
+                )
+            got = [rt.shard_contents(s) for s in range(len(kinds))]
+            for s in range(len(kinds)):
+                np.testing.assert_allclose(
+                    got[s], oracle_shards[s], rtol=1e-6,
+                    err_msg=(
+                        f"{backend} split={split} shard {s} "
+                        "diverged from the oracle"
+                    ),
+                )
+            per_config[(backend, split)] = got
+            if split:
+                stats = rt.lane_stats()
+                assert stats is not None
+                assert all(
+                    e % 2 == 0 for p in stats["epochs"].values() for e in p
+                )
+    # one-lane and two-lane agree exactly, per backend
+    for backend in ("jnp", "ref", "pallas"):
+        assert per_config[(backend, False)] == per_config[(backend, True)]
+
+
 @hypothesis.settings(max_examples=6, deadline=None)
 @hypothesis.given(
     st.integers(0, len(KIND_SETS) - 1),

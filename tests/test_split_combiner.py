@@ -1,0 +1,357 @@
+"""Per-side combiners (ISSUE 8): two-lane crash/differential suite.
+
+A split (``split_lanes=True``) queue/deque shard commits its head-side and
+tail-side announcement lanes independently — each lane has its own durable
+record, its own epoch in the composite ``cEpoch`` pair, and its own
+one-pfence commit — EXCEPT when the consuming side outruns the producing
+side: a drained shard synchronizes both lanes through a single
+crash-consistent HANDOFF commit (both epochs advance atomically, same
+two-increment discipline as resharding).
+
+This suite pins the mechanism three ways:
+
+  * device equivalence — ``dfc_lane_combine_step`` is exactly the full
+    combine of the lane-masked batch, ``dfc_handoff_combine_step`` exactly
+    the full combine, across jnp / ref / pallas backends;
+  * crash sweep — a crash injected at EVERY persistence op of a two-lane
+    schedule (tail-only, head-only, mixed-handoff, and drained-upgrade
+    phases, so both sides of the handoff commit are crash points) recovers
+    to the ``sequential_hetero_reference`` oracle with verdict-identical,
+    exactly-once replay;
+  * the full {queue, deque} x {jnp, ref, pallas} grid runs under ``slow``;
+    tier-1 keeps one fast representative per kind.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.dfc_checkpoint import CrashNow, FaultInjector, SimFS
+from repro.core.jax_dfc import (
+    LANE_HEAD,
+    LANE_TAIL,
+    OP_DEQ,
+    OP_ENQ,
+    OP_NONE,
+    OP_POPL,
+    OP_POPR,
+    OP_PUSHL,
+    OP_PUSHR,
+    R_NONE,
+    STRUCTS,
+    lane_of_ops_host,
+)
+from repro.kernels.dfc_reduce.ops import (
+    dfc_handoff_combine_step,
+    dfc_lane_combine_step,
+)
+from repro.runtime.dfc_shard import (
+    ShardedDFCRuntime,
+    sequential_hetero_reference,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CAP, LANES = 128, 16
+BACKENDS = ["jnp", "ref", "pallas"]
+
+
+# -------------------------------------------------- device-step equivalence
+def _stacked(kind, n_shards):
+    one = STRUCTS[kind].init(CAP)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.stack([x] * n_shards), one
+    )
+
+
+def _mixed_batch(kind, rng, n):
+    n_ops = STRUCTS[kind].n_opcodes
+    ops = rng.integers(0, n_ops, (2, n)).astype(np.int32)
+    params = (rng.random((2, n)) * 100).round(2).astype(np.float32)
+    return jnp.asarray(ops), jnp.asarray(params)
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind", ["queue", "deque"])
+def test_lane_step_is_masked_combine(kind, backend):
+    """``dfc_lane_combine_step(lane)`` must equal the ordinary sharded
+    combine applied to the host-masked batch (other-lane ops -> OP_NONE):
+    the device masking and the host lane classifier agree op for op."""
+    rng = np.random.default_rng(17)
+    state = _stacked(kind, 2)
+    # preload so head-side pops have something to consume
+    pre = jnp.asarray(
+        np.tile([OP_ENQ if kind == "queue" else OP_PUSHR], (2, 8)), jnp.int32
+    )
+    prep = jnp.asarray(rng.random((2, 8)).astype(np.float32))
+    state, _, _ = dfc_handoff_combine_step(
+        state, pre, prep, kind=kind, backend="jnp"
+    )
+    ops, params = _mixed_batch(kind, rng, 10)
+    for lane in (LANE_HEAD, LANE_TAIL):
+        got_state, got_resp, got_kinds = dfc_lane_combine_step(
+            state, ops, params, kind=kind, lane=lane, backend=backend
+        )
+        masked = np.asarray(ops).copy()
+        for s in range(2):
+            keep = lane_of_ops_host(kind, masked[s]) == lane
+            masked[s][~keep] = OP_NONE
+        exp_state, exp_resp, exp_kinds = dfc_handoff_combine_step(
+            state, jnp.asarray(masked), params, kind=kind, backend="jnp"
+        )
+        _assert_trees_equal(got_state, exp_state)
+        np.testing.assert_allclose(
+            np.asarray(got_resp), np.asarray(exp_resp), rtol=1e-6
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got_kinds), np.asarray(exp_kinds)
+        )
+        # other-lane positions come back R_NONE: nothing consumed them
+        other = np.asarray(ops).copy()
+        for s in range(2):
+            mine = lane_of_ops_host(kind, other[s]) == lane
+            assert np.all(
+                np.asarray(got_kinds)[s][~mine & (other[s] != OP_NONE)]
+                == R_NONE
+            )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind", ["queue", "deque"])
+def test_handoff_step_is_full_combine(kind, backend):
+    """The handoff step linearizes exactly like the unsplit fabric: it IS
+    the one-lane combine of the same batch, on every backend."""
+    rng = np.random.default_rng(29)
+    state = _stacked(kind, 2)
+    ops, params = _mixed_batch(kind, rng, 12)
+    got = dfc_handoff_combine_step(
+        state, ops, params, kind=kind, backend=backend
+    )
+    exp = jax.vmap(STRUCTS[kind].combine)(state, ops, params)
+    _assert_trees_equal(got[0], exp[0])
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(exp[1]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(exp[2]))
+
+
+def test_queue_head_lane_leaves_values_untouched():
+    """The pwb win in one assert: a head-only queue phase moves ONLY the
+    head counter — values and tail counter are bit-identical, which is why
+    the head lane's durable record never persists a values array."""
+    state = _stacked("queue", 1)
+    fill = jnp.asarray([[OP_ENQ] * 6], jnp.int32)
+    state, _, _ = dfc_handoff_combine_step(
+        state, fill, jnp.asarray([[1.0, 2, 3, 4, 5, 6]], jnp.float32),
+        kind="queue", backend="jnp",
+    )
+    ops = jnp.asarray([[OP_DEQ, OP_DEQ, OP_NONE]], jnp.int32)
+    params = jnp.zeros((1, 3), jnp.float32)
+    new, resp, kinds = dfc_lane_combine_step(
+        state, ops, params, kind="queue", lane=LANE_HEAD, backend="jnp"
+    )
+    np.testing.assert_array_equal(np.asarray(new.values), np.asarray(state.values))
+    a = (int(new.epoch[0]) // 2) % 2
+    b = (int(state.epoch[0]) // 2) % 2
+    assert int(new.ends[0, a, 1]) == int(state.ends[0, b, 1])  # tail frozen
+    assert int(new.ends[0, a, 0]) == int(state.ends[0, b, 0]) + 2
+    np.testing.assert_allclose(np.asarray(resp[0, :2]), [1.0, 2.0])
+
+
+# ----------------------------------------------------- two-lane crash sweep
+# Single-thread, single-shard schedules that exercise every lane mode:
+# tail-only phases, head-only phases, a mixed phase (handoff with live ops
+# on both sides), and head-only phases that drain the shard to empty (the
+# drained-upgrade handoff).  Push params are unique, so multiset equality
+# of the final contents IS exactly-once.
+def _lane_schedule(kind):
+    if kind == "queue":
+        E, D = OP_ENQ, OP_DEQ
+        rows = [
+            ([E] * 4, [1.0, 2.0, 3.0, 4.0]),        # tail-only
+            ([E] * 3, [5.0, 6.0, 7.0]),             # tail-only
+            ([D] * 3, [0.0] * 3),                   # head-only
+            ([D] * 4, [0.0] * 4),                   # head-only, drains -> handoff
+            ([E] * 2, [8.0, 9.0]),                  # tail again after handoff
+            ([E, D], [10.0, 0.0]),                  # mixed -> handoff (live ops)
+            ([D] * 2, [0.0] * 2),                   # drains again -> handoff
+        ]
+    else:
+        rows = [
+            ([OP_PUSHR] * 4, [1.0, 2.0, 3.0, 4.0]),  # tail-only
+            ([OP_PUSHL] * 3, [5.0, 6.0, 7.0]),       # head-only
+            ([OP_POPL] * 2, [0.0] * 2),              # head-only
+            ([OP_POPR] * 2, [0.0] * 2),              # tail-only
+            ([OP_POPL, OP_POPR, OP_POPL], [0.0] * 3),  # mixed drain -> handoff
+            ([OP_PUSHR, OP_PUSHL], [8.0, 9.0]),      # refill, both lanes
+        ]
+    token = 0
+    phases = []
+    for ops, params in rows:
+        token += 1
+        phases.append((token, [7] * len(ops), ops, params))
+    return phases
+
+
+def _oracle(kind, phases, table):
+    """Phase-by-phase sequential reference: expected (resp, kinds) per token
+    plus the expected final contents."""
+    lists = [[]]
+    expected = {}
+    for token, keys, ops, params in phases:
+        expected[token] = sequential_hetero_reference(
+            [kind], lists, keys, ops, params, LANES, table=table
+        )
+    return expected, sorted(lists[0])
+
+
+def _run_split(tmp, crash_at, kind, backend):
+    inj = FaultInjector(crash_at=crash_at)
+    fs = SimFS(tmp, inj)
+    rt = ShardedDFCRuntime(
+        [kind], 1, CAP, LANES, fs=fs, n_threads=1, backend=backend,
+        split_lanes=True,
+    )
+    phases = _lane_schedule(kind)
+    expected, final = _oracle(kind, phases, rt.table)
+    try:
+        for token, keys, ops, params in phases:
+            rt.announce(0, keys, ops, params, token=token)
+            rt.combine_phase()
+        rt.flush()
+    except CrashNow:
+        pass
+    rt2, report = ShardedDFCRuntime.recover(
+        fs.crash(), kind=[kind], n_shards=1, capacity=CAP, lanes=LANES,
+        n_threads=1, backend=backend, split_lanes=True,
+    )
+    return rt2, report, phases, expected, final, inj.count
+
+
+def _verify_split(rt2, report, phases, expected, final, kind):
+    # lane epochs committed in pairs: every component even
+    stats = rt2.lane_stats()
+    assert stats is not None
+    for pair in stats["epochs"].values():
+        assert all(int(e) % 2 == 0 for e in pair)
+    # verdict-identical: every APPLIED op's durable response equals the
+    # oracle's response for that (token, op) — the detectability contract
+    by_token = {tok: i for i, (tok, *_rest) in enumerate(phases)}
+    r = report[0]
+    for rec in ([r] if r["token"] is not None else []) + (
+        [r["prev"]] if r.get("prev") else []
+    ):
+        tok = rec["token"]
+        eresp, ekinds = expected[tok]
+        for i, v in enumerate(rec["ops"]):
+            if v.applied:
+                assert v.kind == int(ekinds[i]), (tok, i)
+                np.testing.assert_allclose(
+                    float(v.resp), float(eresp[i]), rtol=1e-6
+                )
+    # exactly-once replay: not-applied ops re-announced, never-surfaced
+    # phases re-driven; the single thread totally orders the schedule, so
+    # the recovered fabric must land exactly on the oracle
+    rt2.replay_pending(report)
+    surfaced = r["token"] or 0
+    for token, keys, ops, params in phases:
+        if token > surfaced:
+            rt2.announce(0, keys, ops, params, token=token)
+            rt2.combine_phase()
+    rt2.flush()
+    got = sorted(rt2.shard_contents(0))
+    assert got == final, "lost or duplicated ops across the two-lane crash"
+    # the re-driven tail end produced oracle responses too
+    last = phases[-1][0]
+    val = rt2.read_responses(0, token=last)
+    eresp, ekinds = expected[last]
+    assert val is not None and val["kinds"] == [int(k) for k in ekinds]
+    np.testing.assert_allclose(
+        val["resp"], np.asarray(eresp, np.float32), rtol=1e-6
+    )
+
+
+def _sweep_split(tmp_path, kind, backend, step=1):
+    rt_dry, report_dry, phases, expected, final, total = _run_split(
+        tmp_path / "dry", None, kind, backend
+    )
+    _verify_split(rt_dry, report_dry, phases, expected, final, kind)
+    assert total > 30, "schedule too small to exercise the commit protocol"
+    for k in range(1, total + 1, step):
+        rt2, report, phases, expected, final, _ = _run_split(
+            tmp_path / f"k{k}", k, kind, backend
+        )
+        _verify_split(rt2, report, phases, expected, final, kind)
+
+
+# ----------------------------------------------------------- tier-1 sweeps
+def test_split_queue_crash_sweep_exactly_once(tmp_path):
+    """Acceptance: every persistence op of a two-lane queue schedule — lane
+    records, values, response publishes, and BOTH sides of the composite
+    handoff commit (odd-pair write / fsync / even-pair write) — is a safe
+    crash point."""
+    _sweep_split(tmp_path, "queue", "jnp")
+
+
+def test_split_deque_crash_sweep_exactly_once(tmp_path):
+    """Two-lane deque twin: both lanes own values, so the sweep additionally
+    crosses per-lane values persists and the max-phases values election in
+    recovery."""
+    _sweep_split(tmp_path, "deque", "jnp", step=2)
+
+
+def test_split_handoff_crash_both_sides(tmp_path):
+    """Directed: crash exactly AT the handoff commit's fsync boundary —
+    before it (both lanes roll back to the pre-handoff pair) and after it
+    (both round up committed).  Never a half-committed pair."""
+    # Dry run pins the lane classifier against the schedule: of the 7 queue
+    # phases, 4 advance the head lane (p3, p4, p6, p7) and 6 advance the
+    # tail lane (p1, p2, p5 plus the three handoffs p4, p6, p7 — a handoff
+    # moves BOTH lanes), each by the two-increment pair.
+    rt, _, phases, expected, final, total = _run_split(
+        tmp_path / "dry", None, "queue", "jnp"
+    )
+    pre = rt.lane_stats()["epochs"][0]
+    assert pre == [4 * 2, 6 * 2], pre
+    for k in range(1, total + 1):
+        rt2, report, phases, expected, final, _ = _run_split(
+            tmp_path / f"k{k}", k, "queue", "jnp"
+        )
+        eh, et = rt2.lane_stats()["epochs"][0]
+        # the recovered pair is never torn across a handoff: a handoff
+        # phase moves both components together, so any state where exactly
+        # one component advanced must stem from a single-lane phase, whose
+        # record says so
+        assert eh % 2 == 0 and et % 2 == 0
+        _verify_split(rt2, report, phases, expected, final, "queue")
+
+
+def test_split_lane_recovery_preserves_serve_handoff(tmp_path):
+    """The serving tier's arrivals ride the tail lane and admissions the
+    head lane; a split tier recovers with its lane pairs intact."""
+    from repro.launch.serve import RequestQueueTier
+
+    tier = RequestQueueTier(
+        n_queues=2, slots=2, capacity=256, lanes=16, durable=True,
+        split_lanes=True, fs=SimFS(tmp_path),
+    )
+    assert tier.rt.split_lanes
+    tier.submit([1, 2, 3, 4])
+    admitted = tier.admit(2)
+    tier.submit([], release_slots=[slot for _, slot in admitted])
+    stats = tier.rt.lane_stats()
+    assert stats and any(p != [0, 0] for p in stats["epochs"].values())
+
+
+# ------------------------------------------------------------- slow grid
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind", ["queue", "deque"])
+def test_split_crash_sweep_grid(tmp_path, kind, backend):
+    """Full two-lane crash sweep across {queue, deque} x backends."""
+    _sweep_split(tmp_path, kind, backend)

@@ -50,6 +50,8 @@ def aggregate(events: List[Dict[str, Any]]) -> Dict[str, Any]:
         "kinds": [],
         "backlog": {},      # shard -> last sampled size
         "epoch": {},        # shard -> last committed epoch
+        "lane_epoch": {},   # shard -> last committed [eH, eT] (split lanes)
+        "lane_backlog": {},  # shard -> last sampled [head, tail] backlog
         "commits": Counter(),  # shard -> EV_EPOCH count
         "touches": Counter(),  # shard -> retired/drained batches touching it
         "pwb": Counter(),   # tag -> count
@@ -78,11 +80,17 @@ def aggregate(events: List[Dict[str, Any]]) -> Dict[str, Any]:
                 agg["backlog"][s] = int(size)
             for s, ep in enumerate(e.get("epochs", [])):
                 agg["epoch"][s] = int(ep)
+            for s, pair in e.get("lane_epochs", {}).items():
+                agg["lane_epoch"][int(s)] = [int(x) for x in pair]
+            for s, bl in e.get("lane_backlog", {}).items():
+                agg["lane_backlog"][int(s)] = [int(x) for x in bl]
             agg["inflight"] = int(e.get("inflight", 0))
         elif ev == EV_EPOCH:
             s = int(e["shard"])
             agg["commits"][s] += 1
             agg["epoch"][s] = int(e["epoch"])
+            if "lanes" in e:
+                agg["lane_epoch"][s] = [int(x) for x in e["lanes"]]
         elif ev in (EV_RETIRE, EV_DRAIN):
             agg["retires" if ev == EV_RETIRE else "drains"] += 1
             for s in e.get("touched", []):
@@ -114,20 +122,34 @@ def render(events: List[Dict[str, Any]]) -> str:
         set(a["backlog"]) | set(a["epoch"]) | set(a["commits"]) | set(a["touches"])
         | set(range(len(a["kinds"])))
     )
+    lanes = bool(a["lane_epoch"]) or bool(a["lane_backlog"])
+    header = (
+        f"{'shard':>5}  {'kind':<6} {'backlog':>7} {'epoch':>6} "
+        f"{'commits':>7} {'touches':>7}"
+    )
+    if lanes:
+        header += f" {'eH/eT':>9} {'blH/blT':>9}"
     lines = [
         f"fabric_top — {a['n_events']} events, seq "
         f"{a['seq_range'][0]}..{a['seq_range'][1]}",
         "",
-        f"{'shard':>5}  {'kind':<6} {'backlog':>7} {'epoch':>6} "
-        f"{'commits':>7} {'touches':>7}",
+        header,
     ]
     for s in shards:
         kind = a["kinds"][s] if s < len(a["kinds"]) else "?"
-        lines.append(
+        row = (
             f"{s:>5}  {kind:<6} {a['backlog'].get(s, '-'):>7} "
             f"{a['epoch'].get(s, '-'):>6} {a['commits'].get(s, 0):>7} "
             f"{a['touches'].get(s, 0):>7}"
         )
+        if lanes:
+            le = a["lane_epoch"].get(s)
+            lb = a["lane_backlog"].get(s)
+            row += (
+                f" {f'{le[0]}/{le[1]}' if le else '-':>9}"
+                f" {f'{lb[0]}/{lb[1]}' if lb else '-':>9}"
+            )
+        lines.append(row)
     lines.append("")
     pwb = " ".join(f"{t}={n}" for t, n in sorted(a["pwb"].items())) or "-"
     pf = " ".join(f"{t}={n}" for t, n in sorted(a["pfence"].items())) or "-"
