@@ -1,0 +1,218 @@
+"""Durable keyed map: pwb/op of the combined fabric vs persist-every-write.
+
+The map-shard analogue of the paper's Figure-3 persistence claim, crossed
+with the durable-hash-structure observation of Efficient Lock-Free Durable
+Sets (arXiv 1909.02852): a keyed structure does NOT need a flush per write.
+The detectable combiner announces a batch of insert/lookup/delete/CAS ops,
+applies them under one combiner, and pays a few pwb + one commit fence per
+touched shard per phase; the baseline persists every mutation as it lands —
+one entry write plus a root write plus a fence per op, the schedule of a
+per-write durable hash table over the SAME simulated NVM counters.
+
+The script GATES on the claim: it exits non-zero unless the combined map's
+pwb/op beats the persist-every-write baseline in every measured config.
+
+Emits ``name,value,derived`` rows via ``emit`` and (when run as a script)
+writes the full result set to ``BENCH_map.json``.  ``--smoke`` runs a
+seconds-scale subset on CPU jax — wired into CI so the subsystem cannot rot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+from repro.checkpoint.dfc_checkpoint import SimFS
+from repro.core.jax_dfc import (
+    CAS_DOM,
+    OP_MAP_CAS,
+    OP_MAP_DELETE,
+    OP_MAP_INSERT,
+    OP_MAP_LOOKUP,
+)
+from repro.runtime.dfc_shard import R_OVERFLOW, ShardedDFCRuntime, zipf_keys
+
+_ROOT = Path(__file__).resolve().parent.parent  # repo root, CWD-independent
+
+_MUTATORS = (OP_MAP_INSERT, OP_MAP_DELETE, OP_MAP_CAS)
+
+
+def _map_batches(rng, batch, phases, skew, key_universe=512):
+    """Mixed insert/lookup/delete/CAS schedules over a bounded key universe
+    (bounded so deletes/CAS actually hit and the table stays far from full)."""
+    out = []
+    for _ in range(phases):
+        keys = zipf_keys(rng, batch, key_universe, skew) + 1
+        ops = rng.choice(
+            [OP_MAP_INSERT, OP_MAP_LOOKUP, OP_MAP_DELETE, OP_MAP_CAS],
+            size=batch,
+            p=[0.5, 0.2, 0.15, 0.15],
+        )
+        vals = rng.integers(0, CAS_DOM, batch)
+        expect = rng.integers(0, CAS_DOM, batch)
+        params = np.where(
+            ops == OP_MAP_CAS, expect * CAS_DOM + vals, vals
+        ).astype(np.float64)
+        out.append((keys, ops, params))
+    return out
+
+
+def _baseline_persist_every_write(root, batches):
+    """Per-write durable hash table over the same SimFS counters, running
+    the undo-log schedule of ``repro.core.baselines``' PMDK stack per
+    mutation: undo-log the entry (pwb + pfence), write the mutated entry and
+    the root count (pwb each), fence, invalidate the log (pwb).  Lookups
+    read volatile state and persist nothing (their best case); failed
+    deletes/CAS touch nothing."""
+    fs = SimFS(root)
+    table = {}
+    applied = 0
+    for keys, ops, params in batches:
+        for k, op, p in zip(keys, ops, params):
+            applied += 1
+            if op == OP_MAP_LOOKUP:
+                continue
+            k = int(k)
+            old = table.get(k)
+            if op == OP_MAP_INSERT:
+                table[k] = float(p)
+            elif op == OP_MAP_DELETE:
+                if k not in table:
+                    continue
+                del table[k]
+            else:  # CAS
+                exp = float(np.float32(np.floor(np.float32(p) / CAS_DOM)))
+                if table.get(k) != exp:
+                    continue
+                table[k] = float(np.float32(p)) - exp * CAS_DOM
+            fs.write("map/undo.log", f"{k}:{old}".encode())
+            fs.fsync(["map/undo.log"])
+            fs.write(f"map/entry_{k}.bin", f"{k}:{table.get(k)}".encode())
+            fs.write("map/count", str(len(table)).encode())
+            fs.fsync([f"map/entry_{k}.bin", "map/count"])
+            fs.write("map/undo.log", b"")
+    return fs.stats["pwb"] / max(applied, 1), fs.stats["pfence"] / max(applied, 1)
+
+
+def _one_config(n_shards, skew, batch, phases, results, emit):
+    rng = np.random.default_rng(0)
+    # combining only amortizes when shards see real batches: keep at least
+    # ~16 ops per shard per phase as the fabric widens
+    batch = max(batch, 16 * n_shards)
+    lanes = batch
+    capacity = 1024
+
+    # volatile throughput of the fused jitted step
+    rt = ShardedDFCRuntime("map", n_shards, capacity, lanes)
+    batches = _map_batches(rng, batch, phases, skew)
+    rt.step(*batches[0])  # compile
+    t0 = time.perf_counter()
+    for keys, ops, params in batches[1:]:
+        resp, kinds = rt.step(keys, ops, params)
+    jax.block_until_ready(resp)
+    dt = time.perf_counter() - t0
+    ops_s = (phases - 1) * batch / dt
+
+    # durable pwb/op over the announcement fabric
+    durable_batches = batches[: max(3, phases // 4)]
+    root = Path(tempfile.mkdtemp(prefix="dfc_bench_map_"))
+    try:
+        fs = SimFS(root / "fc")
+        drt = ShardedDFCRuntime(
+            "map", n_shards, capacity, lanes, fs=fs, n_threads=1
+        )
+        applied = 0
+        for i, (keys, ops, params) in enumerate(durable_batches):
+            drt.announce(0, keys, ops, params, token=i + 1)
+            drt.combine_phase()
+            kinds = np.asarray(drt.read_responses(0)["kinds"])
+            applied += int(np.sum(kinds != R_OVERFLOW))
+        pwb_op = fs.stats["pwb"] / max(applied, 1)
+        pfence_op = fs.stats["pfence"] / max(applied, 1)
+        persist = fs.pstats.as_dict()
+        base_pwb, base_pfence = _baseline_persist_every_write(
+            root / "base", durable_batches
+        )
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    name = f"map_s{n_shards}_skew{skew:g}"
+    emit(
+        name,
+        f"{ops_s:.0f}",
+        f"ops/s,pwb/op={pwb_op:.2f},baseline={base_pwb:.2f}",
+    )
+    results.append(
+        {
+            "kind": "map",
+            "n_shards": n_shards,
+            "skew": skew,
+            "batch": batch,
+            "ops_per_s": ops_s,
+            "pwb_per_op": pwb_op,
+            "pfence_per_op": pfence_op,
+            "baseline_pwb_per_op": base_pwb,
+            "baseline_pfence_per_op": base_pfence,
+            "persist": persist,
+        }
+    )
+
+
+def run(emit, smoke: bool = False):
+    results = []
+    if smoke:
+        grid = [(4, 0.0), (4, 1.2), (8, 0.0)]
+        batch, phases = 64, 6
+    else:
+        grid = [(s, skew) for s in (1, 4, 16, 64) for skew in (0.0, 0.8, 1.2)]
+        batch, phases = 256, 20
+    for n_shards, skew in grid:
+        _one_config(n_shards, skew, batch, phases, results, emit)
+    return results
+
+
+def gate(results) -> int:
+    """The acceptance gate: combined pwb/op must beat persist-every-write in
+    EVERY config.  Returns a non-zero exit code listing violations."""
+    bad = [
+        r for r in results if r["pwb_per_op"] >= r["baseline_pwb_per_op"]
+    ]
+    for r in bad:
+        print(
+            f"GATE FAIL map_s{r['n_shards']}_skew{r['skew']:g}: "
+            f"pwb/op {r['pwb_per_op']:.2f} >= "
+            f"baseline {r['baseline_pwb_per_op']:.2f}"
+        )
+    return 1 if bad else 0
+
+
+def main(emit, smoke: bool = True):
+    """Benchmark-harness entry point (smoke-sized by default: run.py and CI
+    both call this; the full grid is `python bench_map.py` without
+    --smoke)."""
+    return run(emit, smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="seconds-scale CI subset")
+    ap.add_argument(
+        "--out", default=str(_ROOT / "BENCH_map.json"),
+        help="JSON results path (defaults to the repo root)",
+    )
+    args = ap.parse_args()
+    rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)
+    try:
+        from benchmarks.bench_common import write_rows
+    except ImportError:
+        from bench_common import write_rows
+    write_rows(args.out, rows, extra={"entry": "script", "smoke": args.smoke})
+    print(f"# wrote {args.out} ({len(rows)} configs)")
+    raise SystemExit(gate(rows))

@@ -372,8 +372,9 @@ class DFCCheckpointManager:
     # and deque — under the same two-increment epoch commit, and the manifest
     # records the kind so ``load_structure`` can rebuild the typed state.
     def combine_structure(self, state, extra_meta: Optional[Dict] = None) -> List[int]:
-        """Persist a StackState / QueueState / DequeState for every ready
-        announcement (same elimination + two-increment commit as combine)."""
+        """Persist a StackState / QueueState / DequeState / MapState for every
+        ready announcement (same elimination + two-increment commit as
+        combine)."""
         from repro.core.jax_dfc import struct_kind
 
         kind = struct_kind(state)
@@ -382,6 +383,8 @@ class DFCCheckpointManager:
         meta["struct_epoch"] = int(state.epoch)
         if kind == "stack":
             meta["committed_size"] = int(state.active_size())
+        elif kind == "map":
+            meta["committed_count"] = int(state.active_count())
         else:
             ends = state.active_ends()
             meta["committed_ends"] = [int(ends[0]), int(ends[1])]

@@ -76,6 +76,25 @@ R_NONE = 0
 R_ACK = 1
 R_VALUE = 2
 R_EMPTY = 3
+# keyed-map op codes (interpreted by map shards; see MapState below)
+OP_MAP_INSERT = 1
+OP_MAP_LOOKUP = 2
+OP_MAP_DELETE = 3
+OP_MAP_CAS = 4
+# map response kinds: code 4 is reserved for the runtime-level R_OVERFLOW
+# (repro.runtime.dfc_shard), so the map's rejections start at 5 — both are
+# DEFINITIVE verdicts (the op completed without touching state), unlike
+# R_OVERFLOW which marks an op that never reached its shard.
+R_FULL = 5  # insert into a full bucket: clean rejection, no write
+R_CAS_FAIL = 6  # CAS found the key but the expected value did not match
+# OP_MAP_CAS packs (expected, new) into ONE f32 param as
+# ``expected * CAS_DOM + new``, both operands in [0, CAS_DOM).  The maximum
+# packed value CAS_DOM**2 - 1 == 2**24 - 1 is exactly the top of f32's
+# contiguous-integer range, so the packing is lossless end to end (including
+# the JSON durable mirror, which cannot carry NaN-boxed payloads).
+CAS_DOM = 4096
+# slots per hash bucket of a map shard (the fixed probe window)
+MAP_BUCKET_SLOTS = 8
 
 # announcement lanes (per-side combiners, ISSUE 8): every op code of a
 # two-sided structure belongs to exactly one combining lane — the HEAD lane
@@ -543,6 +562,250 @@ def sequential_reference_deque(deque_list, ops, params):
     return d, responses, kinds
 
 
+# ========================================================================= map
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MapState:
+    """Bucketed-hash DFC map with a double-buffered entry count.
+
+    Fixed capacity, open addressing confined to one bucket: slot ``i``
+    belongs to bucket ``i // bslots`` where ``bslots = min(capacity,
+    MAP_BUCKET_SLOTS)``, and a key only ever lives in its hash bucket's
+    ``bslots`` slots — an insert into a bucket with no free slot is a CLEAN
+    rejection (``R_FULL``; state untouched).  Unlike the ring structures
+    there is no committed/inactive split of the table itself: a combining
+    phase mutates ``keys/values/occupied`` in place and durability comes
+    from the runtime's slot-alternating full-state snapshots (the same
+    generic ``_persist_shard`` path every kind rides).  Only ``count`` is
+    double-buffered by epoch parity so committed sizes are readable without
+    trusting an in-flight phase.
+    """
+
+    keys: jax.Array  # i32[capacity]
+    values: jax.Array  # f32[capacity]
+    occupied: jax.Array  # i32[capacity] — 0/1 per slot
+    count: jax.Array  # i32[2] — two alternating live-entry counts
+    epoch: jax.Array  # i32[]  — cEpoch (always even between phases)
+
+    @property
+    def active_idx(self) -> jax.Array:
+        return (self.epoch // 2) % 2
+
+    def active_count(self) -> jax.Array:
+        return self.count[self.active_idx]
+
+
+def map_geometry(capacity: int) -> Tuple[int, int]:
+    """(slots per bucket, bucket count) of a map shard of ``capacity``.
+
+    Capacity must be a multiple of the bucket width so every slot belongs
+    to exactly one bucket.
+    """
+    bslots = min(capacity, MAP_BUCKET_SLOTS)
+    if capacity % bslots != 0:
+        raise ValueError(
+            f"map capacity {capacity} not a multiple of bucket width {bslots}"
+        )
+    return bslots, capacity // bslots
+
+
+def init_map(capacity: int, dtype=jnp.float32) -> MapState:
+    map_geometry(capacity)  # validate up front
+    return MapState(
+        keys=jnp.zeros((capacity,), jnp.int32),
+        values=jnp.zeros((capacity,), dtype=dtype),
+        occupied=jnp.zeros((capacity,), jnp.int32),
+        count=jnp.zeros((2,), jnp.int32),
+        epoch=jnp.zeros((), jnp.int32),
+    )
+
+
+def map_bucket(keys, n_buckets: int) -> jax.Array:
+    """Bucket of each key inside ONE map shard (device path).
+
+    A second multiplicative mix, decorrelated from the router's shard hash
+    (which stops after the first xor-shift): keys that collide into one
+    shard still spread across its buckets.
+    """
+    h = jnp.asarray(keys).astype(jnp.uint32) * jnp.uint32(2654435761)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(2246822519)
+    h = h ^ (h >> 13)
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def map_bucket_host(keys, n_buckets: int) -> np.ndarray:
+    """NumPy twin of :func:`map_bucket` for host-side oracles and rebuilds."""
+    h = (np.asarray(keys, np.uint64) * 2654435761) & 0xFFFFFFFF
+    h = h ^ (h >> 16)
+    h = (h * 2246822519) & 0xFFFFFFFF
+    h = h ^ (h >> 13)
+    return (h % n_buckets).astype(np.int32)
+
+
+def combine_map(
+    state: MapState, keys: jax.Array, ops: jax.Array, params: jax.Array
+) -> Tuple[MapState, jax.Array, jax.Array]:
+    """One DFC map combining phase over N keyed announcement lanes.
+
+    Map ops do not commute (insert/delete/CAS on one key), so there is no
+    elimination pass: the lanes are applied in announcement order by a
+    ``lax.scan`` — the linearization IS lane order, shared with
+    ``sequential_reference_map`` and the Pallas twin.  Per lane:
+
+      op              hit                      miss
+      --------------  -----------------------  -------------------------
+      OP_MAP_INSERT   overwrite, R_ACK         free slot: write, R_ACK;
+                                               bucket full: R_FULL
+      OP_MAP_LOOKUP   R_VALUE (resp=value)     R_EMPTY
+      OP_MAP_DELETE   clear slot, R_VALUE      R_EMPTY
+      OP_MAP_CAS      match: write new,        R_EMPTY
+                      R_VALUE (resp=old);
+                      mismatch: R_CAS_FAIL
+                      (resp=current)
+
+    Returns (new_state, responses f32[N], kinds i32[N]).
+    """
+    cap = state.keys.shape[0]
+    bslots, n_buckets = map_geometry(cap)
+    slot_bucket = jnp.arange(cap, dtype=jnp.int32) // bslots
+    slot_idx = jnp.arange(cap, dtype=jnp.int32)
+
+    def lane(carry, xs):
+        mk, mv, mo, cnt = carry
+        key, op, par = xs
+        in_b = slot_bucket == map_bucket(key, n_buckets)
+        occ = mo != 0
+        # key 0 is legal, so a hit needs the occupied flag, not just key match
+        hit = in_b & occ & (mk == key)
+        has_hit = jnp.any(hit)
+        hit_idx = jnp.argmax(hit).astype(jnp.int32)
+        free = in_b & ~occ
+        has_free = jnp.any(free)
+        free_idx = jnp.argmax(free).astype(jnp.int32)
+        cur = mv[jnp.where(has_hit, hit_idx, 0)].astype(jnp.float32)
+
+        is_ins = op == OP_MAP_INSERT
+        is_lku = op == OP_MAP_LOOKUP
+        is_del = op == OP_MAP_DELETE
+        is_cas = op == OP_MAP_CAS
+        expected = jnp.floor(par / CAS_DOM)
+        cas_new = par - expected * CAS_DOM
+        cas_hit = is_cas & has_hit
+        cas_ok = cas_hit & (cur == expected)
+
+        do_ins = is_ins & (has_hit | has_free)
+        do_del = is_del & has_hit
+        do_write = do_ins | cas_ok
+        wslot = jnp.where(cas_ok | has_hit, hit_idx, free_idx)
+        wval = jnp.where(is_cas, cas_new, par).astype(mv.dtype)
+        wmask = do_write & (slot_idx == wslot)
+        dmask = do_del & (slot_idx == hit_idx)
+        mk = jnp.where(wmask, key, jnp.where(dmask, 0, mk))
+        mv = jnp.where(wmask, wval, jnp.where(dmask, 0, mv))
+        mo = jnp.where(wmask, 1, jnp.where(dmask, 0, mo))
+        cnt = (
+            cnt
+            + (is_ins & ~has_hit & has_free).astype(jnp.int32)
+            - do_del.astype(jnp.int32)
+        )
+
+        kind = jnp.full((), R_NONE, jnp.int32)
+        kind = jnp.where(do_ins, R_ACK, kind)
+        kind = jnp.where(is_ins & ~has_hit & ~has_free, R_FULL, kind)
+        kind = jnp.where((is_lku | is_del | is_cas) & ~has_hit, R_EMPTY, kind)
+        kind = jnp.where((is_lku | do_del | cas_ok) & has_hit, R_VALUE, kind)
+        kind = jnp.where(cas_hit & ~cas_ok, R_CAS_FAIL, kind)
+        resp = jnp.where((is_lku | is_del | is_cas) & has_hit, cur, 0.0)
+        return (mk, mv, mo, cnt), (resp, kind.astype(jnp.int32))
+
+    (mk, mv, mo, cnt), (responses, kinds) = jax.lax.scan(
+        lane,
+        (state.keys, state.values, state.occupied, state.active_count()),
+        (
+            jnp.asarray(keys).astype(jnp.int32),
+            jnp.asarray(ops).astype(jnp.int32),
+            jnp.asarray(params).astype(jnp.float32),
+        ),
+    )
+
+    # --- publish: write the inactive count, bump epoch by 2 ------------------
+    inactive = (state.epoch // 2 + 1) % 2
+    new_state = MapState(
+        keys=mk,
+        values=mv,
+        occupied=mo,
+        count=state.count.at[inactive].set(cnt),
+        epoch=state.epoch + 2,
+    )
+    return new_state, responses, kinds
+
+
+combine_map_jit = jax.jit(combine_map)
+
+
+def sequential_reference_map(entries, keys, ops, params, capacity=None):
+    """Canonical map linearization witness in pure Python (test oracle).
+
+    ``entries`` is a ``{int key: float value}`` dict; lanes apply in
+    announcement order.  With ``capacity``, an insert of an ABSENT key is
+    rejected ``R_FULL`` iff its hash bucket already holds ``bslots`` live
+    keys — bucket occupancy depends only on the live-key set (deletes fully
+    clear their slot), so the dict oracle models the fixed table exactly.
+    CAS decode runs in float32 so the oracle's arithmetic is bit-identical
+    to the device's.  Returns (new_entries, responses, kinds).
+    """
+    n = len(ops)
+    responses = [0.0] * n
+    kinds = [R_NONE] * n
+    m = dict(entries)
+    if capacity is not None:
+        bslots, n_buckets = map_geometry(int(capacity))
+        bucket_of = {
+            k: int(map_bucket_host([k], n_buckets)[0]) for k in m
+        }
+    for i in range(n):
+        op = int(ops[i])
+        key = int(keys[i])
+        par = float(np.float32(params[i]))
+        if op == OP_MAP_INSERT:
+            if key not in m and capacity is not None:
+                b = int(map_bucket_host([key], n_buckets)[0])
+                if sum(1 for v in bucket_of.values() if v == b) >= bslots:
+                    kinds[i] = R_FULL
+                    continue
+                bucket_of[key] = b
+            m[key] = par
+            kinds[i] = R_ACK
+        elif op == OP_MAP_LOOKUP:
+            if key in m:
+                responses[i] = m[key]
+                kinds[i] = R_VALUE
+            else:
+                kinds[i] = R_EMPTY
+        elif op == OP_MAP_DELETE:
+            if key in m:
+                responses[i] = m.pop(key)
+                kinds[i] = R_VALUE
+                if capacity is not None:
+                    bucket_of.pop(key, None)
+            else:
+                kinds[i] = R_EMPTY
+        elif op == OP_MAP_CAS:
+            expected = float(np.floor(np.float32(par) / np.float32(CAS_DOM)))
+            new = float(np.float32(par) - np.float32(expected) * np.float32(CAS_DOM))
+            if key not in m:
+                kinds[i] = R_EMPTY
+            elif m[key] == expected:
+                responses[i] = m[key]
+                m[key] = new
+                kinds[i] = R_VALUE
+            else:
+                responses[i] = m[key]
+                kinds[i] = R_CAS_FAIL
+    return m, responses, kinds
+
+
 # ================================================================== registry
 @dataclasses.dataclass(frozen=True)
 class StructSpec:
@@ -567,6 +830,11 @@ class StructSpec:
     reference: Callable[..., Any]
     n_opcodes: int
     op_lanes: Tuple[int, ...] = ()
+    # keyed kinds interpret the announced KEY as part of the op (the map's
+    # hash key), so their combine/reference take an extra keys argument:
+    # ``combine(state, keys, ops, params)`` and
+    # ``reference(contents, keys, ops, params, capacity=None)``.
+    keyed: bool = False
 
     @property
     def lane_splittable(self) -> bool:
@@ -599,6 +867,18 @@ STRUCTS: Dict[str, StructSpec] = {
         # (pushR/popR) the tail lane — the serving tier's arrivals
         # (push_back) and admission pops (pop_front) land on opposite lanes
         op_lanes=(LANE_NONE, LANE_HEAD, LANE_HEAD, LANE_TAIL, LANE_TAIL),
+    ),
+    "map": StructSpec(
+        "map",
+        MapState,
+        init_map,
+        combine_map,
+        sequential_reference_map,
+        5,
+        # map ops do not commute, so there is no per-side split: every op
+        # rides the single combiner lane
+        op_lanes=(LANE_NONE,) * 5,
+        keyed=True,
     ),
 }
 
@@ -649,10 +929,39 @@ def state_from_contents(kind: str, contents, capacity: int, epoch: int):
     if n > capacity:
         raise ValueError(f"{n} values exceed capacity {capacity}")
     state = spec.init(capacity)
+    active = (epoch // 2) % 2
+    if kind == "map":
+        # contents is a list of (key, value) pairs; rebuild by host-side
+        # bucket probe.  Merged shards hold disjoint key sets (routing is
+        # injective per key), but the union can still overflow one bucket —
+        # surface that as the same ValueError a too-long ring would raise.
+        bslots, n_buckets = map_geometry(capacity)
+        mk = np.zeros((capacity,), np.int32)
+        mv = np.zeros((capacity,), np.asarray(state.values).dtype)
+        mo = np.zeros((capacity,), np.int32)
+        for key, val in contents:
+            base = int(map_bucket_host([int(key)], n_buckets)[0]) * bslots
+            for j in range(bslots):
+                if not mo[base + j]:
+                    mk[base + j] = int(key)
+                    mv[base + j] = val
+                    mo[base + j] = 1
+                    break
+            else:
+                raise ValueError(
+                    f"map bucket {base // bslots} overflows rebuilding "
+                    f"{n} entries at capacity {capacity}"
+                )
+        return MapState(
+            keys=jnp.asarray(mk),
+            values=jnp.asarray(mv),
+            occupied=jnp.asarray(mo),
+            count=state.count.at[active].set(n),
+            epoch=jnp.asarray(epoch, jnp.int32),
+        )
     values = state.values.at[: max(n, 0)].set(
         jnp.asarray(contents, state.values.dtype)
     ) if n else state.values
-    active = (epoch // 2) % 2
     if kind == "stack":
         return StackState(
             values=values,

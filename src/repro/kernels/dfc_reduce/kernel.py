@@ -65,6 +65,16 @@ R_NONE = 0
 R_ACK = 1
 R_VALUE = 2
 R_EMPTY = 3
+# map op codes / response kinds (local copies; see core/jax_dfc.py — code 4
+# is the runtime's R_OVERFLOW, so map rejections start at 5)
+OP_MAP_INSERT = 1
+OP_MAP_LOOKUP = 2
+OP_MAP_DELETE = 3
+OP_MAP_CAS = 4
+R_FULL = 5
+R_CAS_FAIL = 6
+CAS_DOM = 4096
+MAP_BUCKET_SLOTS = 8
 
 
 def _route(src_idx, vals, n):
@@ -242,6 +252,101 @@ def _deque_reduce_math(ops, params, window_l, window_r, size):
         [sl, dl, sr, dr, nl_elim, nr_elim, size_after, jnp.zeros((), jnp.int32)]
     ).astype(jnp.int32)
     return resp, kinds, seg_l, seg_r, counts
+
+
+def _map_bucket(keys, n_buckets):
+    """In-shard bucket hash (local twin of core's ``map_bucket``)."""
+    h = jnp.asarray(keys).astype(jnp.uint32) * jnp.uint32(2654435761)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(2246822519)
+    h = h ^ (h >> 13)
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def _map_reduce_math(mkeys, mvals, mocc, count, lkeys, ops, params):
+    """One map shard's combining phase over N keyed lanes.
+
+    Map ops do not commute, so lanes apply IN ANNOUNCEMENT ORDER (lax.scan);
+    each lane probes only its key's bucket — a ``dynamic_slice`` window of
+    ``bslots`` slots, updated in place — instead of masking the whole table
+    (the vectorized combine's approach; the differential tests pin the two
+    implementations to each other).
+
+    Returns (keys', values', occupied', count', resp f32[N], kinds i32[N]).
+    """
+    cap = mkeys.shape[0]
+    bslots = min(cap, MAP_BUCKET_SLOTS)
+    n_buckets = cap // bslots
+    win_idx = jax.lax.broadcasted_iota(jnp.int32, (bslots,), 0)
+
+    def lane(carry, xs):
+        mk, mv, mo, cnt = carry
+        key, op, par = xs
+        base = _map_bucket(key, n_buckets) * bslots
+        wk = jax.lax.dynamic_slice(mk, (base,), (bslots,))
+        wv = jax.lax.dynamic_slice(mv, (base,), (bslots,))
+        wo = jax.lax.dynamic_slice(mo, (base,), (bslots,))
+        occ = wo != 0
+        hit = occ & (wk == key)  # key 0 is legal: hit needs the occupied bit
+        has_hit = jnp.any(hit)
+        hit_off = jnp.argmax(hit).astype(jnp.int32)
+        has_free = jnp.any(~occ)
+        free_off = jnp.argmax(~occ).astype(jnp.int32)
+        # table keys are unique, so the masked sum IS the hit slot's value
+        cur = jnp.sum(jnp.where(hit, wv, 0.0))
+
+        is_ins = op == OP_MAP_INSERT
+        is_lku = op == OP_MAP_LOOKUP
+        is_del = op == OP_MAP_DELETE
+        is_cas = op == OP_MAP_CAS
+        expected = jnp.floor(par / CAS_DOM)
+        cas_new = par - expected * CAS_DOM
+        cas_hit = is_cas & has_hit
+        cas_ok = cas_hit & (cur == expected)
+
+        do_ins = is_ins & (has_hit | has_free)
+        do_del = is_del & has_hit
+        do_write = do_ins | cas_ok
+        woff = jnp.where(has_hit, hit_off, free_off)
+        wval = jnp.where(is_cas, cas_new, par)
+        wmask = do_write & (win_idx == woff)
+        dmask = do_del & (win_idx == hit_off)
+        wk = jnp.where(wmask, key, jnp.where(dmask, 0, wk))
+        wv = jnp.where(wmask, wval, jnp.where(dmask, 0.0, wv))
+        wo = jnp.where(wmask, 1, jnp.where(dmask, 0, wo))
+        mk = jax.lax.dynamic_update_slice(mk, wk, (base,))
+        mv = jax.lax.dynamic_update_slice(mv, wv, (base,))
+        mo = jax.lax.dynamic_update_slice(mo, wo, (base,))
+        cnt = (
+            cnt
+            + (is_ins & ~has_hit & has_free).astype(jnp.int32)
+            - do_del.astype(jnp.int32)
+        )
+
+        kind = jnp.full((), R_NONE, jnp.int32)
+        kind = jnp.where(do_ins, R_ACK, kind)
+        kind = jnp.where(is_ins & ~has_hit & ~has_free, R_FULL, kind)
+        kind = jnp.where((is_lku | is_del | is_cas) & ~has_hit, R_EMPTY, kind)
+        kind = jnp.where((is_lku | do_del | cas_ok) & has_hit, R_VALUE, kind)
+        kind = jnp.where(cas_hit & ~cas_ok, R_CAS_FAIL, kind)
+        resp = jnp.where((is_lku | is_del | is_cas) & has_hit, cur, 0.0)
+        return (mk, mv, mo, cnt), (resp, kind)
+
+    (mk, mv, mo, cnt), (resp, kinds) = jax.lax.scan(
+        lane,
+        (
+            mkeys,
+            mvals.astype(jnp.float32),
+            mocc,
+            jnp.asarray(count, jnp.int32).reshape(()),
+        ),
+        (
+            lkeys.astype(jnp.int32),
+            ops.astype(jnp.int32),
+            params.astype(jnp.float32),
+        ),
+    )
+    return mk, mv, mo, cnt, resp, kinds
 
 
 # ------------------------------------------------------- single-object kernels
@@ -521,3 +626,85 @@ def dfc_deque_reduce_grid_call(
         ),
         interpret=interpret,
     )(ops, params, windows_l, windows_r, sizes.astype(jnp.int32))
+
+
+def dfc_map_reduce_grid_kernel(
+    mkeys_ref,
+    mvals_ref,
+    mocc_ref,
+    count_ref,
+    lkeys_ref,
+    ops_ref,
+    params_ref,
+    keys_out_ref,
+    vals_out_ref,
+    occ_out_ref,
+    count_out_ref,
+    resp_ref,
+    kind_ref,
+):
+    mk, mv, mo, cnt, resp, kinds = _map_reduce_math(
+        mkeys_ref[0, :],
+        mvals_ref[0, :],
+        mocc_ref[0, :],
+        count_ref[0],
+        lkeys_ref[0, :],
+        ops_ref[0, :],
+        params_ref[0, :],
+    )
+    keys_out_ref[0, :] = mk
+    vals_out_ref[0, :] = mv
+    occ_out_ref[0, :] = mo
+    count_out_ref[0, 0] = cnt
+    resp_ref[0, :] = resp
+    kind_ref[0, :] = kinds
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dfc_map_reduce_grid_call(
+    mkeys, mvals, mocc, counts, lkeys, ops, params, *, interpret: bool = True
+):
+    """All shards' map combines in one dispatch: unlike the ring kinds there
+    is no caller-side splice — the whole table rides through the kernel and
+    comes back updated (map writes are scattered by bucket, not contiguous).
+    """
+    s, cap = mkeys.shape
+    n = ops.shape[1]
+    return pl.pallas_call(
+        dfc_map_reduce_grid_kernel,
+        grid=(s,),
+        out_shape=(
+            jax.ShapeDtypeStruct((s, cap), jnp.int32),  # keys'
+            jax.ShapeDtypeStruct((s, cap), jnp.float32),  # values'
+            jax.ShapeDtypeStruct((s, cap), jnp.int32),  # occupied'
+            jax.ShapeDtypeStruct((s, 1), jnp.int32),  # count'
+            jax.ShapeDtypeStruct((s, n), jnp.float32),  # responses
+            jax.ShapeDtypeStruct((s, n), jnp.int32),  # kinds
+        ),
+        in_specs=[
+            _row_spec(cap),
+            _row_spec(cap),
+            _row_spec(cap),
+            _scalar_spec(),
+            _row_spec(n),
+            _row_spec(n),
+            _row_spec(n),
+        ],
+        out_specs=(
+            _row_spec(cap),
+            _row_spec(cap),
+            _row_spec(cap),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            _row_spec(n),
+            _row_spec(n),
+        ),
+        interpret=interpret,
+    )(
+        mkeys,
+        mvals.astype(jnp.float32),
+        mocc,
+        counts.astype(jnp.int32),
+        lkeys,
+        ops,
+        params,
+    )

@@ -28,6 +28,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.jax_dfc import (
     OP_NONE,
     DequeState,
+    MapState,
     PhaseIntents,
     QueueState,
     StackState,
@@ -35,6 +36,7 @@ from repro.core.jax_dfc import (
 from repro.kernels.dfc_reduce.kernel import (
     dfc_deque_reduce_call,
     dfc_deque_reduce_grid_call,
+    dfc_map_reduce_grid_call,
     dfc_queue_reduce_call,
     dfc_queue_reduce_grid_call,
     dfc_reduce_call,
@@ -42,6 +44,7 @@ from repro.kernels.dfc_reduce.kernel import (
 )
 from repro.kernels.dfc_reduce.ref import (
     dfc_deque_reduce_ref,
+    dfc_map_reduce_ref,
     dfc_queue_reduce_ref,
     dfc_reduce_ref,
 )
@@ -284,6 +287,43 @@ def dfc_sharded_deque_combine_step(
     return jax.vmap(_deque_splice)(state, segs_l, segs_r, counts), resp, kinds
 
 
+# --------------------------------------------------------------------- map
+@functools.partial(jax.jit, static_argnames=("backend",))
+def dfc_sharded_map_combine_step(state: MapState, keys, ops, params, *, backend: str = "ref"):
+    """Sharded map combine: one grid dispatch, program instance = shard.
+
+    Unlike the ring kinds there is no window/splice factoring — the whole
+    bucketed table rides through the kernel (map writes scatter by bucket,
+    not contiguously at an end), and only the double-buffered ``count`` is
+    published on the inactive slot here.
+    """
+    s = ops.shape[0]
+    rows = jnp.arange(s)
+    active_counts = state.count[rows, (state.epoch // 2) % 2]
+
+    if backend in ("pallas", "pallas_tpu"):
+        mk, mv, mo, cnt, resp, kinds = dfc_map_reduce_grid_call(
+            state.keys, state.values, state.occupied, active_counts,
+            keys, ops, params, interpret=backend == "pallas",
+        )
+        cnt = cnt[:, 0]
+    else:
+        mk, mv, mo, cnt, resp, kinds = jax.vmap(dfc_map_reduce_ref)(
+            state.keys, state.values, state.occupied, active_counts,
+            keys, ops, params,
+        )
+
+    inactive = (state.epoch // 2 + 1) % 2
+    new_state = MapState(
+        keys=mk,
+        values=mv.astype(state.values.dtype),
+        occupied=mo,
+        count=state.count.at[rows, inactive].set(cnt),
+        epoch=state.epoch + 2,
+    )
+    return new_state, resp, kinds
+
+
 SHARDED_COMBINE_STEPS = {
     "stack": dfc_sharded_combine_step,
     "queue": dfc_sharded_queue_combine_step,
@@ -292,14 +332,25 @@ SHARDED_COMBINE_STEPS = {
 
 
 # -------------------------------------------------------------- multi-batch
-def _one_sharded_combine(kind: str, backend: str, state, ops, params):
+def _one_sharded_combine(kind: str, backend: str, state, ops, params, keys=None):
     """One sharded combining phase of ``kind`` — the shared dispatch used by
     both the single-batch and the chained entry points: a ``vmap`` of the
-    single-object combine for the jnp backend, one Pallas grid otherwise."""
+    single-object combine for the jnp backend, one Pallas grid otherwise.
+
+    Keyed kinds (the map) additionally consume the announced KEYS: callers
+    that routed a batch thread them through; ``None`` falls back to all-zero
+    keys (only valid for batches with no keyed ops).
+    """
     from repro.core.jax_dfc import STRUCTS
 
+    spec = STRUCTS[kind]
+    if spec.keyed:
+        k = jnp.zeros_like(ops) if keys is None else keys
+        if backend == "jnp":
+            return jax.vmap(spec.combine)(state, k, ops, params)
+        return dfc_sharded_map_combine_step(state, k, ops, params, backend=backend)
     if backend == "jnp":
-        return jax.vmap(STRUCTS[kind].combine)(state, ops, params)
+        return jax.vmap(spec.combine)(state, ops, params)
     return SHARDED_COMBINE_STEPS[kind](state, ops, params, backend=backend)
 
 
@@ -349,7 +400,7 @@ def dfc_handoff_combine_step(state, ops, params, *, kind, backend="jnp"):
 
 @functools.partial(jax.jit, static_argnames=("kind", "backend", "unroll"))
 def dfc_sharded_multi_combine_step(
-    state, ops, params, *, kind, backend="ref", unroll=1
+    state, ops, params, *, kind, backend="ref", unroll=1, keys=None
 ):
     """Chain B sharded combining phases through ONE dispatch.
 
@@ -380,10 +431,12 @@ def dfc_sharded_multi_combine_step(
     is the final state) and ``resp`` / ``kinds`` are ``[B, S, N]``.
     """
 
+    all_keys = jnp.zeros_like(ops) if keys is None else keys
+
     def body(carry, xs):
-        b_ops, b_params = xs
+        b_keys, b_ops, b_params = xs
         combined, s_resp, s_kinds = _one_sharded_combine(
-            kind, backend, carry, b_ops, b_params
+            kind, backend, carry, b_ops, b_params, keys=b_keys
         )
         touched = jnp.any(b_ops != OP_NONE, axis=1)  # bool[S]
 
@@ -395,31 +448,38 @@ def dfc_sharded_multi_combine_step(
         return new_state, (new_state, s_resp, s_kinds)
 
     _, (states, resp, kinds) = jax.lax.scan(
-        body, state, (ops, params), unroll=max(1, min(int(unroll), ops.shape[0]))
+        body,
+        state,
+        (all_keys, ops, params),
+        unroll=max(1, min(int(unroll), ops.shape[0])),
     )
     return states, resp, kinds
 
 
 def dfc_hetero_multi_combine_step(
-    groups, group_ops, group_params, *, backend="ref", unroll=1
+    groups, group_ops, group_params, *, backend="ref", unroll=1,
+    group_keys=None,
 ):
     """Chained heterogeneous combine: ``dfc_sharded_multi_combine_step`` per
     kind group present.  ``group_ops[kind]`` is ``[B, S_kind, N]``; every kind
     chains its B batches in one dispatch, unrolled ``unroll`` batches per
-    scan step (the pipeline passes its depth).  Returns ``{kind: (states,
-    resp, kinds)}`` with the per-batch leading axis (see the homogeneous
-    twin).  Meant to be called inside an enclosing jit (not jitted itself)."""
+    scan step (the pipeline passes its depth).  ``group_keys`` carries the
+    routed announcement keys for keyed kinds (the map).  Returns ``{kind:
+    (states, resp, kinds)}`` with the per-batch leading axis (see the
+    homogeneous twin).  Meant to be called inside an enclosing jit (not
+    jitted itself)."""
     out = {}
     for kind in sorted(groups):
         out[kind] = dfc_sharded_multi_combine_step(
             groups[kind], group_ops[kind], group_params[kind],
             kind=kind, backend=backend, unroll=unroll,
+            keys=None if group_keys is None else group_keys.get(kind),
         )
     return out
 
 
 # ------------------------------------------------------------ K-phase fusion
-def _phase_grid_combine(kind: str, backend: str, state, ops, params):
+def _phase_grid_combine(kind: str, backend: str, state, ops, params, keys=None):
     """Pallas-grid-over-the-phase-axis twin of the scanned K-phase chain.
 
     One ``pallas_call`` with ``grid=(K,)``: program instance k runs phase k
@@ -443,16 +503,21 @@ def _phase_grid_combine(kind: str, backend: str, state, ops, params):
             f"phase_axis='grid' needs a Pallas backend, got {backend!r}"
         )
     k_phases, n_shards, n = ops.shape
+    if keys is None:
+        keys = jnp.zeros_like(ops)
     leaves, treedef = jax.tree_util.tree_flatten(state)
     n_leaves = len(leaves)
+    keyed = STRUCTS[kind].keyed
     combine = jax.vmap(STRUCTS[kind].combine)
 
     def kernel(*refs):
         state_in = refs[:n_leaves]
-        ops_ref, par_ref = refs[n_leaves], refs[n_leaves + 1]
-        state_out = refs[n_leaves + 2: 2 * n_leaves + 2]
-        resp_ref, kind_ref = refs[2 * n_leaves + 2], refs[2 * n_leaves + 3]
-        scratch = refs[2 * n_leaves + 4:]
+        keys_ref, ops_ref, par_ref = (
+            refs[n_leaves], refs[n_leaves + 1], refs[n_leaves + 2]
+        )
+        state_out = refs[n_leaves + 3: 2 * n_leaves + 3]
+        resp_ref, kind_ref = refs[2 * n_leaves + 3], refs[2 * n_leaves + 4]
+        scratch = refs[2 * n_leaves + 5:]
         k = pl.program_id(0)
 
         @pl.when(k == 0)
@@ -464,7 +529,10 @@ def _phase_grid_combine(kind: str, backend: str, state, ops, params):
             treedef, [s[...] for s in scratch]
         )
         b_ops, b_params = ops_ref[0], par_ref[0]
-        combined, resp, kinds = combine(carry, b_ops, b_params)
+        if keyed:
+            combined, resp, kinds = combine(carry, keys_ref[0], b_ops, b_params)
+        else:
+            combined, resp, kinds = combine(carry, b_ops, b_params)
         touched = jnp.any(b_ops != OP_NONE, axis=1)  # bool[S]
 
         def _select(new_leaf, old_leaf):
@@ -506,12 +574,16 @@ def _phase_grid_combine(kind: str, backend: str, state, ops, params):
             jax.ShapeDtypeStruct((k_phases, n_shards, n), jnp.int32),
         ),
         in_specs=[_whole(l) for l in leaves]
-        + [_phase_row((n_shards, n)), _phase_row((n_shards, n))],
+        + [
+            _phase_row((n_shards, n)),
+            _phase_row((n_shards, n)),
+            _phase_row((n_shards, n)),
+        ],
         out_specs=tuple(_phase_row(l.shape) for l in leaves)
         + (_phase_row((n_shards, n)), _phase_row((n_shards, n))),
         scratch_shapes=[pltpu.VMEM(l.shape, l.dtype) for l in leaves],
         interpret=backend == "pallas",
-    )(*leaves, ops, params)
+    )(*leaves, keys, ops, params)
     states = jax.tree_util.tree_unflatten(treedef, list(outs[:n_leaves]))
     resp, kinds = outs[n_leaves], outs[n_leaves + 1]
     return states, resp, kinds
@@ -521,7 +593,8 @@ def _phase_grid_combine(kind: str, backend: str, state, ops, params):
     jax.jit, static_argnames=("kind", "backend", "unroll", "phase_axis")
 )
 def dfc_multi_phase_step(
-    state, ops, params, *, kind, backend="ref", unroll=1, phase_axis="scan"
+    state, ops, params, *, kind, backend="ref", unroll=1, phase_axis="scan",
+    keys=None,
 ):
     """Fuse K combining PHASES of one kind group into a single dispatch and
     accumulate each phase's persist INTENTS device-side.
@@ -555,11 +628,12 @@ def dfc_multi_phase_step(
     """
     if phase_axis == "grid":
         states, resp, kinds = _phase_grid_combine(
-            kind, backend, state, ops, params
+            kind, backend, state, ops, params, keys=keys
         )
     elif phase_axis == "scan":
         states, resp, kinds = dfc_sharded_multi_combine_step(
-            state, ops, params, kind=kind, backend=backend, unroll=unroll
+            state, ops, params, kind=kind, backend=backend, unroll=unroll,
+            keys=keys,
         )
     else:
         raise ValueError(f"unknown phase_axis {phase_axis!r}")
@@ -576,10 +650,11 @@ def dfc_multi_phase_step(
 
 def dfc_hetero_multi_phase_step(
     groups, group_ops, group_params, *, backend="ref", unroll=1,
-    phase_axis="scan",
+    phase_axis="scan", group_keys=None,
 ):
     """Heterogeneous K-phase fusion: ``dfc_multi_phase_step`` per kind group
-    present (``group_ops[kind]`` is ``[K, S_kind, N]``).  Returns
+    present (``group_ops[kind]`` is ``[K, S_kind, N]``).  ``group_keys``
+    carries the routed announcement keys for keyed kinds (the map).  Returns
     ``{kind: (states, resp, kinds, intents)}`` — every kind fuses its whole
     phase chain in one dispatch.  Meant to be called inside an enclosing jit
     (not jitted itself)."""
@@ -588,12 +663,15 @@ def dfc_hetero_multi_phase_step(
         out[kind] = dfc_multi_phase_step(
             groups[kind], group_ops[kind], group_params[kind],
             kind=kind, backend=backend, unroll=unroll, phase_axis=phase_axis,
+            keys=None if group_keys is None else group_keys.get(kind),
         )
     return out
 
 
 # ------------------------------------------------------------- heterogeneous
-def dfc_hetero_combine_step(groups, group_ops, group_params, *, backend="ref"):
+def dfc_hetero_combine_step(
+    groups, group_ops, group_params, *, backend="ref", group_keys=None
+):
     """STRUCTS-dispatched combine over a heterogeneous shard fabric.
 
     ``groups`` maps a structure kind to that kind's shard-stacked state;
@@ -610,6 +688,7 @@ def dfc_hetero_combine_step(groups, group_ops, group_params, *, backend="ref"):
     out = {}
     for kind in sorted(groups):
         out[kind] = _one_sharded_combine(
-            kind, backend, groups[kind], group_ops[kind], group_params[kind]
+            kind, backend, groups[kind], group_ops[kind], group_params[kind],
+            keys=None if group_keys is None else group_keys.get(kind),
         )
     return out

@@ -6,8 +6,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dfc_reduce.kernel import (
+    CAS_DOM,
+    MAP_BUCKET_SLOTS,
     OP_DEQ,
     OP_ENQ,
+    OP_MAP_CAS,
+    OP_MAP_DELETE,
+    OP_MAP_INSERT,
+    OP_MAP_LOOKUP,
     OP_POP,
     OP_POPL,
     OP_POPR,
@@ -15,9 +21,12 @@ from repro.kernels.dfc_reduce.kernel import (
     OP_PUSHL,
     OP_PUSHR,
     R_ACK,
+    R_CAS_FAIL,
     R_EMPTY,
+    R_FULL,
     R_NONE,
     R_VALUE,
+    _map_bucket,
 )
 
 
@@ -190,3 +199,76 @@ def dfc_deque_reduce_ref(ops, params, window_l, window_r, size):
         [sl, dl, sr, dr, nl_elim, nr_elim, size_after, jnp.zeros((), jnp.int32)]
     ).astype(jnp.int32)
     return resp, kinds, seg_l, seg_r, counts
+
+
+def dfc_map_reduce_ref(mkeys, mvals, mocc, count, lkeys, ops, params):
+    """Oracle for ``_map_reduce_math``: same lane-order scan, but probing via
+    full-table masks instead of the kernel's dynamic_slice bucket windows."""
+    cap = mkeys.shape[0]
+    bslots = min(cap, MAP_BUCKET_SLOTS)
+    n_buckets = cap // bslots
+    slot_bucket = jnp.arange(cap, dtype=jnp.int32) // bslots
+    slot_idx = jnp.arange(cap, dtype=jnp.int32)
+
+    def lane(carry, xs):
+        mk, mv, mo, cnt = carry
+        key, op, par = xs
+        in_b = slot_bucket == _map_bucket(key, n_buckets)
+        occ = mo != 0
+        hit = in_b & occ & (mk == key)
+        has_hit = jnp.any(hit)
+        hit_idx = jnp.argmax(hit).astype(jnp.int32)
+        free = in_b & ~occ
+        has_free = jnp.any(free)
+        free_idx = jnp.argmax(free).astype(jnp.int32)
+        cur = jnp.sum(jnp.where(hit, mv, 0.0))
+
+        is_ins = op == OP_MAP_INSERT
+        is_lku = op == OP_MAP_LOOKUP
+        is_del = op == OP_MAP_DELETE
+        is_cas = op == OP_MAP_CAS
+        expected = jnp.floor(par / CAS_DOM)
+        cas_new = par - expected * CAS_DOM
+        cas_hit = is_cas & has_hit
+        cas_ok = cas_hit & (cur == expected)
+
+        do_ins = is_ins & (has_hit | has_free)
+        do_del = is_del & has_hit
+        do_write = do_ins | cas_ok
+        wslot = jnp.where(has_hit, hit_idx, free_idx)
+        wval = jnp.where(is_cas, cas_new, par)
+        wmask = do_write & (slot_idx == wslot)
+        dmask = do_del & (slot_idx == hit_idx)
+        mk = jnp.where(wmask, key, jnp.where(dmask, 0, mk))
+        mv = jnp.where(wmask, wval, jnp.where(dmask, 0.0, mv))
+        mo = jnp.where(wmask, 1, jnp.where(dmask, 0, mo))
+        cnt = (
+            cnt
+            + (is_ins & ~has_hit & has_free).astype(jnp.int32)
+            - do_del.astype(jnp.int32)
+        )
+
+        kind = jnp.full((), R_NONE, jnp.int32)
+        kind = jnp.where(do_ins, R_ACK, kind)
+        kind = jnp.where(is_ins & ~has_hit & ~has_free, R_FULL, kind)
+        kind = jnp.where((is_lku | is_del | is_cas) & ~has_hit, R_EMPTY, kind)
+        kind = jnp.where((is_lku | do_del | cas_ok) & has_hit, R_VALUE, kind)
+        kind = jnp.where(cas_hit & ~cas_ok, R_CAS_FAIL, kind)
+        resp = jnp.where((is_lku | is_del | is_cas) & has_hit, cur, 0.0)
+        return (mk, mv, mo, cnt), (resp, kind)
+
+    (mk, mv, mo, cnt), (resp, kinds) = jax.lax.scan(
+        lane,
+        (
+            jnp.asarray(mkeys, jnp.int32),
+            jnp.asarray(mvals, jnp.float32),
+            jnp.asarray(mocc, jnp.int32),
+            jnp.asarray(count, jnp.int32).reshape(()),
+        ),
+        (
+            jnp.asarray(lkeys, jnp.int32),
+            jnp.asarray(ops, jnp.int32),
+            jnp.asarray(params, jnp.float32),
+        ),
+    )
+    return mk, mv, mo, cnt, resp, kinds

@@ -10,6 +10,11 @@ serving tier's REQUEST QUEUE — the ROADMAP's "request-queue tier" item:
     the same fabric** — a heterogeneous fabric in production position:
     arrivals (queue enq) and slot releases (stack push) combine in ONE fused
     phase;
+  * per-session serving state (priority, decode-slot binding, lifecycle
+    stage) lives in a **map shard of the same fabric**: arrival inserts it,
+    admission binds the slot with a fabric CAS, service marks it SERVED —
+    so ``recover()`` returns queues, slot pool, and session table from one
+    walk;
   * ``--priority`` (ISSUE 5) runs the request shards as DEQUES: a normal
     arrival joins the back of the line (``OP_PUSH_BACK``), admission drains
     the front (``OP_POP_FRONT``), and a high-priority session jumps the line
@@ -54,29 +59,65 @@ from repro.checkpoint.dfc_checkpoint import CrashNow, FaultInjector, SimFS
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.launch.tuned import apply_tuning
 from repro.core.jax_dfc import (
+    CAS_DOM,
     OP_DEQ,
     OP_ENQ,
+    OP_MAP_CAS,
+    OP_MAP_INSERT,
+    OP_MAP_LOOKUP,
     OP_POP,
     OP_POP_FRONT,
     OP_PUSH,
     OP_PUSH_BACK,
     OP_PUSH_FRONT,
+    R_CAS_FAIL,
     R_VALUE,
 )
 from repro.runtime.dfc_shard import _HASH_MULT, R_OVERFLOW, ShardedDFCRuntime
+
+
+# ------------------------------------------------- session-state map packing
+# The tier keeps per-session serving state (priority, decode-slot binding,
+# lifecycle stage) in a MAP SHARD of the same fabric, one entry per session.
+# The packed value fits in 12 bits so a whole-state swap rides a single
+# fabric CAS (``expected * CAS_DOM + new`` needs both sides < CAS_DOM):
+#
+#   bit 11      priority flag (front-of-queue arrival)
+#   bits 3..10  decode slot binding (SESSION_SLOT_NONE = unbound)
+#   bits 0..2   stage: QUEUED -> ADMITTED -> SERVED
+SESSION_QUEUED, SESSION_ADMITTED, SESSION_SERVED = 1, 2, 3
+SESSION_SLOT_NONE = 255
+# Each session owns the key window [sid * stride, (sid + 1) * stride): its
+# map key is the first window key routing to the session shard, so map keys
+# are unique BY CONSTRUCTION (windows are disjoint) and the recovery walk
+# inverts them: sid = key // stride.
+_SESSION_KEY_STRIDE = 64
+
+
+def pack_session(priority: int, slot: int, stage: int) -> int:
+    """Pack (priority, slot, stage) into one CAS-swappable map value."""
+    return (2048 if priority else 0) + int(slot) * 8 + int(stage)
+
+
+def unpack_session(packed) -> Dict[str, int]:
+    p = int(packed)
+    return {"priority": p // 2048, "slot": (p // 8) % 256, "stage": p % 8}
 
 
 class RequestQueueTier:
     """Session admission over a heterogeneous DFC fabric.
 
     ``n_queues`` request shards (FIFO queues, or DEQUES when
-    ``priority=True``) plus ONE stack shard (the free-slot pool) behind a
-    single router.  Bucket 0 of the routing table is pinned to the pool
-    shard; session ids are deterministically re-probed away from it, so
+    ``priority=True``) plus ONE stack shard (the free-slot pool) plus ONE
+    map shard (per-session serving state: priority, decode-slot binding,
+    lifecycle stage) behind a single router.  Bucket 0 of the routing table
+    is pinned to the pool shard and every fourth bucket to the session
+    shard; session ids are deterministically re-probed away from both, so
     every session key lands on a request shard.  All tier traffic —
-    arrivals, slot pops, dequeues, releases — flows through the fabric's
-    fused combine, volatile (``step``) or durable (``announce`` /
-    ``combine_phase``).
+    arrivals, slot pops, dequeues, releases, session-state updates — flows
+    through the fabric's fused combine, volatile (``step``) or durable
+    (``announce`` / ``combine_phase``), and a recovered tier restores
+    queues, pool, and session table from one fabric walk.
 
     Priority admission (``priority=True``): ``submit`` takes a parallel
     ``priorities`` list; a session with priority > 0 is pushed at the FRONT
@@ -107,11 +148,12 @@ class RequestQueueTier:
         _rt: Optional[ShardedDFCRuntime] = None,
     ):
         req_kind = "deque" if priority else "queue"
-        kinds = [req_kind] * n_queues + ["stack"]
-        n_shards = n_queues + 1
+        kinds = [req_kind] * n_queues + ["stack", "map"]
+        n_shards = n_queues + 2
         n_buckets = n_buckets or 4 * n_shards
         self.n_queues = n_queues
         self.pool_shard = n_queues
+        self.session_shard = n_queues + 1
         self.priority = priority
         if durable and fs is None:
             fs = SimFS(Path(tempfile.mkdtemp(prefix="dfc_serve_tier_")))
@@ -142,7 +184,15 @@ class RequestQueueTier:
         self._admit_t: Dict[int, float] = {}  # sid -> admission perf_counter
         self.reshard_backlog = reshard_backlog
         self._rep_keys: Dict[int, int] = {}
+        self._smap_keys: Dict[int, int] = {}  # sid -> session-map key
         self._slot_retry: List[int] = []  # pool pushes that overflowed a phase
+        # session-state writes that overflowed the map shard's lanes, retried
+        # on the next submit: (sid, packed) pairs
+        self._state_retry: List[Tuple[int, int]] = []
+        # host mirrors of the session map (rebuilt from the fabric walk on
+        # recovery) — caches, never the source of truth
+        self._session_prio: Dict[int, int] = {}
+        self._session_slot: Dict[int, int] = {}
         self._token = 0
         self.stats = {"arrived": 0, "admitted": 0, "rejected": 0, "splits": 0}
         if _seed_slots:
@@ -154,10 +204,14 @@ class RequestQueueTier:
     # ------------------------------------------------------------ internals
     @staticmethod
     def _default_table(n_queues: int, n_buckets: int) -> np.ndarray:
-        """Bucket 0 -> pool stack (shard ``n_queues``); the rest round-robin
-        over the request shards."""
+        """Bucket 0 -> pool stack (shard ``n_queues``); every fourth bucket
+        after it -> session map (shard ``n_queues + 1``, a ~1/4 share so the
+        per-session key-window probe in ``session_map_key`` converges in a
+        few steps); the rest round-robin over the request shards."""
+        pool, smap = n_queues, n_queues + 1
         return np.asarray(
-            [n_queues] + [b % n_queues for b in range(1, n_buckets)],
+            [pool]
+            + [smap if b % 4 == 1 else b % n_queues for b in range(1, n_buckets)],
             np.int32,
         )
 
@@ -188,16 +242,62 @@ class RequestQueueTier:
         return np.asarray(val["resp"]), np.asarray(val["kinds"])
 
     def session_key(self, sid: int) -> int:
-        """Deterministic key for a session id, re-probed off the pool shard
-        (so the id stays the key in spirit; collisions with bucket 0 hop)."""
+        """Deterministic key for a session id, re-probed off the pool and
+        session-map shards (so the id stays the key in spirit; collisions
+        with their buckets hop)."""
         if not 0 <= sid < (1 << 24):
             # sids round-trip through the fabric's float32 values; past the
             # f32 mantissa two sessions would silently collide
             raise ValueError(f"session id {sid} must be in [0, 2^24)")
         k = int(sid)
-        while int(self.rt.route_host([k])[0]) == self.pool_shard:
+        while int(self.rt.route_host([k])[0]) in (
+            self.pool_shard, self.session_shard,
+        ):
             k = (k * _HASH_MULT + 1) % (1 << 31)
         return k
+
+    def session_map_key(self, sid: int) -> int:
+        """Unique fabric key addressing ``sid``'s session-state map entry:
+        the first key in the session's private window
+        ``[sid * 64, (sid + 1) * 64)`` that routes to the session shard.
+        Windows are disjoint, so two sessions can never collide on a map key
+        (unlike a rehash chain, whose orbits can merge), and the recovery
+        walk inverts the encoding: ``sid = key // 64``."""
+        if sid not in self._smap_keys:
+            base = int(sid) * _SESSION_KEY_STRIDE
+            cand = np.arange(base, base + _SESSION_KEY_STRIDE, dtype=np.int64)
+            hit = np.nonzero(self.rt.route_host(cand) == self.session_shard)[0]
+            if hit.size == 0:  # P ~ (3/4)^64 per sid with the default table
+                raise RuntimeError(
+                    f"no key in window [{base}, {base + _SESSION_KEY_STRIDE}) "
+                    f"routes to the session map shard; widen its bucket share"
+                )
+            self._smap_keys[sid] = int(cand[hit[0]])
+        return self._smap_keys[sid]
+
+    def _stage_session_writes(
+        self, sids: Sequence[int], priorities: Optional[Sequence[int]]
+    ) -> List[Tuple[int, int]]:
+        """Arrival-time session-state map inserts (plus retries from earlier
+        phases), capped at the map shard's per-phase lanes — every write
+        targets the ONE session shard, so at most ``lanes`` fit per phase.
+        Retried arrivals whose session already advanced past QUEUED (its
+        slot got bound meanwhile) are dropped instead of regressing it."""
+        pr = list(priorities) if priorities is not None else [0] * len(sids)
+        writes = [
+            (sid, packed)
+            for sid, packed in self._state_retry
+            if unpack_session(packed)["stage"] != SESSION_QUEUED
+            or sid not in self._session_slot
+        ]
+        for s, p in zip(sids, pr):
+            prio = 1 if p > 0 else 0
+            self._session_prio[int(s)] = prio
+            writes.append(
+                (int(s), pack_session(prio, SESSION_SLOT_NONE, SESSION_QUEUED))
+            )
+        self._state_retry = writes[self.rt.lanes:]
+        return writes[: self.rt.lanes]
 
     def _queue_backlogs(self) -> Dict[int, int]:
         """Committed backlog per request shard, straight from the fabric's
@@ -236,8 +336,10 @@ class RequestQueueTier:
         pool = self._slot_retry + list(release_slots)
         self._slot_retry = pool[self.rt.lanes :]
         pool = pool[: self.rt.lanes]
+        smap = self._stage_session_writes(sids, priorities)
         keys = [self.session_key(s) for s in sids]
         keys += [self._key_for(self.pool_shard)] * len(pool)
+        keys += [self.session_map_key(sid) for sid, _ in smap]
         if self.priority:
             pr = list(priorities) if priorities is not None else [0] * len(sids)
             enq_ops = [
@@ -245,8 +347,9 @@ class RequestQueueTier:
             ]
         else:
             enq_ops = [OP_ENQ] * len(sids)
-        ops = enq_ops + [OP_PUSH] * len(pool)
+        ops = enq_ops + [OP_PUSH] * len(pool) + [OP_MAP_INSERT] * len(smap)
         params = [float(s) for s in sids] + [float(s) for s in pool]
+        params += [float(v) for _, v in smap]
         if not ops:
             return []
         now = time.perf_counter()
@@ -257,6 +360,10 @@ class RequestQueueTier:
         for j, slot in enumerate(pool):
             if kinds[len(sids) + j] == R_OVERFLOW:
                 self._slot_retry.append(slot)
+        off = len(sids) + len(pool)
+        for j, (sid, packed) in enumerate(smap):
+            if kinds[off + j] == R_OVERFLOW:
+                self._state_retry.append((sid, packed))
         self.stats["arrived"] += len(sids)
         self.stats["rejected"] += len(rejected)
         if self.obs.enabled and sids:
@@ -307,8 +414,10 @@ class RequestQueueTier:
             pool = self._slot_retry + list(release_slots)
             self._slot_retry = pool[self.rt.lanes:]
             pool = pool[: self.rt.lanes]
+            smap = self._stage_session_writes(sids, priorities)
             keys = [self.session_key(s) for s in sids]
             keys += [self._key_for(self.pool_shard)] * len(pool)
+            keys += [self.session_map_key(sid) for sid, _ in smap]
             if self.priority:
                 pr = list(priorities) if priorities is not None else [0] * len(sids)
                 enq_ops = [
@@ -316,21 +425,22 @@ class RequestQueueTier:
                 ]
             else:
                 enq_ops = [OP_ENQ] * len(sids)
-            ops = enq_ops + [OP_PUSH] * len(pool)
+            ops = enq_ops + [OP_PUSH] * len(pool) + [OP_MAP_INSERT] * len(smap)
             params = [float(s) for s in sids] + [float(s) for s in pool]
+            params += [float(v) for _, v in smap]
             now = time.perf_counter()
             for s in sids:
                 self._arrival_t.setdefault(int(s), now)
-            staged.append((list(sids), pool, keys, ops, params))
+            staged.append((list(sids), pool, smap, keys, ops, params))
 
         # one phase per non-empty wave, the whole schedule in one dispatch
         rejected_per_wave: List[List[int]] = [[] for _ in staged]
-        live = [i for i, st in enumerate(staged) if st[3]]
+        live = [i for i, st in enumerate(staged) if st[4]]
         if live:
             if self.durable:
                 schedule = []
                 for i in live:
-                    _, _, keys, ops, params = staged[i]
+                    _, _, _, keys, ops, params = staged[i]
                     self._token += 1
                     schedule.append((0, self._token, keys, ops, params))
                 records = self.rt.phase_loop(schedule)
@@ -338,17 +448,21 @@ class RequestQueueTier:
             else:
                 kinds_per_wave = []
                 for i in live:
-                    _, _, keys, ops, params = staged[i]
+                    _, _, _, keys, ops, params = staged[i]
                     _, kinds = self.rt.step(keys, ops, params)
                     kinds_per_wave.append(np.asarray(kinds))
             for i, kinds in zip(live, kinds_per_wave):
-                sids, pool, _, _, _ = staged[i]
+                sids, pool, smap, _, _, _ = staged[i]
                 rejected = [
                     s for j, s in enumerate(sids) if kinds[j] == R_OVERFLOW
                 ]
                 for j, slot in enumerate(pool):
                     if kinds[len(sids) + j] == R_OVERFLOW:
                         self._slot_retry.append(slot)
+                off = len(sids) + len(pool)
+                for j, (sid, packed) in enumerate(smap):
+                    if kinds[off + j] == R_OVERFLOW:
+                        self._state_retry.append((sid, packed))
                 self.stats["arrived"] += len(sids)
                 self.stats["rejected"] += len(rejected)
                 rejected_per_wave[i] = rejected
@@ -402,6 +516,7 @@ class RequestQueueTier:
                 admitted.append((int(resp[i]), spare.pop(0)))
         if spare:
             self.submit([], release_slots=spare)
+        self._bind_sessions(admitted)
         self.stats["admitted"] += len(admitted)
         if self.obs.enabled and admitted:
             now = time.perf_counter()
@@ -418,6 +533,71 @@ class RequestQueueTier:
                 pairs=[[int(s), int(sl)] for s, sl in admitted],
             )
         return admitted
+
+    def _bind_sessions(self, pairs: List[Tuple[int, int]]) -> None:
+        """Bind decode slots at admission: QUEUED -> ADMITTED via fabric CAS
+        on the session map.  A CAS that loses (stale host mirror) reveals the
+        current packed state in its failure response; that — and a missing
+        entry (the arrival insert overflowed and has not retried yet) — falls
+        back to one plain insert of the exact new state, so the update always
+        converges in at most two phases."""
+        if not pairs:
+            return
+        expect = {}
+        for sid, slot in pairs:
+            self._session_slot[sid] = slot
+            expect[sid] = pack_session(
+                self._session_prio.get(sid, 0), SESSION_SLOT_NONE, SESSION_QUEUED
+            )
+        keys = [self.session_map_key(sid) for sid, _ in pairs]
+        params = [
+            float(
+                expect[sid] * CAS_DOM
+                + pack_session(
+                    self._session_prio.get(sid, 0), slot, SESSION_ADMITTED
+                )
+            )
+            for sid, slot in pairs
+        ]
+        resp, kinds = self._phase(keys, [OP_MAP_CAS] * len(pairs), params)
+        fallback = []
+        for j, (sid, slot) in enumerate(pairs):
+            if kinds[j] == R_CAS_FAIL:
+                self._session_prio[sid] = unpack_session(resp[j])["priority"]
+                fallback.append((sid, slot))
+            elif kinds[j] != R_VALUE:  # R_EMPTY / R_OVERFLOW
+                fallback.append((sid, slot))
+        if fallback:
+            keys = [self.session_map_key(sid) for sid, _ in fallback]
+            packs = [
+                pack_session(self._session_prio.get(sid, 0), slot, SESSION_ADMITTED)
+                for sid, slot in fallback
+            ]
+            _, kinds = self._phase(
+                keys, [OP_MAP_INSERT] * len(fallback), [float(p) for p in packs]
+            )
+            for j, (sid, _) in enumerate(fallback):
+                if kinds[j] == R_OVERFLOW:
+                    self._state_retry.append((sid, packs[j]))
+
+    def session_state(self, sid: int) -> Optional[Dict[str, int]]:
+        """Read one session's committed state THROUGH the fabric (a combined
+        ``OP_MAP_LOOKUP``, not a host walk): ``{"priority", "slot", "stage"}``
+        or ``None`` when the session has no entry."""
+        resp, kinds = self._phase(
+            [self.session_map_key(sid)], [OP_MAP_LOOKUP], [0.0]
+        )
+        if kinds[0] == R_VALUE:
+            return unpack_session(resp[0])
+        return None
+
+    def session_states(self) -> Dict[int, Dict[str, int]]:
+        """Committed session-state table, decoded from one walk of the
+        session map shard: ``{sid: {"priority", "slot", "stage"}}``."""
+        return {
+            int(k) // _SESSION_KEY_STRIDE: unpack_session(v)
+            for k, v in self.rt.shard_contents(self.session_shard)
+        }
 
     def backlog(self) -> int:
         return sum(self._queue_backlogs().values())
@@ -450,6 +630,7 @@ class RequestQueueTier:
         except ValueError:
             return  # no spare bucket left on this shard
         self._rep_keys.clear()  # table changed: representative keys stale
+        self._smap_keys.clear()
         self.stats["splits"] += 1
 
     def persistence_stats(self) -> Optional[Dict[str, float]]:
@@ -462,10 +643,22 @@ class RequestQueueTier:
         }
 
     def mark_served(self, sid: int) -> None:
-        """Record the request lifecycle's final stage: service latency
-        (admit -> served) and end-to-end latency (arrive -> served) land in
-        the metrics registry, the event in the trace.  No-op when the tier
-        runs unobserved."""
+        """Record the request lifecycle's final stage.  The session map entry
+        advances to SERVED through the fabric (keeping the slot binding, so
+        the walk still shows which slot served the session); with tracing on,
+        service latency (admit -> served) and end-to-end latency
+        (arrive -> served) land in the metrics registry, the event in the
+        trace."""
+        packed = pack_session(
+            self._session_prio.get(sid, 0),
+            self._session_slot.get(sid, SESSION_SLOT_NONE),
+            SESSION_SERVED,
+        )
+        _, kinds = self._phase(
+            [self.session_map_key(sid)], [OP_MAP_INSERT], [float(packed)]
+        )
+        if kinds[0] == R_OVERFLOW:
+            self._state_retry.append((sid, packed))
         if not self.obs.enabled:
             return
         now = time.perf_counter()
@@ -522,7 +715,16 @@ class RequestQueueTier:
             have recorded: serve these first, deduplicated against the
             launcher's own served log;
           * ``"lost_arrivals"`` — session ids whose ENQUEUE was announced
-            but reported not-applied: resubmit them.
+            but reported not-applied: resubmit them;
+          * ``"sessions"`` — the committed session-state table decoded from
+            ONE walk of the session map shard:
+            ``{sid: {"priority", "slot", "stage"}}`` — queues, slot pool,
+            and per-session state all come back from the same fabric;
+          * ``"session_reads"`` — committed ``OP_MAP_LOOKUP`` results
+            recovered FROM THE DURABLE RESPONSE SLOT: a lookup whose combine
+            committed is detectable-applied, so its read value is the one it
+            observed at combine time — re-executing it against the
+            post-crash map could report a state the op never saw.
 
         The tier deliberately does NOT blanket-``replay_pending``: replaying
         a not-applied pop/dequeue would admit a session into a response
@@ -531,11 +733,11 @@ class RequestQueueTier:
         launcher against total slot capacity (see ``main``).
         """
         req_kind = "deque" if priority else "queue"
-        n_shards = n_queues + 1
+        n_shards = n_queues + 2
         n_buckets = n_buckets or 4 * n_shards
         rt, report = ShardedDFCRuntime.recover(
             fs,
-            kind=[req_kind] * n_queues + ["stack"],
+            kind=[req_kind] * n_queues + ["stack", "map"],
             n_shards=n_shards,
             capacity=capacity,
             lanes=lanes,
@@ -560,8 +762,19 @@ class RequestQueueTier:
         tier.pool_shard = next(
             s for s, k in enumerate(rt.kinds) if k == "stack"
         )
+        tier.session_shard = next(
+            s for s, k in enumerate(rt.kinds) if k == "map"
+        )
+        # ONE walk of the session shard restores the per-session serving
+        # state AND reseeds the host mirrors the admission CAS consults
+        sessions = tier.session_states()
+        for sid, st in sessions.items():
+            tier._session_prio[sid] = st["priority"]
+            if st["slot"] != SESSION_SLOT_NONE:
+                tier._session_slot[sid] = st["slot"]
         in_flight: List[int] = []
         lost_arrivals: List[int] = []
+        session_reads: Dict[int, Dict[str, int]] = {}
         max_token = 0
         r = report.get(0) or {"token": None, "ops": [], "prev": None}
         recs = ([dict(r, slot="newest")] if r["token"] is not None else []) + (
@@ -575,23 +788,32 @@ class RequestQueueTier:
                 continue
             for i, v in enumerate(rec["ops"]):
                 op = ann["ops"][i]
-                on_request = (
-                    v.shard is not None
-                    and rt.kinds[v.shard] in ("queue", "deque")
+                shard = (
+                    v.shard
+                    if v.shard is not None
+                    else int(rt.route_host([ann["keys"][i]])[0])
                 )
+                on_request = rt.kinds[shard] in ("queue", "deque")
                 if v.applied and on_request and op in (OP_DEQ, OP_POP_FRONT):
                     in_flight.append(int(v.resp))
                 if (
                     not v.applied
                     and op in (OP_ENQ, OP_PUSH_BACK, OP_PUSH_FRONT)
+                    and on_request
                 ):
-                    shard = (
-                        v.shard
-                        if v.shard is not None
-                        else int(rt.route_host([ann["keys"][i]])[0])
-                    )
-                    if rt.kinds[shard] in ("queue", "deque"):
-                        lost_arrivals.append(int(ann["params"][i]))
+                    lost_arrivals.append(int(ann["params"][i]))
+                # lookup detectability: a committed OP_MAP_LOOKUP's read
+                # value comes from the durable response slot, NEVER from
+                # re-executing it against the post-crash map state (later
+                # committed phases may have overwritten the entry it read)
+                if (
+                    v.applied
+                    and rt.kinds[shard] == "map"
+                    and op == OP_MAP_LOOKUP
+                    and v.kind == R_VALUE
+                ):
+                    sid = int(ann["keys"][i]) // _SESSION_KEY_STRIDE
+                    session_reads[sid] = unpack_session(int(v.resp))
         tier._token = max_token
         info = {
             "report": report,
@@ -599,6 +821,8 @@ class RequestQueueTier:
             "pool": tier.pool_slots(),
             "in_flight": sorted(set(in_flight)),
             "lost_arrivals": sorted(set(lost_arrivals)),
+            "sessions": sessions,
+            "session_reads": session_reads,
         }
         return tier, info
 
@@ -791,10 +1015,15 @@ def main():
                     i for i in range(args.batch) if i not in set(info["pool"])
                 ][:missing]
                 tier.submit([], release_slots=free_ids)
+            stages = [st["stage"] for st in info["sessions"].values()]
             print(
                 f"resume: served={len(served_set)} queued={len(queued)} "
                 f"in_flight={in_flight} lost_arrivals={info['lost_arrivals']} "
-                f"resubmitting={len(to_submit)}"
+                f"resubmitting={len(to_submit)} "
+                f"sessions={len(stages)} "
+                f"(q={stages.count(SESSION_QUEUED)} "
+                f"a={stages.count(SESSION_ADMITTED)} "
+                f"s={stages.count(SESSION_SERVED)})"
             )
             pending_sids = to_submit
             completed = len(served_set)
@@ -877,7 +1106,8 @@ def main():
         + ("" if args.tier_only or dt == 0 else f" ({decoded_tokens/dt:.0f} tok/s)")
     )
     print(
-        f"request tier: queues={tier.n_queues} (+1 slot-pool stack shard) "
+        f"request tier: queues={tier.n_queues} (+ slot-pool stack shard "
+        f"+ session-state map shard) "
         f"priority={args.priority} depth={tier.rt.depth} "
         f"arrived={tier.stats['arrived']} admitted={tier.stats['admitted']} "
         f"rejected={tier.stats['rejected']} splits={tier.stats['splits']} "

@@ -164,7 +164,7 @@ from repro.core.jax_dfc import (
     state_from_contents,
 )
 from repro.kernels.dfc_reduce.ops import (
-    SHARDED_COMBINE_STEPS,
+    _one_sharded_combine,
     dfc_hetero_combine_step,
     dfc_hetero_multi_combine_step,
     dfc_hetero_multi_phase_step,
@@ -265,8 +265,11 @@ def route_batch(keys, ops, params, *, n_shards: int, lanes: int, table=None):
     """Bucket a flat announced batch into per-shard op lists.
 
     Returns ``(shard_ops i32[S, L], shard_params f32[S, L], shard i32[B],
-    lane i32[B], ok bool[B], overflow bool[B])``.  ``table`` (``i32[n_buckets]``,
-    bucket -> shard) routes through the resharding-aware table; ``None`` is
+    lane i32[B], ok bool[B], overflow bool[B], shard_keys i32[S, L])``.
+    ``shard_keys`` mirrors ``shard_ops``: each routed op's announced key in
+    its landed lane (keyed kinds — the map — interpret it; ring kinds ignore
+    it).  ``table`` (``i32[n_buckets]``, bucket -> shard) routes through the
+    resharding-aware table; ``None`` is
     the identity table (bucket == shard, the PR-2 behavior).  Lane assignment
     is the op's batch-order rank among ops routed to its shard (stable: an
     exclusive segment prefix sum over the shard one-hot matrix), so per-shard
@@ -303,6 +306,11 @@ def route_batch(keys, ops, params, *, n_shards: int, lanes: int, table=None):
         .at[dest]
         .set(params.astype(jnp.float32), mode="drop")
     )
+    flat_keys = (
+        jnp.zeros((n_shards * lanes,), jnp.int32)
+        .at[dest]
+        .set(jnp.asarray(keys).astype(jnp.int32), mode="drop")
+    )
     return (
         flat_ops.reshape(n_shards, lanes),
         flat_params.reshape(n_shards, lanes),
@@ -310,14 +318,11 @@ def route_batch(keys, ops, params, *, n_shards: int, lanes: int, table=None):
         lane,
         ok,
         overflow,
+        flat_keys.reshape(n_shards, lanes),
     )
 
 
 # ============================================================ fused step (jit)
-def _vmap_combine(kind: str):
-    return jax.vmap(STRUCTS[kind].combine)
-
-
 @functools.partial(
     jax.jit, static_argnames=("kind", "n_shards", "lanes", "backend")
 )
@@ -335,16 +340,13 @@ def sharded_step(
     Returns ``(new_state, new_meta, responses f32[B], kinds i32[B])`` where
     ``kinds`` uses the combine-level codes plus ``R_OVERFLOW``.
     """
-    shard_ops, shard_params, shard, lane, ok, overflow = route_batch(
+    shard_ops, shard_params, shard, lane, ok, overflow, shard_keys = route_batch(
         keys, ops, params, n_shards=n_shards, lanes=lanes
     )
 
-    if backend == "jnp":
-        combined, s_resp, s_kinds = _vmap_combine(kind)(state, shard_ops, shard_params)
-    else:
-        combined, s_resp, s_kinds = SHARDED_COMBINE_STEPS[kind](
-            state, shard_ops, shard_params, backend=backend
-        )
+    combined, s_resp, s_kinds = _one_sharded_combine(
+        kind, backend, state, shard_ops, shard_params, keys=shard_keys
+    )
 
     # only shards that received ops publish; the rest keep state AND epoch
     touched = jnp.any(shard_ops != OP_NONE, axis=1)  # bool[S]
@@ -396,15 +398,16 @@ def hetero_step(
     Returns ``(new_groups, new_meta, responses f32[B], out_kinds i32[B])``.
     """
     n_shards = len(kinds)
-    shard_ops, shard_params, shard, lane, ok, overflow = route_batch(
+    shard_ops, shard_params, shard, lane, ok, overflow, shard_keys = route_batch(
         keys, ops, params, n_shards=n_shards, lanes=lanes, table=table
     )
 
     gids = _group_ids(kinds)
     group_ops = {k: shard_ops[jnp.asarray(ids)] for k, ids in gids.items()}
     group_params = {k: shard_params[jnp.asarray(ids)] for k, ids in gids.items()}
+    group_keys = {k: shard_keys[jnp.asarray(ids)] for k, ids in gids.items()}
     combined = dfc_hetero_combine_step(
-        groups, group_ops, group_params, backend=backend
+        groups, group_ops, group_params, backend=backend, group_keys=group_keys
     )
 
     resp_mat = jnp.zeros((n_shards, lanes), jnp.float32)
@@ -477,14 +480,19 @@ def hetero_multi_step(
     ]
     shard_ops = jnp.stack([r[0] for r in routed])  # [B, S, L]
     shard_params = jnp.stack([r[1] for r in routed])
+    shard_keys = jnp.stack([r[6] for r in routed])
 
     gids = _group_ids(kinds)
     group_ops = {k: shard_ops[:, jnp.asarray(ids)] for k, ids in gids.items()}
     group_params = {
         k: shard_params[:, jnp.asarray(ids)] for k, ids in gids.items()
     }
+    group_keys = {
+        k: shard_keys[:, jnp.asarray(ids)] for k, ids in gids.items()
+    }
     multi = dfc_hetero_multi_combine_step(
-        groups, group_ops, group_params, backend=backend, unroll=unroll
+        groups, group_ops, group_params, backend=backend, unroll=unroll,
+        group_keys=group_keys,
     )
 
     resp_mat = jnp.zeros((n_batches, n_shards, lanes), jnp.float32)
@@ -542,7 +550,9 @@ def _hetero_phase_loop_impl(
         )
 
     # route ALL K phases in one vmapped pass (no per-phase dispatch)
-    shard_ops, shard_params, shard_b, lane_b, ok_b, ovf_b = jax.vmap(_route)(
+    (
+        shard_ops, shard_params, shard_b, lane_b, ok_b, ovf_b, shard_keys
+    ) = jax.vmap(_route)(
         keys, ops, params
     )  # [K, S, L], [K, S, L], [K, B], [K, B], ...
 
@@ -551,9 +561,13 @@ def _hetero_phase_loop_impl(
     group_params = {
         k: shard_params[:, jnp.asarray(ids)] for k, ids in gids.items()
     }
+    group_keys = {
+        k: shard_keys[:, jnp.asarray(ids)] for k, ids in gids.items()
+    }
     multi = dfc_hetero_multi_phase_step(
         groups, group_ops, group_params,
         backend=backend, unroll=unroll, phase_axis=phase_axis,
+        group_keys=group_keys,
     )
 
     k_phases = ops.shape[0]
@@ -656,13 +670,15 @@ def hetero_phase_loop_step(
 
 # ============================================================== host oracle
 def sequential_hetero_reference(
-    kinds, shard_lists, keys, ops, params, lanes, table=None
+    kinds, shard_lists, keys, ops, params, lanes, table=None, capacity=None
 ):
     """Pure-Python witness of one heterogeneous sharded phase (test oracle).
 
     ``kinds[s]`` names shard ``s``'s structure; ``shard_lists[s]`` is its
-    Python contents, mutated in place.  Returns (responses, kinds) in flat
-    batch order, with overflow ops reported as ``R_OVERFLOW`` and untouched.
+    Python contents, mutated in place (a dict for keyed kinds).  Returns
+    (responses, kinds) in flat batch order, with overflow ops reported as
+    ``R_OVERFLOW`` and untouched.  ``capacity`` bounds keyed shards so the
+    oracle models bucket-full rejection the same way the device does.
     """
     n_shards = len(shard_lists)
     shard = route_keys_host(keys, n_shards, table)
@@ -682,8 +698,16 @@ def sequential_hetero_reference(
     for s, idxs in sorted(buckets.items()):
         s_ops = [ops[j] for j in idxs]
         s_par = [params[j] for j in idxs]
-        ref = STRUCTS[kinds[s]].reference
-        shard_lists[s], s_resp, s_kinds = ref(shard_lists[s], s_ops, s_par)
+        spec = STRUCTS[kinds[s]]
+        if spec.keyed:
+            s_keys = [keys[j] for j in idxs]
+            shard_lists[s], s_resp, s_kinds = spec.reference(
+                shard_lists[s], s_keys, s_ops, s_par, capacity=capacity
+            )
+        else:
+            shard_lists[s], s_resp, s_kinds = spec.reference(
+                shard_lists[s], s_ops, s_par
+            )
         for r, (v, k) in zip(idxs, zip(s_resp, s_kinds)):
             responses[r] = v
             out_kinds[r] = k
@@ -2598,6 +2622,15 @@ class ShardedDFCRuntime:
         if self.kinds[s] == "stack":
             top = int(one.active_size())
             return [float(v) for v in np.asarray(one.values[:top])]
+        if self.kinds[s] == "map":
+            occ = np.asarray(one.occupied)
+            mk = np.asarray(one.keys)
+            mv = np.asarray(one.values)
+            return [
+                (int(mk[i]), float(mv[i]))
+                for i in range(occ.shape[0])
+                if occ[i]
+            ]
         cap = one.values.shape[0]
         e = one.active_ends()
         return [float(one.values[i % cap]) for i in range(int(e[0]), int(e[1]))]
@@ -2612,6 +2645,8 @@ class ShardedDFCRuntime:
             active = (np.asarray(st.epoch) // 2) % 2
             if k == "stack":
                 sizes = np.asarray(st.size)[rows, active]
+            elif k == "map":
+                sizes = np.asarray(st.count)[rows, active]
             else:
                 ends = np.asarray(st.ends)[rows, active]  # [Sg, 2]
                 sizes = ends[:, 1] - ends[:, 0]

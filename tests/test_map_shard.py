@@ -1,0 +1,568 @@
+"""Durable detectable keyed map shard (fourth structure kind).
+
+Oracle sweeps across the three combine backends, a persistence-op crash
+sweep with VERDICT-IDENTICAL exactly-once recovery (a committed op's
+recovered kind/resp equal the oracle's — recovery reads durable response
+slots, it never re-executes), the lookup-purity pin (a lookup-only phase
+must not persist the table arrays), bucket-overflow rejection isolation,
+the structure-checkpoint round-trip, and the serving tier's session-state
+map surviving crash/resume.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint.dfc_checkpoint import (
+    CrashNow,
+    DFCCheckpointManager,
+    FaultInjector,
+    SimFS,
+)
+from repro.core.jax_dfc import (
+    CAS_DOM,
+    OP_MAP_CAS,
+    OP_MAP_DELETE,
+    OP_MAP_INSERT,
+    OP_MAP_LOOKUP,
+    OP_NONE,
+    R_ACK,
+    R_CAS_FAIL,
+    R_EMPTY,
+    R_FULL,
+    R_VALUE,
+    combine_map,
+    init_map,
+    map_bucket_host,
+    map_geometry,
+    sequential_reference_map,
+)
+from repro.launch.serve import (
+    SESSION_ADMITTED,
+    SESSION_QUEUED,
+    SESSION_SERVED,
+    SESSION_SLOT_NONE,
+    RequestQueueTier,
+)
+from repro.runtime.dfc_shard import (
+    R_OVERFLOW,
+    ShardedDFCRuntime,
+    sequential_hetero_reference,
+    shard_of_keys_host,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+S, CAP, LANES, THREADS, B = 8, 128, 12, 2, 8
+KINDS = ("map",) * S
+# values and CAS operands live in a small domain so deletes hit, lookups
+# find entries, and CAS both succeeds and fails along a schedule
+VAL_DOM = 8
+
+
+def _gen(rng, n, key_hi=40):
+    """Mixed map batch: keys from a bounded universe, ops 0..4 (OP_NONE
+    included), CAS params packed ``expected * CAS_DOM + new``."""
+    keys = rng.integers(0, key_hi, n)
+    ops = rng.integers(0, 5, n)
+    vals = rng.integers(0, VAL_DOM, n)
+    expect = rng.integers(0, VAL_DOM, n)
+    params = np.where(ops == OP_MAP_CAS, expect * CAS_DOM + vals, vals).astype(
+        np.float64
+    )
+    return keys, ops, params
+
+
+def _assert_map_equal(got_pairs, expect_dict, msg=""):
+    got = dict(got_pairs)
+    assert set(got) == set(expect_dict), (msg, got, expect_dict)
+    for k, v in expect_dict.items():
+        np.testing.assert_allclose(got[k], np.float32(v), rtol=1e-6, err_msg=msg)
+
+
+# ================================================================ oracle sweep
+@pytest.mark.parametrize("backend", ["jnp", "ref", "pallas"])
+def test_map_step_matches_oracle_randomized(backend):
+    """The jitted route->combine->publish step over 8 map shards matches the
+    sequential dict oracle (bucket-capacity-aware) on every backend."""
+    rng = np.random.default_rng(hash(("map", backend)) % 2**32)
+    rt = ShardedDFCRuntime("map", S, CAP, 32, backend=backend)
+    oracle = [{} for _ in range(S)]
+    for phase in range(4):
+        keys, ops, params = _gen(rng, 48)
+        resp, kinds = rt.step(keys, ops, params)
+        eresp, ekinds = sequential_hetero_reference(
+            KINDS, oracle, keys, ops.tolist(), params.tolist(), 32,
+            capacity=CAP,
+        )
+        np.testing.assert_array_equal(np.asarray(kinds), ekinds)
+        np.testing.assert_allclose(
+            np.asarray(resp), np.asarray(eresp, np.float32), rtol=1e-6
+        )
+    for s in range(S):
+        _assert_map_equal(rt.shard_contents(s), oracle[s], f"shard {s}")
+    sizes = rt.shard_sizes()
+    for s in range(S):
+        assert int(sizes[s]) == len(oracle[s])
+    epochs = np.asarray(rt.shard_epochs())
+    assert all(int(e) % 2 == 0 for e in epochs)
+
+
+def test_map_capacity_must_fit_buckets():
+    with pytest.raises(ValueError):
+        init_map(12)  # not a multiple of the 8-slot bucket width
+    bslots, n_buckets = map_geometry(CAP)
+    assert bslots * n_buckets == CAP
+
+
+# ====================================================== bucket-full isolation
+def _keys_sharing_bucket(n_needed):
+    """First ``n_needed`` integer keys that share one (shard, bucket)."""
+    _, n_buckets = map_geometry(CAP)
+    groups = {}
+    k = 0
+    while True:
+        s = int(shard_of_keys_host(np.asarray([k]), S)[0])
+        b = int(map_bucket_host([k], n_buckets)[0])
+        groups.setdefault((s, b), []).append(k)
+        if len(groups[(s, b)]) == n_needed:
+            return (s, b), groups[(s, b)]
+        k += 1
+
+
+def test_bucket_full_rejects_cleanly_neighbors_intact():
+    """An insert into a full bucket is a CLEAN R_FULL: the bucket keeps its
+    entries, ops on other buckets in the SAME batch proceed, and freeing a
+    slot lets the rejected key in afterwards (no residue from the reject)."""
+    bslots, n_buckets = map_geometry(CAP)
+    (s_hot, b_hot), ks = _keys_sharing_bucket(bslots + 1)
+    fill, extra = ks[:bslots], ks[bslots]
+    other = next(
+        k
+        for k in range(10_000)
+        if (
+            int(shard_of_keys_host(np.asarray([k]), S)[0]),
+            int(map_bucket_host([k], n_buckets)[0]),
+        )
+        != (s_hot, b_hot)
+    )
+    rt = ShardedDFCRuntime("map", S, CAP, lanes=16)
+    _, kinds = rt.step(
+        fill, [OP_MAP_INSERT] * bslots, [float(i) for i in range(bslots)]
+    )
+    assert list(np.asarray(kinds)) == [R_ACK] * bslots
+    # one batch: reject (full), overwrite (hit needs no free slot), a
+    # neighboring bucket's insert, and a lookup of the rejected key
+    _, kinds = rt.step(
+        [extra, fill[0], other, extra],
+        [OP_MAP_INSERT, OP_MAP_INSERT, OP_MAP_INSERT, OP_MAP_LOOKUP],
+        [7.0, 99.0, 1.0, 0.0],
+    )
+    assert list(np.asarray(kinds)) == [R_FULL, R_ACK, R_ACK, R_EMPTY]
+    hot = dict(rt.shard_contents(s_hot))
+    assert extra not in hot and hot[fill[0]] == 99.0 and len(hot) >= bslots
+    # delete frees a slot; the rejected insert then applies exactly once
+    _, kinds = rt.step(
+        [fill[1], extra], [OP_MAP_DELETE, OP_MAP_INSERT], [0.0, 7.0]
+    )
+    assert list(np.asarray(kinds)) == [R_VALUE, R_ACK]
+    assert dict(rt.shard_contents(s_hot))[extra] == 7.0
+
+
+# ================================================================ crash sweep
+def _routed_map_buckets(keys, ops, params, n_shards, lanes):
+    """Host routing twin keeping the KEYS: per-shard (key, op, param) lists
+    plus per-op (shard, overflowed)."""
+    shard = shard_of_keys_host(keys, n_shards)
+    buckets = {s: [] for s in range(n_shards)}
+    meta = []
+    for j in range(len(ops)):
+        if ops[j] == OP_NONE:
+            meta.append((None, False))
+            continue
+        s = int(shard[j])
+        if len(buckets[s]) >= lanes:
+            meta.append((s, True))
+            continue
+        buckets[s].append((int(keys[j]), int(ops[j]), float(params[j])))
+        meta.append((s, False))
+    return buckets, meta
+
+
+def _run_map_with_crash(tmp_path, crash_at, backend="jnp", n_phases=3):
+    """Run ``n_phases`` announce+combine rounds over a map fabric, crash at
+    persistence op ``crash_at``; return what post-crash verification needs."""
+    inj = FaultInjector(crash_at=crash_at)
+    fs = SimFS(tmp_path, inj)
+    rt = ShardedDFCRuntime(
+        "map", S, CAP, LANES, fs=fs, n_threads=THREADS, backend=backend
+    )
+    rng = np.random.default_rng(1213)
+    oracle = [{} for _ in range(S)]  # state after every COMPLETED phase
+    token = 0
+    by_token = {}
+    completed = set()
+    crashed = False
+    try:
+        for phase in range(n_phases):
+            phase_tokens = []
+            batches = []
+            for t in range(THREADS):
+                token += 1
+                keys, ops, params = _gen(rng, B)
+                by_token[token] = (t, keys, ops, params)
+                batches.append((t, token, keys, ops, params))
+                phase_tokens.append(token)
+            for t, tok, keys, ops, params in batches:
+                rt.announce(t, keys, ops, params, token=tok)
+            rt.combine_phase()
+            flat_keys = np.concatenate([b[2] for b in batches])
+            flat_ops = np.concatenate([b[3] for b in batches])
+            flat_par = np.concatenate([b[4] for b in batches])
+            eresp, ekinds = sequential_hetero_reference(
+                KINDS, oracle, flat_keys, flat_ops.tolist(),
+                flat_par.tolist(), LANES, capacity=CAP,
+            )
+            off = 0
+            for t, tok, keys, ops, params in batches:
+                ann = rt._read_ann(t, rt._read_valid(t) & 1)
+                assert ann["token"] == tok and ann["val"] is not None
+                np.testing.assert_array_equal(
+                    ann["val"]["kinds"], ekinds[off : off + B]
+                )
+                np.testing.assert_allclose(
+                    ann["val"]["resp"],
+                    np.asarray(eresp[off : off + B], np.float32),
+                    rtol=1e-6,
+                )
+                off += B
+            completed.update(phase_tokens)
+    except CrashNow:
+        crashed = True
+    fs2 = fs.crash()
+    rt2, report = ShardedDFCRuntime.recover(
+        fs2, kind="map", n_shards=S, capacity=CAP, lanes=LANES,
+        n_threads=THREADS, backend=backend,
+    )
+    return crashed, rt2, report, oracle, by_token, completed, inj.count
+
+
+def _verify_map_crash_outcome(rt2, report, oracle, by_token, completed):
+    """Every announced op either took effect exactly once or is reported
+    not-applied — and a COMMITTED op's recovered verdict carries the
+    oracle's response kind AND value (verdict-identical: recovery reads the
+    durable response slot, it does not re-execute against recovered state)."""
+    interrupted = {}
+    for t, r in report.items():
+        if r["token"] is None or r["token"] in completed:
+            continue
+        interrupted[t] = r["token"]
+    if interrupted:
+        verdicts = {t: report[t]["ops"] for t in interrupted}
+        flat_keys = np.concatenate(
+            [by_token[interrupted[t]][1] for t in sorted(interrupted)]
+        )
+        flat_ops = np.concatenate(
+            [by_token[interrupted[t]][2] for t in sorted(interrupted)]
+        )
+        flat_par = np.concatenate(
+            [by_token[interrupted[t]][3] for t in sorted(interrupted)]
+        )
+        flat_verdicts = []
+        for t in sorted(interrupted):
+            flat_verdicts += report[t]["ops"]
+        if len(flat_verdicts) == len(flat_ops) and len(interrupted) == THREADS:
+            # expected verdicts of the whole interrupted phase, from a COPY
+            # of the oracle (only committed shards actually advance)
+            probe = [dict(d) for d in oracle]
+            eresp, ekinds = sequential_hetero_reference(
+                KINDS, probe, flat_keys, flat_ops.tolist(),
+                flat_par.tolist(), LANES, capacity=CAP,
+            )
+            buckets, meta = _routed_map_buckets(
+                flat_keys, flat_ops, flat_par, S, LANES
+            )
+            shard_applied = {}
+            for i, ((s, ovf), v) in enumerate(zip(meta, flat_verdicts)):
+                if s is None or ovf:
+                    assert not v.applied
+                    continue
+                shard_applied.setdefault(s, v.applied)
+                assert shard_applied[s] == v.applied, "split verdict in shard"
+                if v.applied:  # verdict-identical to the oracle
+                    assert v.kind == ekinds[i], (i, v.kind, ekinds[i])
+                    np.testing.assert_allclose(
+                        v.resp, np.float32(eresp[i]), rtol=1e-6
+                    )
+            # apply exactly the committed shards' keyed op lists
+            for s, items in buckets.items():
+                if items and shard_applied.get(s, False):
+                    oracle[s], _, _ = sequential_reference_map(
+                        oracle[s],
+                        [k for k, _, _ in items],
+                        [o for _, o, _ in items],
+                        [p for _, _, p in items],
+                        capacity=CAP,
+                    )
+        else:
+            # interrupted during ANNOUNCE: combine never ran, nothing applied
+            assert all(not v.applied for vs in verdicts.values() for v in vs)
+    for s in range(S):
+        _assert_map_equal(rt2.shard_contents(s), oracle[s], f"shard {s}")
+    epochs = np.asarray(rt2.state.epoch)
+    assert all(int(e) % 2 == 0 for e in epochs)
+    sizes = rt2.shard_sizes()
+    for s in range(S):
+        assert int(sizes[s]) == len(oracle[s])
+
+
+def test_map_crash_sweep_exactly_once_or_not_applied(tmp_path):
+    """Tier-1 representative: crash points strided across the workload's
+    persistence ops (the full every-op x every-backend grid is the slow
+    twin below)."""
+    crashed, *_, total = _run_map_with_crash(tmp_path / "dry", None)
+    assert not crashed
+    assert total > 50
+    for k in range(1, total + 1, 5):
+        crashed, rt2, report, oracle, by_token, completed, _ = (
+            _run_map_with_crash(tmp_path / f"k{k}", k)
+        )
+        assert crashed
+        _verify_map_crash_outcome(rt2, report, oracle, by_token, completed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["jnp", "ref", "pallas"])
+def test_map_crash_sweep_every_persistence_op(tmp_path, backend):
+    """Acceptance sweep: EVERY persistence op of the schedule, per backend,
+    verdict-identical exactly-once."""
+    crashed, *_, total = _run_map_with_crash(tmp_path / "dry", None, backend)
+    assert not crashed
+    for k in range(1, total + 1):
+        crashed, rt2, report, oracle, by_token, completed, _ = (
+            _run_map_with_crash(tmp_path / f"k{k}", k, backend)
+        )
+        assert crashed
+        _verify_map_crash_outcome(rt2, report, oracle, by_token, completed)
+
+
+# ========================================================== lookup purity pin
+def test_lookup_only_phase_never_persists_the_table(tmp_path):
+    """Lookups must never persist values: once BOTH alternating slots hold
+    the table durably (the first post-insert phase legitimately replicates
+    it into the cold slot), dirty-leaf elision makes every further
+    lookup-only phase re-write NONE of the table arrays (keys / values /
+    occupied) — only the commit metadata — yet still returns every value
+    and advances the epoch durably."""
+    fs = SimFS(tmp_path)
+    rt = ShardedDFCRuntime("map", S, CAP, LANES, fs=fs, n_threads=1)
+    # table-array leaf indices, from the pytree flatten order itself
+    probe = jax.tree_util.tree_flatten(init_map(CAP))[0]
+    table_leaves = {
+        f"leaf_{i}.npy"
+        for i, leaf in enumerate(probe)
+        if np.asarray(leaf).shape == (CAP,)
+    }
+    assert len(table_leaves) == 3  # keys, values, occupied
+    log = []
+    orig_write = fs.write
+
+    def spy(rel, data, tag=None):
+        log.append(rel)
+        orig_write(rel, data, tag=tag)
+
+    fs.write = spy
+    keys = list(range(1, B + 1))
+    vals = [float(v) for v in range(11, 11 + B)]
+    rt.announce(0, keys, [OP_MAP_INSERT] * B, vals, token=1)
+    rt.combine_phase()
+    insert_writes = [r.rsplit("/", 1)[1] for r in log if "/leaf_" in r]
+    assert table_leaves & set(insert_writes)  # inserts DO persist the table
+    # warm the cold alternate slot: this one phase may copy the table
+    rt.announce(0, keys, [OP_MAP_LOOKUP] * B, [0.0] * B, token=2)
+    rt.combine_phase()
+    epochs_before = np.asarray(rt.shard_epochs()).copy()
+
+    for token in (3, 4):  # steady state: both slots warm, nothing to write
+        log.clear()
+        rt.announce(0, keys, [OP_MAP_LOOKUP] * B, [0.0] * B, token=token)
+        rt.combine_phase()
+        lookup_writes = [r.rsplit("/", 1)[1] for r in log if "/leaf_" in r]
+        assert not (table_leaves & set(lookup_writes)), lookup_writes
+        val = rt.read_responses(0, token=token)
+        assert val["kinds"] == [R_VALUE] * B
+        np.testing.assert_allclose(val["resp"], np.asarray(vals, np.float32))
+    # the lookup phases still committed durably (epochs moved by 2 each)
+    touched = epochs_before > 0
+    assert np.all(
+        np.asarray(rt.shard_epochs())[touched] == epochs_before[touched] + 4
+    )
+
+
+# ================================================== lookup detectability fix
+def test_recovered_lookup_reports_durable_read_value(tmp_path):
+    """Directed regression: a recovered committed OP_MAP_LOOKUP reports the
+    value it READ from the durable response slot — mutating the map after
+    recovery must not change it, and replay must not re-announce it."""
+    fs = SimFS(tmp_path)
+    rt = ShardedDFCRuntime("map", S, CAP, LANES, fs=fs, n_threads=1)
+    keys, vals = [3, 11, 27], [5.0, 6.0, 7.0]
+    rt.announce(0, keys, [OP_MAP_INSERT] * 3, vals, token=1)
+    rt.combine_phase()
+    rt.announce(0, keys, [OP_MAP_LOOKUP] * 3, [0.0] * 3, token=2)
+    rt.combine_phase()
+    # crash BEFORE the host ever read the lookup responses
+    rt2, report = ShardedDFCRuntime.recover(
+        fs.crash(), kind="map", n_shards=S, capacity=CAP, lanes=LANES,
+        n_threads=1,
+    )
+    r = report[0]
+    assert r["token"] == 2
+    for v, val in zip(r["ops"], vals):
+        assert v.applied and v.kind == R_VALUE
+        assert float(v.resp) == val
+    # committed lookups are applied: replay must NOT re-announce them (a
+    # re-executed lookup would report post-crash state the op never saw)
+    assert rt2.replay_pending(report) == []
+    # overwrite the entries; the durable verdict for token 2 is unchanged
+    rt2.announce(0, keys, [OP_MAP_INSERT] * 3, [100.0, 101.0, 102.0], token=3)
+    rt2.combine_phase()
+    val = rt2.read_responses(0, token=2)
+    assert val["kinds"] == [R_VALUE] * 3
+    np.testing.assert_allclose(val["resp"], np.asarray(vals, np.float32))
+
+
+# ======================================================= checkpoint roundtrip
+def test_map_checkpoint_roundtrip(tmp_path):
+    """MapState persists through combine_structure and reloads bit-identically
+    (typed, with the committed count in the manifest), and the restored
+    state keeps combining exactly like the original."""
+    state = init_map(32)
+    state, _, kinds = combine_map(
+        state, [1, 2, 3, 0], [OP_MAP_INSERT] * 4, [10.0, 11.0, 12.0, 13.0]
+    )
+    assert list(np.asarray(kinds)) == [R_ACK] * 4
+    state, _, _ = combine_map(
+        state, [2, 5], [OP_MAP_DELETE, OP_MAP_INSERT], [0.0, 9.0]
+    )
+    fs = SimFS(tmp_path)
+    mgr = DFCCheckpointManager(fs, n_workers=1)
+    mgr.announce(0, {"step": 1, "cursor": 1})
+    assert mgr.combine_structure(state, {"step": 1}) == [0]
+
+    mgr2 = DFCCheckpointManager(fs.crash(), n_workers=1)
+    mgr2.recover()
+    restored, man = mgr2.load_structure()
+    assert man["meta"]["struct"] == "map"
+    assert man["meta"]["committed_count"] == 4 == int(state.active_count())
+    assert type(restored) is type(state)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    again, resp_a, kinds_a = combine_map(
+        restored, [5, 2, 1], [OP_MAP_LOOKUP, OP_MAP_LOOKUP, OP_MAP_CAS],
+        [0.0, 0.0, 10.0 * CAS_DOM + 2.0],
+    )
+    expect, resp_e, kinds_e = combine_map(
+        state, [5, 2, 1], [OP_MAP_LOOKUP, OP_MAP_LOOKUP, OP_MAP_CAS],
+        [0.0, 0.0, 10.0 * CAS_DOM + 2.0],
+    )
+    np.testing.assert_array_equal(np.asarray(kinds_a), np.asarray(kinds_e))
+    np.testing.assert_allclose(np.asarray(resp_a), np.asarray(resp_e))
+    for a, b in zip(
+        jax.tree_util.tree_leaves(expect), jax.tree_util.tree_leaves(again)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# =========================================================== serving tier map
+def _tier_schedule(tier):
+    """Submit -> admit -> serve one lifecycle slice on a durable tier."""
+    tier.submit([1, 2, 3, 4], priorities=[0, 1, 0, 0])
+    pairs = tier.admit(2)
+    if pairs:
+        tier.mark_served(pairs[0][0])
+    return pairs
+
+
+def test_tier_session_state_survives_crash_resume(tmp_path):
+    """The session-state map shard rides the SAME fabric as the queues and
+    pool: after a clean crash, one recovery walk returns the full serving
+    state, and the lifecycle continues from it."""
+    fs = SimFS(tmp_path)
+    tier = RequestQueueTier(
+        n_queues=2, slots=2, capacity=512, lanes=16, durable=True, fs=fs,
+        priority=True,
+    )
+    pairs = _tier_schedule(tier)
+    assert len(pairs) == 2
+    served_sid, served_slot = pairs[0]
+    expect = tier.session_states()
+    assert set(expect) == {1, 2, 3, 4}
+    assert expect[served_sid]["stage"] == SESSION_SERVED
+    assert expect[served_sid]["slot"] == served_slot
+    assert expect[pairs[1][0]]["stage"] == SESSION_ADMITTED
+    assert expect[2]["priority"] == 1
+    queued = [sid for sid, st in expect.items() if st["stage"] == SESSION_QUEUED]
+    assert len(queued) == 2
+    assert all(expect[sid]["slot"] == SESSION_SLOT_NONE for sid in queued)
+
+    tier2, info = RequestQueueTier.recover(
+        fs.crash(), n_queues=2, capacity=512, lanes=16, priority=True
+    )
+    assert info["sessions"] == expect
+    assert tier2.session_states() == expect
+    # reads THROUGH the recovered fabric agree with the walk
+    assert tier2.session_state(served_sid) == expect[served_sid]
+    # lifecycle continues: free the served slot, admit a queued session
+    tier2.submit([], release_slots=[served_slot])
+    more = tier2.admit(1)
+    assert len(more) == 1 and more[0][0] in queued
+    st = tier2.session_state(more[0][0])
+    assert st["stage"] == SESSION_ADMITTED and st["slot"] == more[0][1]
+
+
+def test_tier_session_state_crash_sweep(tmp_path):
+    """Crash the tier at strided persistence ops: every recovered session
+    entry decodes to a coherent lifecycle state, and the recovery info's
+    one-walk snapshot equals a fresh fabric read."""
+    inj = FaultInjector(crash_at=None)
+    fs = SimFS(tmp_path / "dry", inj)
+    tier = RequestQueueTier(
+        n_queues=2, slots=2, capacity=512, lanes=16, durable=True, fs=fs,
+        priority=True,
+    )
+    _tier_schedule(tier)
+    total = inj.count
+    assert total > 40
+    for k in range(3, total, 11):
+        inj = FaultInjector(crash_at=k)
+        fs = SimFS(tmp_path / f"k{k}", inj)
+        try:
+            t = RequestQueueTier(
+                n_queues=2, slots=2, capacity=512, lanes=16, durable=True,
+                fs=fs, priority=True,
+            )
+            _tier_schedule(t)
+        except CrashNow:
+            pass
+        tier2, info = RequestQueueTier.recover(
+            fs.crash(), n_queues=2, capacity=512, lanes=16, priority=True
+        )
+        assert info["sessions"] == tier2.session_states()
+        for sid, st in info["sessions"].items():
+            assert sid in (1, 2, 3, 4)
+            assert st["stage"] in (
+                SESSION_QUEUED, SESSION_ADMITTED, SESSION_SERVED,
+            )
+            if st["stage"] == SESSION_QUEUED:
+                assert st["slot"] == SESSION_SLOT_NONE
+            else:  # bound sessions always carry their decode slot
+                assert st["slot"] != SESSION_SLOT_NONE
+        # committed lookup reads recovered from durable response slots only
+        for sid, st in info["session_reads"].items():
+            assert st["stage"] in (
+                SESSION_QUEUED, SESSION_ADMITTED, SESSION_SERVED,
+            )

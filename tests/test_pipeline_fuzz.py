@@ -6,7 +6,9 @@ and re-drive, the fabric contents must equal the sequential oracle applied
 over the same per-thread op order — and the per-thread detectability
 verdicts must match what the oracle says about each op (its response and
 response kind).  The schedule is replayed on all three combine backends
-(``jnp``, ``ref``, ``pallas``) and must agree bit-for-bit.
+(``jnp``, ``ref``, ``pallas``) and must agree bit-for-bit.  The kind sets
+cover ALL FOUR structures — queue, stack, deque, and the keyed map (whose
+lanes carry insert/lookup/delete/CAS with packed CAS operands).
 
 ISSUE-5 additions: a strategy over SEEDED ANNOUNCER INTERLEAVINGS — random
 multi-thread schedules drawn as (scheduler seed, n_threads, depth), driven
@@ -48,7 +50,23 @@ KIND_SETS = [
     ["stack", "queue"],
     ["stack", "queue", "deque"],
     ["deque", "deque", "stack"],
+    ["queue", "map"],
+    ["map", "stack", "queue", "deque"],  # all four kinds in one fabric
 ]
+
+
+def _draw_op_param(kind, rng_draws):
+    """One (op, param) valid for ``kind``.  Map params come from a SMALL
+    value domain with CAS operands packed ``expected * CAS_DOM + new`` so
+    hits, misses, successful CAS, and failed CAS all occur."""
+    from repro.core.jax_dfc import CAS_DOM, OP_MAP_CAS
+
+    op = rng_draws(1, STRUCTS[kind].n_opcodes - 1)
+    if STRUCTS[kind].keyed:
+        if op == OP_MAP_CAS:
+            return op, float(rng_draws(0, 4) * CAS_DOM + rng_draws(0, 4))
+        return op, float(rng_draws(0, 4))
+    return op, float(rng_draws(1, 10_000)) / 8.0
 
 
 def _schedule(kinds, shape, rng_draws):
@@ -60,24 +78,46 @@ def _schedule(kinds, shape, rng_draws):
     for p in range(n_phases):
         keys = [rng_draws(0, 997) for _ in range(batch)]
         shard = route_keys_host(np.asarray(keys), len(kinds))
-        ops = [
-            rng_draws(1, STRUCTS[kinds[s]].n_opcodes - 1) for s in shard
-        ]
-        params = [
-            float(rng_draws(1, 10_000)) / 8.0 for _ in range(batch)
-        ]
+        ops, params = [], []
+        for s in shard:
+            o, pr = _draw_op_param(kinds[s], rng_draws)
+            ops.append(o)
+            params.append(pr)
         phases.append((p + 1, keys, ops, params))
     return phases, lanes
+
+
+def _init_shards(kinds):
+    return [{} if STRUCTS[k].keyed else [] for k in kinds]
+
+
+def _assert_shards_equal(kinds, got, expect, msg=""):
+    """Kind-aware per-shard equality: dict semantics for keyed shards,
+    ordered-sequence semantics for the ring/stack kinds."""
+    for s, kind in enumerate(kinds):
+        if STRUCTS[kind].keyed:
+            g, e = dict(got[s]), expect[s]
+            assert set(g) == set(e), (msg, s, g, e)
+            for k in e:
+                np.testing.assert_allclose(
+                    g[k], np.float32(e[k]), rtol=1e-6,
+                    err_msg=f"{msg} shard {s} key {k}",
+                )
+        else:
+            np.testing.assert_allclose(
+                got[s], expect[s], rtol=1e-6,
+                err_msg=f"{msg} shard {s} diverged",
+            )
 
 
 def _oracle_run(kinds, phases, lanes):
     """Phase-by-phase sequential witness: per-token (resp, kinds) plus the
     final per-shard contents."""
-    shards = [[] for _ in kinds]
+    shards = _init_shards(kinds)
     per_token = {}
     for token, keys, ops, params in phases:
         eresp, ekinds = sequential_hetero_reference(
-            kinds, shards, keys, ops, params, lanes
+            kinds, shards, keys, ops, params, lanes, capacity=CAP
         )
         per_token[token] = (eresp, ekinds)
     return shards, per_token
@@ -158,11 +198,7 @@ def test_fuzz_pipeline_crash_matches_oracle(
             kinds, phases, lanes, crash_at, backend, chain, tmp
         )
     for backend, got in per_backend.items():
-        for s in range(len(kinds)):
-            np.testing.assert_allclose(
-                got[s], oracle_shards[s], rtol=1e-6,
-                err_msg=f"{backend} shard {s} diverged from the oracle",
-            )
+        _assert_shards_equal(kinds, got, oracle_shards, msg=backend)
     assert per_backend["jnp"] == per_backend["ref"] == per_backend["pallas"]
 
 
@@ -205,32 +241,42 @@ def test_fuzz_pipeline_crash_free_differential(
             np.testing.assert_allclose(
                 val["resp"], np.asarray(eresp, np.float32), rtol=1e-6
             )
-        for s in range(len(kinds)):
-            np.testing.assert_allclose(
-                rt.shard_contents(s), oracle_shards[s], rtol=1e-6
-            )
+        _assert_shards_equal(
+            kinds,
+            [rt.shard_contents(s) for s in range(len(kinds))],
+            oracle_shards,
+            msg=backend,
+        )
 
 
 # ------------------------------------------------- seeded interleavings (ISSUE 5)
 def _mt_schedule(kinds, n_threads, n_rounds, batch, rng_draws, insert_only):
     """Per-thread batch lists whose op codes are valid for each key's routed
-    structure (or insert-only with globally unique params)."""
+    structure (or insert-only with globally unique params AND keys — unique
+    keys make per-shard multiset equality exactly-once on map shards too,
+    where a repeated key would overwrite instead of accumulating)."""
     lanes = batch * n_threads  # overflow impossible even fully chained
     val = [1.0]
+    uniq = [0]
 
     def one_batch():
-        keys = [rng_draws(0, 997) for _ in range(batch)]
+        if insert_only:
+            keys = list(range(uniq[0], uniq[0] + batch))
+            uniq[0] += batch
+        else:
+            keys = [rng_draws(0, 997) for _ in range(batch)]
         shard = route_keys_host(np.asarray(keys), len(kinds))
         if insert_only:
-            ins = {"stack": 1, "queue": 1, "deque": 3}
+            ins = {"stack": 1, "queue": 1, "deque": 3, "map": 1}
             ops = [ins[kinds[s]] for s in shard]
             params = [val[0] + i for i in range(batch)]
             val[0] += batch
         else:
-            ops = [
-                rng_draws(1, STRUCTS[kinds[s]].n_opcodes - 1) for s in shard
-            ]
-            params = [float(rng_draws(1, 10_000)) / 8.0 for _ in range(batch)]
+            ops, params = [], []
+            for s in shard:
+                o, pr = _draw_op_param(kinds[s], rng_draws)
+                ops.append(o)
+                params.append(pr)
         return keys, ops, params
 
     return [
@@ -309,7 +355,7 @@ def test_fuzz_interleaved_multithread_differential(
         ]
         # oracle: each dispatched batch group combines as ONE phase over the
         # members' concatenated lanes (segment order), groups in dispatch order
-        shards = [[] for _ in kinds]
+        shards = _init_shards(kinds)
         for group in order:
             keys, ops, params = [], [], []
             for t, token in group:
@@ -318,13 +364,12 @@ def test_fuzz_interleaved_multithread_differential(
                 ops += o
                 params += p
             sequential_hetero_reference(
-                kinds, shards, keys, ops, params, lanes
+                kinds, shards, keys, ops, params, lanes, capacity=CAP
             )
-        for s in range(len(kinds)):
-            np.testing.assert_allclose(
-                per_backend[backend][s], shards[s], rtol=1e-6,
-                err_msg=f"{backend} shard {s} diverged from dispatch-order oracle",
-            )
+        _assert_shards_equal(
+            kinds, per_backend[backend], shards,
+            msg=f"{backend} vs dispatch-order oracle",
+        )
     assert orders[0] == orders[1] == orders[2]  # backend-independent schedule
     assert (
         per_backend["jnp"] == per_backend["ref"] == per_backend["pallas"]
@@ -454,12 +499,17 @@ def test_fuzz_interleaved_crash_exactly_once(
     per_thread, lanes = _mt_schedule(
         kinds, n_threads, 2, 3, draws, insert_only=True
     )
-    # oracle: per-shard multiset from the host router (order-free for inserts)
+    # oracle: per-shard multiset from the host router (order-free for
+    # inserts; map shards accumulate (key, value) pairs — keys are unique)
     expect = [[] for _ in kinds]
     for batches in per_thread:
         for keys, ops, params in batches:
-            for s, p in zip(route_keys_host(np.asarray(keys), len(kinds)), params):
-                expect[int(s)].append(p)
+            shard = route_keys_host(np.asarray(keys), len(kinds))
+            for k, s, p in zip(keys, shard, params):
+                if STRUCTS[kinds[int(s)]].keyed:
+                    expect[int(s)].append((int(k), float(p)))
+                else:
+                    expect[int(s)].append(p)
     expect = [sorted(e) for e in expect]
     per_backend = {}
     for backend in ("jnp", "ref", "pallas"):

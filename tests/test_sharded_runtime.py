@@ -46,7 +46,7 @@ def test_router_stable_batch_order():
     keys = jnp.asarray([5, 9, 5, 5, 9], jnp.int32)
     ops = jnp.full((5,), OP_ENQ, jnp.int32)
     params = jnp.arange(1.0, 6.0)
-    shard_ops, shard_params, shard, lane, ok, overflow = route_batch(
+    shard_ops, shard_params, shard, lane, ok, overflow, _ = route_batch(
         keys, ops, params, n_shards=4, lanes=4
     )
     s5 = int(shard_of_keys_host(np.asarray([5]), 4)[0])
@@ -65,7 +65,7 @@ def test_router_stable_batch_order():
 def test_router_none_lanes_not_routed():
     keys = jnp.zeros((6,), jnp.int32)
     ops = jnp.asarray([OP_NONE, OP_ENQ, OP_NONE, OP_ENQ, OP_NONE, OP_ENQ], jnp.int32)
-    shard_ops, _, _, _, ok, overflow = route_batch(
+    shard_ops, _, _, _, ok, overflow, _ = route_batch(
         keys, ops, jnp.arange(6.0), n_shards=4, lanes=4
     )
     assert int(jnp.sum(shard_ops != OP_NONE)) == 3

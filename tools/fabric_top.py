@@ -48,6 +48,7 @@ def aggregate(events: List[Dict[str, Any]]) -> Dict[str, Any]:
     tests can assert on numbers instead of formatting)."""
     agg: Dict[str, Any] = {
         "kinds": [],
+        "capacity": None,
         "backlog": {},      # shard -> last sampled size
         "epoch": {},        # shard -> last committed epoch
         "lane_epoch": {},   # shard -> last committed [eH, eT] (split lanes)
@@ -75,6 +76,7 @@ def aggregate(events: List[Dict[str, Any]]) -> Dict[str, Any]:
         ev = e.get("ev")
         if ev == EV_TOPOLOGY:
             agg["kinds"] = list(e.get("kinds", []))
+            agg["capacity"] = e.get("capacity")
         elif ev == EV_FABRIC:
             for s, size in enumerate(e.get("backlog", [])):
                 agg["backlog"][s] = int(size)
@@ -123,12 +125,17 @@ def render(events: List[Dict[str, Any]]) -> str:
         | set(range(len(a["kinds"])))
     )
     lanes = bool(a["lane_epoch"]) or bool(a["lane_backlog"])
+    # keyed-map shards report occupancy: for them "backlog" is the committed
+    # entry count, so the extra columns show it as entries + table load
+    maps = "map" in a["kinds"]
     header = (
         f"{'shard':>5}  {'kind':<6} {'backlog':>7} {'epoch':>6} "
         f"{'commits':>7} {'touches':>7}"
     )
     if lanes:
         header += f" {'eH/eT':>9} {'blH/blT':>9}"
+    if maps:
+        header += f" {'entries':>7} {'load%':>6}"
     lines = [
         f"fabric_top — {a['n_events']} events, seq "
         f"{a['seq_range'][0]}..{a['seq_range'][1]}",
@@ -149,6 +156,15 @@ def render(events: List[Dict[str, Any]]) -> str:
                 f" {f'{le[0]}/{le[1]}' if le else '-':>9}"
                 f" {f'{lb[0]}/{lb[1]}' if lb else '-':>9}"
             )
+        if maps:
+            if kind == "map" and s in a["backlog"]:
+                n = a["backlog"][s]
+                load = (
+                    f"{100 * n / a['capacity']:.1f}" if a["capacity"] else "-"
+                )
+                row += f" {n:>7} {load:>6}"
+            else:
+                row += f" {'-':>7} {'-':>6}"
         lines.append(row)
     lines.append("")
     pwb = " ".join(f"{t}={n}" for t, n in sorted(a["pwb"].items())) or "-"

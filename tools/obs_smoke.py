@@ -39,7 +39,7 @@ from repro.runtime.dfc_shard import ShardedDFCRuntime  # noqa: E402
 import fabric_top  # noqa: E402
 
 KIND, N_SHARDS, BATCH, ROUNDS = "queue", 2, 8, 12
-CAP = BATCH * (ROUNDS + 2)
+CAP = BATCH * (ROUNDS + 2)  # map-compatible too: 112 = 14 buckets of 8
 
 
 def _schedule(seed=0):
@@ -56,13 +56,28 @@ def _schedule(seed=0):
     ]
 
 
-def _drive(root: Path, obs=None):
+def _map_schedule(seed=1):
+    """Mixed insert/lookup/delete/CAS rounds for the keyed-map case (CAS
+    params pack expected*4096 + new)."""
+    rng = np.random.default_rng(seed)
+    sched = []
+    for r in range(ROUNDS):
+        ops = rng.integers(1, 5, BATCH)
+        vals = rng.integers(0, 4096, BATCH).astype(np.float64)
+        expect = rng.integers(0, 4096, BATCH)
+        params = np.where(ops == 4, expect * 4096.0 + vals, vals)
+        sched.append((0, r + 1, rng.integers(0, 4096, BATCH), ops, params))
+    return sched
+
+
+def _drive(root: Path, obs=None, kind=KIND, schedule=None):
     fs = SimFS(root)
     rt = ShardedDFCRuntime(
-        KIND, N_SHARDS, CAP, BATCH, fs=fs, n_threads=1, depth=2, obs=obs,
+        kind, N_SHARDS, CAP, BATCH, fs=fs, n_threads=1, depth=2, obs=obs,
     )
-    rt.phase_loop(_schedule())
+    rt.phase_loop(schedule if schedule is not None else _schedule())
     if obs is not None:
+        obs.observe_fabric(rt)
         obs.flush()
     return fs, rt
 
@@ -91,6 +106,36 @@ def main() -> int:
             failures.append(
                 f"durable state diverged: {d_plain} vs {d_traced}"
             )
+
+        # the purity invariant is gated on the keyed-map kind too: the same
+        # insert/lookup/delete/CAS schedule traced and untraced
+        fs_mplain, _ = _drive(
+            base / "map_plain", kind="map", schedule=_map_schedule()
+        )
+        obs_map = FabricObserver(root=base / "map_traced")
+        fs_mtraced, _ = _drive(
+            base / "map_traced", obs=obs_map, kind="map",
+            schedule=_map_schedule(),
+        )
+        if dict(fs_mplain.stats) != dict(fs_mtraced.stats):
+            failures.append(
+                f"map: total pwb/pfence diverged: {dict(fs_mplain.stats)} "
+                f"vs {dict(fs_mtraced.stats)}"
+            )
+        if fs_mplain.pstats.as_dict() != fs_mtraced.pstats.as_dict():
+            failures.append(
+                f"map: per-tag pwb/pfence diverged: "
+                f"{fs_mplain.pstats.as_dict()} vs "
+                f"{fs_mtraced.pstats.as_dict()}"
+            )
+        d_mplain = durable_digest(base / "map_plain")
+        d_mtraced = durable_digest(base / "map_traced")
+        if d_mplain != d_mtraced:
+            failures.append(
+                f"map: durable state diverged: {d_mplain} vs {d_mtraced}"
+            )
+        print(fabric_top.render(read_trace(obs_map.trace_path)))
+        print()
 
         # clean-reboot recovery must extend the same sidecar with verdicts
         pre = read_trace(obs.trace_path)
