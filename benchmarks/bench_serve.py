@@ -1,0 +1,293 @@
+"""End-to-end serving through the fabric: k-class continuous batching.
+
+The ISSUE-10 tentpole measured: a continuous-batching decode loop where
+every scheduling decision is a fabric op (k-class arrival enqueues,
+weighted admission dequeues, slot-pool pops/pushes, per-round progress
+commits, served retirement) under Zipf-skewed class assignment.  For each
+``k`` the run reports admission + end-to-end latency percentiles (from the
+fabric observer's histograms), scheduling phases/s, decode tok/s of the
+simulated decoder, and the durable path's pwb/op + pfence/op.
+
+The script GATES on two claims and exits non-zero if either fails:
+
+  * starvation bound — with every class continuously backlogged, the
+    lowest class is never gapped more than ``sum(w) - w[0]`` admissions
+    (checked against the tier's ``admit_log`` witness up to class 0's
+    final admission);
+  * exactly-once resume — crashing the durable tier at >= 3 points of the
+    schedule and resuming must serve every session and emit every token
+    index exactly once, with token values identical to the uncrashed run.
+
+Emits ``name,value,derived`` rows via ``emit`` and (as a script) writes
+``BENCH_serve.json``.  ``--smoke`` runs a seconds-scale subset on CPU jax —
+wired into CI so the serving path cannot rot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+from repro.checkpoint.dfc_checkpoint import CrashNow, FaultInjector, SimFS
+from repro.launch.serve import (
+    ContinuousServer,
+    RequestQueueTier,
+    _committed_tokens,
+    _read_served,
+    _read_token_entries,
+    verify_exactly_once,
+)
+from repro.obs import FabricObserver
+from repro.runtime.dfc_shard import zipf_keys
+
+_ROOT = Path(__file__).resolve().parent.parent  # repo root, CWD-independent
+
+CRASH_FRACS = (0.3, 0.55, 0.8)  # >= 3 crash points across the schedule
+
+
+def _class_of(rng, n_sessions, k, skew=1.1):
+    """Zipf-skewed class assignment over [0, k): the lowest class is the
+    most common — the starvation bound's worst customer."""
+    draws = zipf_keys(rng, n_sessions, k, skew)
+    return {sid: int(draws[sid - 1]) for sid in range(1, n_sessions + 1)}
+
+def _serve_once(
+    k, sessions, batch, gen, quantum, lanes, *,
+    state_dir=None, crash_at=None, resume=False, obs=None,
+):
+    """One continuous-batching pass (fresh or resumed); returns
+    ``(run result, tier, fs)``.  All sessions arrive up front, so every
+    class stays backlogged until it drains — the regime the starvation
+    bound is stated for."""
+    cls_of = _class_of(np.random.default_rng(0), sessions, k)
+    durable = state_dir is not None
+    fs = (
+        SimFS(state_dir / "tier", FaultInjector(crash_at=crash_at))
+        if durable else None
+    )
+    kw = dict(capacity=4096, lanes=lanes, k_classes=k)
+    if resume:
+        tier, info = RequestQueueTier.recover(fs, **kw)
+    else:
+        tier = RequestQueueTier(
+            slots=batch, durable=durable, fs=fs, obs=obs, **kw
+        )
+        info = None
+    entries = _read_token_entries(state_dir)
+    srv = ContinuousServer(
+        tier,
+        sids=list(range(1, sessions + 1)),
+        batch=batch, gen=gen, quantum=quantum,
+        arrival=sessions,  # all arrivals up front: continuous backlog
+        class_of=lambda s: cls_of[s],
+        state_dir=state_dir,
+        resume_info=info,
+        served_before=_read_served(state_dir) if state_dir else (),
+        token_log={s: _committed_tokens(e) for s, e in entries.items()},
+    )
+    return srv.run(), tier, fs
+
+
+def _starvation_max_gap(admit_log, k):
+    """Largest number of other-class admissions between consecutive class-0
+    admissions (including the stream head), up to class 0's final one —
+    valid because all arrivals precede the first admission here."""
+    stream = [c for _, c in admit_log]
+    idx0 = [i for i, c in enumerate(stream) if c == 0]
+    if not idx0:
+        return None
+    gaps = [idx0[0]] + [b - a - 1 for a, b in zip(idx0, idx0[1:])]
+    return max(gaps)
+
+
+def _token_values(state_dir):
+    return {
+        s: [t for _, t in sorted(e)]
+        for s, e in _read_token_entries(state_dir).items()
+    }
+
+
+def _crash_resume_campaign(k, sessions, batch, gen, quantum, lanes):
+    """Crash the durable schedule at each fraction, resume, audit: returns
+    (crash_points, all_exactly_once, crash_exact_vs_reference)."""
+    ref_dir = Path(tempfile.mkdtemp(prefix="dfc_bench_serve_ref_"))
+    try:
+        _, _, ref_fs = _serve_once(
+            k, sessions, batch, gen, quantum, lanes, state_dir=ref_dir
+        )
+        total = ref_fs.injector.count
+        reference = _token_values(ref_dir)
+        sids = list(range(1, sessions + 1))
+        points, ok, exact = [], True, True
+        for frac in CRASH_FRACS:
+            crash_at = max(1, int(total * frac))
+            points.append(crash_at)
+            sd = Path(tempfile.mkdtemp(prefix="dfc_bench_serve_crash_"))
+            try:
+                try:
+                    _serve_once(
+                        k, sessions, batch, gen, quantum, lanes,
+                        state_dir=sd, crash_at=crash_at,
+                    )
+                except CrashNow:
+                    pass
+                res, _, _ = _serve_once(
+                    k, sessions, batch, gen, quantum, lanes,
+                    state_dir=sd, resume=True,
+                )
+                try:
+                    verify_exactly_once(
+                        sids, gen, _read_served(sd), _read_token_entries(sd)
+                    )
+                except AssertionError as e:
+                    print(f"exactly-once FAIL k={k} crash_at={crash_at}: {e}")
+                    ok = False
+                if _token_values(sd) != reference:
+                    print(f"crash-exact FAIL k={k} crash_at={crash_at}")
+                    exact = False
+            finally:
+                shutil.rmtree(sd, ignore_errors=True)
+        return points, ok, exact
+    finally:
+        shutil.rmtree(ref_dir, ignore_errors=True)
+
+
+def _one_config(k, sessions, batch, gen, quantum, results, emit):
+    lanes = max(batch * 2, 2 * sessions // k + 8)
+
+    # measured pass: durable tier + observer (latency histograms, pwb/op)
+    obs = FabricObserver()
+    state_dir = Path(tempfile.mkdtemp(prefix="dfc_bench_serve_"))
+    try:
+        t0 = time.perf_counter()
+        res, tier, fs = _serve_once(
+            k, sessions, batch, gen, quantum, lanes,
+            state_dir=state_dir, obs=obs,
+        )
+        dt = time.perf_counter() - t0
+        assert res["completed"] == sessions, res
+        lat = tier.latency_stats() or {}
+        p = tier.persistence_stats()
+        bound = tier.starvation_bound()
+        max_gap = _starvation_max_gap(tier.admit_log, k)
+        phases = tier._token  # per-phase monotone token == phase count
+    finally:
+        shutil.rmtree(state_dir, ignore_errors=True)
+
+    points, exactly_once, crash_exact = _crash_resume_campaign(
+        k, max(8, sessions // 4), batch, gen, quantum, lanes
+    )
+
+    adm = lat.get("admission_ms", {})
+    e2e = lat.get("e2e_ms", {})
+    name = f"serve_k{k}"
+    emit(
+        name,
+        f"{res['decoded_tokens'] / dt:.0f}",
+        f"tok/s,adm_p99={adm.get('p99', 0):.2f}ms,"
+        f"pwb/op={p['pwb_per_op']:.2f},gap={max_gap}/{bound}",
+    )
+    results.append(
+        {
+            "kind": "serve",
+            "k_classes": k,
+            "class_weights": list(tier.class_weights),
+            "sessions": sessions,
+            "batch": batch,
+            "gen": gen,
+            "quantum": quantum,
+            "rounds": res["rounds"],
+            "decoded_tokens": res["decoded_tokens"],
+            "tok_per_s": res["decoded_tokens"] / dt,
+            "phases_per_s": phases / dt,
+            "admission_ms": {
+                key: adm.get(key) for key in ("p50", "p99", "mean", "count")
+            },
+            "e2e_ms": {
+                key: e2e.get(key) for key in ("p50", "p99", "mean", "count")
+            },
+            "pwb_per_op": p["pwb_per_op"],
+            "pfence_per_op": p["pfence_per_op"],
+            "persist": fs.pstats.as_dict(),
+            "starvation_bound": bound,
+            "starvation_max_gap": max_gap,
+            "crash_points": points,
+            "exactly_once": exactly_once,
+            "crash_exact": crash_exact,
+        }
+    )
+
+
+def run(emit, smoke: bool = False):
+    results = []
+    if smoke:
+        grid = [(2, 24, 4, 4, 2), (4, 32, 8, 4, 2)]
+    else:
+        grid = [
+            (2, 96, 8, 8, 4),
+            (3, 120, 8, 8, 4),
+            (4, 128, 8, 8, 4),
+        ]
+    for k, sessions, batch, gen, quantum in grid:
+        _one_config(k, sessions, batch, gen, quantum, results, emit)
+    return results
+
+
+def gate(results) -> int:
+    """The acceptance gate: every priority class inside its weighted bound,
+    every crash point resumed exactly once and crash-exactly.  Returns a
+    non-zero exit code listing violations."""
+    bad = 0
+    for r in results:
+        tag = f"serve_k{r['k_classes']}"
+        if r["starvation_max_gap"] is None or (
+            r["starvation_max_gap"] > r["starvation_bound"]
+        ):
+            print(
+                f"GATE FAIL {tag}: class-0 admission gap "
+                f"{r['starvation_max_gap']} exceeds bound "
+                f"{r['starvation_bound']}"
+            )
+            bad += 1
+        if not r["exactly_once"]:
+            print(f"GATE FAIL {tag}: exactly-once resume violated")
+            bad += 1
+        if not r["crash_exact"]:
+            print(f"GATE FAIL {tag}: resumed token values diverged")
+            bad += 1
+        if len(r["crash_points"]) < 3:
+            print(f"GATE FAIL {tag}: fewer than 3 crash points")
+            bad += 1
+    return 1 if bad else 0
+
+
+def main(emit, smoke: bool = True):
+    """Benchmark-harness entry point (smoke-sized by default: run.py and CI
+    both call this; the full grid is `python bench_serve.py` without
+    --smoke)."""
+    return run(emit, smoke=smoke)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="seconds-scale CI subset")
+    ap.add_argument(
+        "--out", default=str(_ROOT / "BENCH_serve.json"),
+        help="JSON results path (defaults to the repo root)",
+    )
+    args = ap.parse_args()
+    rows = run(lambda n, v, d="": print(f"{n},{v},{d}", flush=True), smoke=args.smoke)
+    try:
+        from benchmarks.bench_common import write_rows
+    except ImportError:
+        from bench_common import write_rows
+    write_rows(args.out, rows, extra={"entry": "script", "smoke": args.smoke})
+    print(f"# wrote {args.out} ({len(rows)} configs)")
+    raise SystemExit(gate(rows))

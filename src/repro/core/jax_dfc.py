@@ -96,6 +96,35 @@ CAS_DOM = 4096
 # slots per hash bucket of a map shard (the fixed probe window)
 MAP_BUCKET_SLOTS = 8
 
+
+def pack_cas(expected: int, new: int) -> float:
+    """Pack a CAS ``(expected, new)`` pair into one f32-exact op param.
+
+    Owns the CAS packing domain: both operands must sit in ``[0, CAS_DOM)``
+    or the packed value would alias a DIFFERENT (expected, new) pair — the
+    combine unpacks with floor-divide, so an out-of-range operand wraps
+    silently into the other field.  Callers that widen their own value
+    encodings (e.g. the serving tier's session states) route through here
+    so the domain check cannot be forgotten.
+    """
+    expected, new = int(expected), int(new)
+    if not 0 <= expected < CAS_DOM:
+        raise ValueError(f"CAS expected value {expected} outside [0, {CAS_DOM})")
+    if not 0 <= new < CAS_DOM:
+        raise ValueError(f"CAS new value {new} outside [0, {CAS_DOM})")
+    packed = expected * CAS_DOM + new
+    # CAS_DOM**2 - 1 == 2**24 - 1: the top of f32's contiguous-integer range
+    assert packed < CAS_DOM * CAS_DOM and float(np.float32(packed)) == packed
+    return float(packed)
+
+
+def unpack_cas(packed) -> Tuple[int, int]:
+    """Invert :func:`pack_cas` -> ``(expected, new)``."""
+    p = int(packed)
+    if not 0 <= p < CAS_DOM * CAS_DOM:
+        raise ValueError(f"packed CAS param {p} outside [0, {CAS_DOM ** 2})")
+    return p // CAS_DOM, p % CAS_DOM
+
 # announcement lanes (per-side combiners, ISSUE 8): every op code of a
 # two-sided structure belongs to exactly one combining lane — the HEAD lane
 # (the consuming side: queue dequeues, deque left-side ops) or the TAIL lane

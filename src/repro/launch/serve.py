@@ -50,8 +50,9 @@ from __future__ import annotations
 import argparse
 import tempfile
 import time
+from collections import deque
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -72,36 +73,80 @@ from repro.core.jax_dfc import (
     OP_PUSH_FRONT,
     R_CAS_FAIL,
     R_VALUE,
+    pack_cas,
 )
-from repro.runtime.dfc_shard import _HASH_MULT, R_OVERFLOW, ShardedDFCRuntime
+from repro.runtime.dfc_shard import (
+    _HASH_MULT,
+    R_OVERFLOW,
+    ShardedDFCRuntime,
+    weighted_dequeue_plan,
+)
 
 
 # ------------------------------------------------- session-state map packing
-# The tier keeps per-session serving state (priority, decode-slot binding,
-# lifecycle stage) in a MAP SHARD of the same fabric, one entry per session.
-# The packed value fits in 12 bits so a whole-state swap rides a single
-# fabric CAS (``expected * CAS_DOM + new`` needs both sides < CAS_DOM):
+# The tier keeps per-session serving state (priority class, decode-slot
+# binding, lifecycle stage) in a MAP SHARD of the same fabric, one entry per
+# session.  The packed value fits in 12 bits so a whole-state swap rides a
+# single fabric CAS (``pack_cas`` needs both sides < CAS_DOM):
 #
-#   bit 11      priority flag (front-of-queue arrival)
-#   bits 3..10  decode slot binding (SESSION_SLOT_NONE = unbound)
-#   bits 0..2   stage: QUEUED -> ADMITTED -> SERVED
+#   bits 10..11  priority class (0 = lowest; the binary ``priority=True``
+#                tier uses classes 0/1, ``k_classes=k`` uses 0..k-1, k <= 4)
+#   bits 3..9    decode slot binding (SESSION_SLOT_NONE = unbound)
+#   bits 0..2    stage: QUEUED -> ADMITTED -> SERVED
 SESSION_QUEUED, SESSION_ADMITTED, SESSION_SERVED = 1, 2, 3
-SESSION_SLOT_NONE = 255
+SESSION_STAGE_DOM = 8
+SESSION_SLOT_DOM = 128
+SESSION_CLASS_DOM = 4
+SESSION_MAX_CLASSES = SESSION_CLASS_DOM
+SESSION_SLOT_NONE = SESSION_SLOT_DOM - 1
+# Decode PROGRESS (tokens emitted so far) rides a SECOND map entry per
+# session, tagged by value range so the recovery walk separates the two
+# without a side table: state entries are < CAS_DOM, progress entries are
+# stored as PROGRESS_TAG + tokens (tokens < PROGRESS_MAX keeps the stored
+# value inside f32's contiguous-integer range, like the CAS packing).
+PROGRESS_TAG = CAS_DOM
+PROGRESS_MAX = CAS_DOM * CAS_DOM - PROGRESS_TAG
 # Each session owns the key window [sid * stride, (sid + 1) * stride): its
-# map key is the first window key routing to the session shard, so map keys
-# are unique BY CONSTRUCTION (windows are disjoint) and the recovery walk
-# inverts them: sid = key // stride.
+# state key is the FIRST window key routing to the session shard and its
+# progress key the SECOND, so map keys are unique BY CONSTRUCTION (windows
+# are disjoint) and the recovery walk inverts them: sid = key // stride.
 _SESSION_KEY_STRIDE = 64
 
 
-def pack_session(priority: int, slot: int, stage: int) -> int:
-    """Pack (priority, slot, stage) into one CAS-swappable map value."""
-    return (2048 if priority else 0) + int(slot) * 8 + int(stage)
+def pack_session(cls: int, slot: int, stage: int) -> int:
+    """Pack (priority class, slot, stage) into one CAS-swappable map value.
+
+    Out-of-range fields used to wrap modulo into ANOTHER session's fields
+    with no error; every field is now validated, and the packed value is
+    asserted to stay inside the CAS packing domain (< CAS_DOM, so a
+    state swap packs f32-exactly through ``pack_cas``).
+    """
+    cls, slot, stage = int(cls), int(slot), int(stage)
+    if not 0 <= cls < SESSION_CLASS_DOM:
+        raise ValueError(
+            f"priority class {cls} outside [0, {SESSION_CLASS_DOM})"
+        )
+    if not 0 <= slot < SESSION_SLOT_DOM:
+        raise ValueError(f"decode slot {slot} outside [0, {SESSION_SLOT_DOM})")
+    if not 0 <= stage < SESSION_STAGE_DOM:
+        raise ValueError(f"stage {stage} outside [0, {SESSION_STAGE_DOM})")
+    packed = cls * (SESSION_SLOT_DOM * SESSION_STAGE_DOM) + slot * SESSION_STAGE_DOM + stage
+    assert packed < CAS_DOM, (cls, slot, stage)  # CAS-swappable by design
+    return packed
 
 
 def unpack_session(packed) -> Dict[str, int]:
     p = int(packed)
-    return {"priority": p // 2048, "slot": (p // 8) % 256, "stage": p % 8}
+    if not 0 <= p < CAS_DOM:
+        raise ValueError(f"packed session state {p} outside [0, {CAS_DOM})")
+    cls = p // (SESSION_SLOT_DOM * SESSION_STAGE_DOM)
+    return {
+        "cls": cls,
+        # legacy binary view: any class above the lowest counts as priority
+        "priority": 1 if cls > 0 else 0,
+        "slot": (p // SESSION_STAGE_DOM) % SESSION_SLOT_DOM,
+        "stage": p % SESSION_STAGE_DOM,
+    }
 
 
 class RequestQueueTier:
@@ -126,6 +171,21 @@ class RequestQueueTier:
     arrival is the most urgent).  Because the order is fabric state, it is
     exactly as durable as the queue contents: a recovered tier admits the
     same sessions in the same order.
+
+    k-class admission (``k_classes=k``, 2 <= k <= ``SESSION_MAX_CLASSES``):
+    the tier generalizes the binary front-of-line path to ``k`` PRIORITY
+    CLASSES, one request queue shard per class (shard ``c`` <-> class ``c``).
+    ``submit`` takes a parallel ``classes`` list; arrivals enqueue FIFO into
+    their class shard, and ``admit`` dequeues by WEIGHTED round-robin across
+    the backlogged class shards (``weighted_dequeue_plan``): class ``c``
+    holds ``class_weights[c]`` dequeue credits per cycle, unused credits
+    fall through to the next backlogged class, and a backlogged class is
+    never passed over for more than ``sum(weights) - weights[c]``
+    consecutive admissions — the provable starvation bound the serving
+    benchmark gates on (``starvation_bound()``).  Per-class FIFO order is
+    fabric state and survives crash/recover; the weighted-cycle CURSOR is
+    host scheduling state and restarts at the cycle head on recovery (the
+    bound holds within each run's admission stream).
     """
 
     def __init__(
@@ -142,11 +202,57 @@ class RequestQueueTier:
         pipeline: bool = False,
         depth: Optional[int] = None,
         priority: bool = False,
+        k_classes: int = 0,
+        class_weights: Optional[Sequence[int]] = None,
         split_lanes: bool = False,
         obs=None,
         _seed_slots: bool = True,
         _rt: Optional[ShardedDFCRuntime] = None,
     ):
+        if k_classes and k_classes >= 2:
+            if priority:
+                raise ValueError(
+                    "k_classes generalizes priority=True; pick one"
+                )
+            if k_classes > SESSION_MAX_CLASSES:
+                raise ValueError(
+                    f"k_classes={k_classes} exceeds the packed class field "
+                    f"(SESSION_MAX_CLASSES={SESSION_MAX_CLASSES})"
+                )
+            if reshard_backlog is not None:
+                raise ValueError(
+                    "k_classes pins shard c to class c; autosplit would "
+                    "break the mapping (reshard_backlog must be None)"
+                )
+            n_queues = k_classes  # shard c == class c
+            self.k_classes = k_classes
+            self.class_weights = (
+                [int(w) for w in class_weights]
+                if class_weights is not None
+                else [1 << c for c in range(k_classes)]
+            )
+            if len(self.class_weights) != k_classes or any(
+                w < 1 for w in self.class_weights
+            ):
+                raise ValueError(
+                    f"class_weights must be k_classes={k_classes} ints >= 1, "
+                    f"got {class_weights}"
+                )
+        else:
+            if class_weights is not None:
+                raise ValueError("class_weights needs k_classes >= 2")
+            self.k_classes = 0
+            self.class_weights = []
+        self._class_cursor = 0
+        # (sid, class) per admission, in admission order — the starvation
+        # gate's witness (k-class tiers only)
+        self.admit_log: List[Tuple[int, int]] = []
+        if slots > SESSION_SLOT_NONE:
+            raise ValueError(
+                f"slots={slots} exceeds the packed slot field "
+                f"(max {SESSION_SLOT_NONE}: id {SESSION_SLOT_NONE} is the "
+                f"unbound sentinel)"
+            )
         req_kind = "deque" if priority else "queue"
         kinds = [req_kind] * n_queues + ["stack", "map"]
         n_shards = n_queues + 2
@@ -170,7 +276,9 @@ class RequestQueueTier:
             kinds, n_shards, capacity, lanes,
             fs=fs if durable else None, n_threads=1,
             n_buckets=n_buckets,
-            table=self._default_table(n_queues, n_buckets),
+            table=self._default_table(
+                n_queues, n_buckets, k_classes=bool(self.k_classes)
+            ),
             pipeline=pipeline, depth=depth,
             split_lanes=split_lanes,
             obs=obs,
@@ -184,7 +292,8 @@ class RequestQueueTier:
         self._admit_t: Dict[int, float] = {}  # sid -> admission perf_counter
         self.reshard_backlog = reshard_backlog
         self._rep_keys: Dict[int, int] = {}
-        self._smap_keys: Dict[int, int] = {}  # sid -> session-map key
+        self._smap_keys: Dict[int, int] = {}  # sid -> session-state map key
+        self._sprog_keys: Dict[int, int] = {}  # sid -> decode-progress map key
         self._slot_retry: List[int] = []  # pool pushes that overflowed a phase
         # session-state writes that overflowed the map shard's lanes, retried
         # on the next submit: (sid, packed) pairs
@@ -203,17 +312,36 @@ class RequestQueueTier:
 
     # ------------------------------------------------------------ internals
     @staticmethod
-    def _default_table(n_queues: int, n_buckets: int) -> np.ndarray:
+    def _default_table(
+        n_queues: int, n_buckets: int, k_classes: bool = False
+    ) -> np.ndarray:
         """Bucket 0 -> pool stack (shard ``n_queues``); every fourth bucket
         after it -> session map (shard ``n_queues + 1``, a ~1/4 share so the
         per-session key-window probe in ``session_map_key`` converges in a
-        few steps); the rest round-robin over the request shards."""
+        few steps); the rest round-robin over the request shards.
+
+        k-class tiers round-robin over the SURVIVING buckets instead of
+        ``b % n_queues``: when ``n_queues`` divides 4 the session map's
+        ``b % 4 == 1`` buckets alias an entire residue class, which would
+        leave that class shard unroutable."""
         pool, smap = n_queues, n_queues + 1
-        return np.asarray(
-            [pool]
-            + [smap if b % 4 == 1 else b % n_queues for b in range(1, n_buckets)],
-            np.int32,
-        )
+        if not k_classes:
+            return np.asarray(
+                [pool]
+                + [
+                    smap if b % 4 == 1 else b % n_queues
+                    for b in range(1, n_buckets)
+                ],
+                np.int32,
+            )
+        out, nxt = [pool], 0
+        for b in range(1, n_buckets):
+            if b % 4 == 1:
+                out.append(smap)
+            else:
+                out.append(nxt % n_queues)
+                nxt += 1
+        return np.asarray(out, np.int32)
 
     def _key_for(self, shard: int) -> int:
         if shard not in self._rep_keys:
@@ -256,48 +384,104 @@ class RequestQueueTier:
             k = (k * _HASH_MULT + 1) % (1 << 31)
         return k
 
-    def session_map_key(self, sid: int) -> int:
-        """Unique fabric key addressing ``sid``'s session-state map entry:
-        the first key in the session's private window
-        ``[sid * 64, (sid + 1) * 64)`` that routes to the session shard.
+    def _session_window_keys(self, sid: int, need: int = 2) -> List[int]:
+        """The first ``need`` keys of ``sid``'s private window
+        ``[sid * 64, (sid + 1) * 64)`` that route to the session shard.
         Windows are disjoint, so two sessions can never collide on a map key
         (unlike a rehash chain, whose orbits can merge), and the recovery
         walk inverts the encoding: ``sid = key // 64``."""
+        base = int(sid) * _SESSION_KEY_STRIDE
+        cand = np.arange(base, base + _SESSION_KEY_STRIDE, dtype=np.int64)
+        hit = np.nonzero(self.rt.route_host(cand) == self.session_shard)[0]
+        if hit.size < need:  # P ~ binom tail at a ~1/4 share over 64 keys
+            raise RuntimeError(
+                f"only {hit.size} keys in window [{base}, "
+                f"{base + _SESSION_KEY_STRIDE}) route to the session map "
+                f"shard (need {need}); widen its bucket share"
+            )
+        return [int(cand[h]) for h in hit[:need]]
+
+    def session_map_key(self, sid: int) -> int:
+        """Unique fabric key addressing ``sid``'s session-STATE map entry:
+        the first key in the session's private window routing to the
+        session shard."""
         if sid not in self._smap_keys:
-            base = int(sid) * _SESSION_KEY_STRIDE
-            cand = np.arange(base, base + _SESSION_KEY_STRIDE, dtype=np.int64)
-            hit = np.nonzero(self.rt.route_host(cand) == self.session_shard)[0]
-            if hit.size == 0:  # P ~ (3/4)^64 per sid with the default table
-                raise RuntimeError(
-                    f"no key in window [{base}, {base + _SESSION_KEY_STRIDE}) "
-                    f"routes to the session map shard; widen its bucket share"
-                )
-            self._smap_keys[sid] = int(cand[hit[0]])
+            self._smap_keys[sid] = self._session_window_keys(sid)[0]
         return self._smap_keys[sid]
 
+    def session_progress_key(self, sid: int) -> int:
+        """Unique fabric key addressing ``sid``'s decode-PROGRESS map entry:
+        the second window key routing to the session shard (the entry's
+        value is tagged ``PROGRESS_TAG + tokens``, so the recovery walk
+        separates state from progress by value range alone)."""
+        if sid not in self._sprog_keys:
+            self._sprog_keys[sid] = self._session_window_keys(sid)[1]
+        return self._sprog_keys[sid]
+
+    def _smap_write_key(self, sid: int, packed: int) -> int:
+        """Map key for a staged session write: progress entries (tagged
+        values) go to the progress key, state entries to the state key."""
+        if packed >= PROGRESS_TAG:
+            return self.session_progress_key(sid)
+        return self.session_map_key(sid)
+
     def _stage_session_writes(
-        self, sids: Sequence[int], priorities: Optional[Sequence[int]]
+        self, sids: Sequence[int], cls_list: Sequence[int]
     ) -> List[Tuple[int, int]]:
         """Arrival-time session-state map inserts (plus retries from earlier
         phases), capped at the map shard's per-phase lanes — every write
         targets the ONE session shard, so at most ``lanes`` fit per phase.
         Retried arrivals whose session already advanced past QUEUED (its
-        slot got bound meanwhile) are dropped instead of regressing it."""
-        pr = list(priorities) if priorities is not None else [0] * len(sids)
+        slot got bound meanwhile) are dropped instead of regressing it;
+        retried PROGRESS entries (tagged values) always pass through."""
         writes = [
             (sid, packed)
             for sid, packed in self._state_retry
-            if unpack_session(packed)["stage"] != SESSION_QUEUED
+            if packed >= PROGRESS_TAG
+            or unpack_session(packed)["stage"] != SESSION_QUEUED
             or sid not in self._session_slot
         ]
-        for s, p in zip(sids, pr):
-            prio = 1 if p > 0 else 0
-            self._session_prio[int(s)] = prio
+        for s, c in zip(sids, cls_list):
+            self._session_prio[int(s)] = int(c)
             writes.append(
-                (int(s), pack_session(prio, SESSION_SLOT_NONE, SESSION_QUEUED))
+                (int(s), pack_session(int(c), SESSION_SLOT_NONE, SESSION_QUEUED))
             )
         self._state_retry = writes[self.rt.lanes:]
         return writes[: self.rt.lanes]
+
+    def _arrival_classes(
+        self,
+        sids: Sequence[int],
+        priorities: Optional[Sequence[int]],
+        classes: Optional[Sequence[int]],
+    ) -> List[int]:
+        """Validate + normalize per-arrival class labels for every tier
+        flavor: FIFO -> all zero, binary priority -> 0/1 from
+        ``priorities``, k-class -> ``classes`` in [0, k)."""
+        if priorities is not None and not self.priority:
+            raise ValueError("priorities given but tier built without priority=True")
+        if priorities is not None and len(priorities) != len(sids):
+            raise ValueError(
+                f"priorities ({len(priorities)}) must parallel sids ({len(sids)})"
+            )
+        if classes is not None and not self.k_classes:
+            raise ValueError("classes given but tier built without k_classes")
+        if self.k_classes:
+            cls = list(classes) if classes is not None else [0] * len(sids)
+            if len(cls) != len(sids):
+                raise ValueError(
+                    f"classes ({len(cls)}) must parallel sids ({len(sids)})"
+                )
+            for c in cls:
+                if not 0 <= int(c) < self.k_classes:
+                    raise ValueError(
+                        f"class {c} outside [0, {self.k_classes})"
+                    )
+            return [int(c) for c in cls]
+        if self.priority:
+            pr = list(priorities) if priorities is not None else [0] * len(sids)
+            return [1 if p > 0 else 0 for p in pr]
+        return [0] * len(sids)
 
     def _queue_backlogs(self) -> Dict[int, int]:
         """Committed backlog per request shard, straight from the fabric's
@@ -315,6 +499,7 @@ class RequestQueueTier:
         sids: Sequence[int],
         release_slots: Sequence[int] = (),
         priorities: Optional[Sequence[int]] = None,
+        classes: Optional[Sequence[int]] = None,
     ) -> List[int]:
         """Enqueue arriving sessions and return freed decode slots to the
         pool — one mixed-kind combined phase.  Returns session ids that
@@ -322,28 +507,27 @@ class RequestQueueTier:
 
         ``priorities[i] > 0`` (priority tier only) pushes session ``i`` at
         the FRONT of its request deque, ahead of the whole backlog.
+        ``classes[i]`` (k-class tier only) enqueues session ``i`` FIFO into
+        its priority-class shard (class 0 = lowest).
 
         Pool pushes all route to the single pool shard, so at most ``lanes``
         of them fit per phase; the surplus — and any push the fabric rejects
         with R_OVERFLOW — is carried in ``_slot_retry`` and retried on the
         next submit, so a decode slot can never leak."""
-        if priorities is not None and not self.priority:
-            raise ValueError("priorities given but tier built without priority=True")
-        if priorities is not None and len(priorities) != len(sids):
-            raise ValueError(
-                f"priorities ({len(priorities)}) must parallel sids ({len(sids)})"
-            )
+        cls_list = self._arrival_classes(sids, priorities, classes)
         pool = self._slot_retry + list(release_slots)
         self._slot_retry = pool[self.rt.lanes :]
         pool = pool[: self.rt.lanes]
-        smap = self._stage_session_writes(sids, priorities)
-        keys = [self.session_key(s) for s in sids]
+        smap = self._stage_session_writes(sids, cls_list)
+        if self.k_classes:
+            keys = [self._key_for(c) for c in cls_list]  # shard c == class c
+        else:
+            keys = [self.session_key(s) for s in sids]
         keys += [self._key_for(self.pool_shard)] * len(pool)
-        keys += [self.session_map_key(sid) for sid, _ in smap]
+        keys += [self._smap_write_key(sid, v) for sid, v in smap]
         if self.priority:
-            pr = list(priorities) if priorities is not None else [0] * len(sids)
             enq_ops = [
-                OP_PUSH_FRONT if p > 0 else OP_PUSH_BACK for p in pr
+                OP_PUSH_FRONT if c > 0 else OP_PUSH_BACK for c in cls_list
             ]
         else:
             enq_ops = [OP_ENQ] * len(sids)
@@ -401,27 +585,24 @@ class RequestQueueTier:
         """
         staged = []
         for wave in waves:
-            sids, release_slots, priorities = wave
-            if priorities is not None and not self.priority:
-                raise ValueError(
-                    "priorities given but tier built without priority=True"
-                )
-            if priorities is not None and len(priorities) != len(sids):
-                raise ValueError(
-                    f"priorities ({len(priorities)}) must parallel "
-                    f"sids ({len(sids)})"
-                )
+            # (sids, release_slots, priorities[, classes]) — the optional
+            # fourth element labels k-class arrivals, mirroring ``submit``
+            sids, release_slots, priorities = wave[0], wave[1], wave[2]
+            classes = wave[3] if len(wave) > 3 else None
+            cls_list = self._arrival_classes(sids, priorities, classes)
             pool = self._slot_retry + list(release_slots)
             self._slot_retry = pool[self.rt.lanes:]
             pool = pool[: self.rt.lanes]
-            smap = self._stage_session_writes(sids, priorities)
-            keys = [self.session_key(s) for s in sids]
+            smap = self._stage_session_writes(sids, cls_list)
+            if self.k_classes:
+                keys = [self._key_for(c) for c in cls_list]
+            else:
+                keys = [self.session_key(s) for s in sids]
             keys += [self._key_for(self.pool_shard)] * len(pool)
-            keys += [self.session_map_key(sid) for sid, _ in smap]
+            keys += [self._smap_write_key(sid, v) for sid, v in smap]
             if self.priority:
-                pr = list(priorities) if priorities is not None else [0] * len(sids)
                 enq_ops = [
-                    OP_PUSH_FRONT if p > 0 else OP_PUSH_BACK for p in pr
+                    OP_PUSH_FRONT if c > 0 else OP_PUSH_BACK for c in cls_list
                 ]
             else:
                 enq_ops = [OP_ENQ] * len(sids)
@@ -479,9 +660,13 @@ class RequestQueueTier:
 
     def admit(self, max_n: int) -> List[Tuple[int, int]]:
         """Admit up to ``max_n`` sessions: pop free slots from the pool
-        stack, then dequeue that many sessions round-robin from the backlogged
-        request shards (front-of-queue on priority tiers — ``OP_POP_FRONT``
-        and ``OP_DEQ`` share op code 2).  Returns ``[(session_id, slot), ...]``."""
+        stack, then dequeue that many sessions from the backlogged request
+        shards — round-robin on FIFO/priority tiers (front-of-queue on
+        priority tiers: ``OP_POP_FRONT`` and ``OP_DEQ`` share op code 2),
+        WEIGHTED round-robin across the class shards on k-class tiers
+        (``weighted_dequeue_plan``; the cycle cursor persists across calls,
+        so the starvation bound spans admissions, not just one batch).
+        Returns ``[(session_id, slot), ...]``."""
         if max_n <= 0:
             return []
         pool_key = self._key_for(self.pool_shard)
@@ -493,15 +678,24 @@ class RequestQueueTier:
             return []
         deqs: List[Tuple[int, int]] = []  # (shard, representative key)
         budget = self._queue_backlogs()
-        while len(deqs) < len(slots):
-            ready = [s for s, n in sorted(budget.items()) if n > 0]
-            if not ready:
-                break
-            for s in ready:
-                if len(deqs) >= len(slots):
+        if self.k_classes:
+            plan, self._class_cursor = weighted_dequeue_plan(
+                [budget.get(c, 0) for c in range(self.k_classes)],
+                self.class_weights,
+                len(slots),
+                self._class_cursor,
+            )
+            deqs = [(c, self._key_for(c)) for c in plan]
+        else:
+            while len(deqs) < len(slots):
+                ready = [s for s, n in sorted(budget.items()) if n > 0]
+                if not ready:
                     break
-                deqs.append((s, self._key_for(s)))
-                budget[s] -= 1
+                for s in ready:
+                    if len(deqs) >= len(slots):
+                        break
+                    deqs.append((s, self._key_for(s)))
+                    budget[s] -= 1
         if not deqs:
             self.submit([], release_slots=slots)  # nothing queued: put back
             return []
@@ -510,12 +704,16 @@ class RequestQueueTier:
             [k for _, k in deqs], [deq_op] * len(deqs), [0.0] * len(deqs)
         )
         admitted: List[Tuple[int, int]] = []
-        spare = list(slots)
+        # deque, not list: popping the head of a list is O(n) and made the
+        # admission drain O(n^2) in the batch size
+        spare = deque(slots)
         for i, (shard, _) in enumerate(deqs):
             if kinds[i] == R_VALUE:
-                admitted.append((int(resp[i]), spare.pop(0)))
+                admitted.append((int(resp[i]), spare.popleft()))
+                if self.k_classes:
+                    self.admit_log.append((int(resp[i]), shard))
         if spare:
-            self.submit([], release_slots=spare)
+            self.submit([], release_slots=list(spare))
         self._bind_sessions(admitted)
         self.stats["admitted"] += len(admitted)
         if self.obs.enabled and admitted:
@@ -551,11 +749,11 @@ class RequestQueueTier:
             )
         keys = [self.session_map_key(sid) for sid, _ in pairs]
         params = [
-            float(
-                expect[sid] * CAS_DOM
-                + pack_session(
+            pack_cas(
+                expect[sid],
+                pack_session(
                     self._session_prio.get(sid, 0), slot, SESSION_ADMITTED
-                )
+                ),
             )
             for sid, slot in pairs
         ]
@@ -593,11 +791,58 @@ class RequestQueueTier:
 
     def session_states(self) -> Dict[int, Dict[str, int]]:
         """Committed session-state table, decoded from one walk of the
-        session map shard: ``{sid: {"priority", "slot", "stage"}}``."""
+        session map shard: ``{sid: {"cls", "priority", "slot", "stage"}}``
+        (progress entries share the shard but are value-tagged, so the walk
+        filters them out by range)."""
         return {
             int(k) // _SESSION_KEY_STRIDE: unpack_session(v)
             for k, v in self.rt.shard_contents(self.session_shard)
+            if int(v) < PROGRESS_TAG
         }
+
+    def session_progress_table(self) -> Dict[int, int]:
+        """Committed decode progress (tokens emitted) per session, from the
+        SAME walk of the session map shard: ``{sid: tokens}``."""
+        return {
+            int(k) // _SESSION_KEY_STRIDE: int(v) - PROGRESS_TAG
+            for k, v in self.rt.shard_contents(self.session_shard)
+            if int(v) >= PROGRESS_TAG
+        }
+
+    def record_progress(self, progress: Mapping[int, int]) -> None:
+        """Commit per-session decode progress through the fabric — ONE
+        combined phase for the whole batch of ``{sid: tokens_emitted}``
+        updates (the continuous-batching loop calls this once per round).
+        Entries are plain tagged inserts at each session's progress key;
+        writes past the map shard's lanes or rejected with R_OVERFLOW are
+        carried in the session-write retry queue."""
+        items = [(int(sid), int(tok)) for sid, tok in sorted(progress.items())]
+        for sid, tok in items:
+            if not 0 <= tok < PROGRESS_MAX:
+                raise ValueError(
+                    f"progress {tok} for session {sid} outside "
+                    f"[0, {PROGRESS_MAX})"
+                )
+        writes = [(sid, PROGRESS_TAG + tok) for sid, tok in items]
+        overflow, writes = writes[self.rt.lanes:], writes[: self.rt.lanes]
+        self._state_retry.extend(overflow)
+        if not writes:
+            return
+        keys = [self.session_progress_key(sid) for sid, _ in writes]
+        _, kinds = self._phase(
+            keys, [OP_MAP_INSERT] * len(writes), [float(v) for _, v in writes]
+        )
+        for j, (sid, v) in enumerate(writes):
+            if kinds[j] == R_OVERFLOW:
+                self._state_retry.append((sid, v))
+
+    def starvation_bound(self) -> int:
+        """Max number of OTHER-class admissions between two consecutive
+        admissions of the backlogged LOWEST class: ``sum(w) - w[0]``
+        (see ``weighted_dequeue_plan``).  k-class tiers only."""
+        if not self.k_classes:
+            raise ValueError("starvation_bound needs a k_classes tier")
+        return sum(self.class_weights) - self.class_weights[0]
 
     def backlog(self) -> int:
         return sum(self._queue_backlogs().values())
@@ -631,6 +876,7 @@ class RequestQueueTier:
             return  # no spare bucket left on this shard
         self._rep_keys.clear()  # table changed: representative keys stale
         self._smap_keys.clear()
+        self._sprog_keys.clear()
         self.stats["splits"] += 1
 
     def persistence_stats(self) -> Optional[Dict[str, float]]:
@@ -693,6 +939,8 @@ class RequestQueueTier:
         lanes: int = 64,
         n_buckets: Optional[int] = None,
         priority: bool = False,
+        k_classes: int = 0,
+        class_weights: Optional[Sequence[int]] = None,
         reshard_backlog: Optional[int] = None,
         pipeline: bool = False,
         depth: Optional[int] = None,
@@ -718,8 +966,12 @@ class RequestQueueTier:
             but reported not-applied: resubmit them;
           * ``"sessions"`` — the committed session-state table decoded from
             ONE walk of the session map shard:
-            ``{sid: {"priority", "slot", "stage"}}`` — queues, slot pool,
-            and per-session state all come back from the same fabric;
+            ``{sid: {"cls", "priority", "slot", "stage"}}`` — queues, slot
+            pool, and per-session state all come back from the same fabric;
+          * ``"progress"`` — committed decode progress per session
+            (``{sid: tokens_emitted}``), from the SAME walk (progress
+            entries are value-tagged): a resumed continuous-batching loop
+            re-prefills each in-flight sequence at its committed offset;
           * ``"session_reads"`` — committed ``OP_MAP_LOOKUP`` results
             recovered FROM THE DURABLE RESPONSE SLOT: a lookup whose combine
             committed is detectable-applied, so its read value is the one it
@@ -733,6 +985,8 @@ class RequestQueueTier:
         launcher against total slot capacity (see ``main``).
         """
         req_kind = "deque" if priority else "queue"
+        if k_classes and k_classes >= 2:
+            n_queues = k_classes  # shard c == class c, as in __init__
         n_shards = n_queues + 2
         n_buckets = n_buckets or 4 * n_shards
         rt, report = ShardedDFCRuntime.recover(
@@ -743,7 +997,9 @@ class RequestQueueTier:
             lanes=lanes,
             n_threads=1,
             n_buckets=n_buckets,
-            table=cls._default_table(n_queues, n_buckets),
+            table=cls._default_table(
+                n_queues, n_buckets, k_classes=bool(k_classes and k_classes >= 2)
+            ),
             pipeline=pipeline,
             depth=depth,
             split_lanes=split_lanes,
@@ -753,7 +1009,8 @@ class RequestQueueTier:
             n_queues=n_queues, slots=0, capacity=capacity, lanes=lanes,
             durable=True, fs=fs, reshard_backlog=reshard_backlog,
             n_buckets=n_buckets, pipeline=pipeline, depth=depth,
-            priority=priority, split_lanes=rt.split_lanes, obs=obs,
+            priority=priority, k_classes=k_classes,
+            class_weights=class_weights, split_lanes=rt.split_lanes, obs=obs,
             _seed_slots=False, _rt=rt,
         )
         tier.n_queues = sum(
@@ -768,8 +1025,9 @@ class RequestQueueTier:
         # ONE walk of the session shard restores the per-session serving
         # state AND reseeds the host mirrors the admission CAS consults
         sessions = tier.session_states()
+        progress = tier.session_progress_table()
         for sid, st in sessions.items():
-            tier._session_prio[sid] = st["priority"]
+            tier._session_prio[sid] = st["cls"]
             if st["slot"] != SESSION_SLOT_NONE:
                 tier._session_slot[sid] = st["slot"]
         in_flight: List[int] = []
@@ -811,6 +1069,7 @@ class RequestQueueTier:
                     and rt.kinds[shard] == "map"
                     and op == OP_MAP_LOOKUP
                     and v.kind == R_VALUE
+                    and int(v.resp) < PROGRESS_TAG  # progress reads untagged here
                 ):
                     sid = int(ann["keys"][i]) // _SESSION_KEY_STRIDE
                     session_reads[sid] = unpack_session(int(v.resp))
@@ -822,6 +1081,7 @@ class RequestQueueTier:
             "in_flight": sorted(set(in_flight)),
             "lost_arrivals": sorted(set(lost_arrivals)),
             "sessions": sessions,
+            "progress": progress,
             "session_reads": session_reads,
         }
         return tier, info
@@ -848,6 +1108,422 @@ def _log_served(state_dir: Optional[Path], sid: int) -> None:
     with _served_log_path(state_dir).open("a") as f:
         f.write(f"{sid}\n")
         f.flush()
+
+
+def _tokens_log_path(state_dir: Path) -> Path:
+    return state_dir / "tokens.log"
+
+
+def _read_token_entries(
+    state_dir: Optional[Path],
+) -> Dict[int, List[Tuple[int, int]]]:
+    """Raw consumer token log: ``{sid: [(idx, token), ...]}`` in file order
+    (the exactly-once audit reads this unfiltered)."""
+    if state_dir is None:
+        return {}
+    p = _tokens_log_path(state_dir)
+    if not p.exists():
+        return {}
+    out: Dict[int, List[Tuple[int, int]]] = {}
+    for line in p.read_text().splitlines():
+        if not line.strip():
+            continue
+        sid, idx, tok = (int(x) for x in line.split())
+        out.setdefault(sid, []).append((idx, tok))
+    return out
+
+
+def _committed_tokens(entries: Sequence[Tuple[int, int]]) -> List[int]:
+    """Contiguous committed token prefix of one session's raw log entries
+    (first write wins per index) — what a resumed decode continues from."""
+    by_idx: Dict[int, int] = {}
+    for idx, tok in entries:
+        by_idx.setdefault(idx, tok)
+    toks: List[int] = []
+    while len(toks) in by_idx:
+        toks.append(by_idx[len(toks)])
+    return toks
+
+
+def _log_tokens(
+    state_dir: Optional[Path], sid: int, start: int, toks: Sequence[int]
+) -> None:
+    """Consumer-side durable record of emitted decode tokens (same
+    append-only contract as ``served.log``: outside the fault-injected
+    SimFS, flushed per batch)."""
+    if state_dir is None or not toks:
+        return
+    with _tokens_log_path(state_dir).open("a") as f:
+        for j, t in enumerate(toks):
+            f.write(f"{sid} {start + j} {int(t)}\n")
+        f.flush()
+
+
+def verify_exactly_once(
+    sids: Sequence[int],
+    gen: int,
+    served: Sequence[int],
+    token_entries: Mapping[int, Sequence[Tuple[int, int]]],
+) -> None:
+    """Audit the consumer logs after a (possibly crashed + resumed) run:
+    every session served exactly once, and every token index ``0..gen-1``
+    of every session emitted exactly once — no sequence lost, none
+    double-decoded."""
+    expect = sorted(int(s) for s in sids)
+    got = sorted(int(s) for s in served)
+    assert got == expect and len(served) == len(set(served)), (
+        f"exactly-once violated: served={got} expected={expect}"
+    )
+    for s in expect:
+        idxs = sorted(i for i, _ in token_entries.get(s, []))
+        assert idxs == list(range(gen)), (
+            f"token exactly-once violated for session {s}: "
+            f"indices {idxs} != 0..{gen - 1}"
+        )
+
+
+class ContinuousServer:
+    """Continuous-batching decode loop where EVERY scheduling decision is a
+    fabric op: arrivals enqueue into the k priority-class shards
+    (``submit``), admission pops ride the weighted multi-shard dequeue
+    (``admit``), decode-slot allocation rides the slot-pool stack shard,
+    per-session stage/slot/progress lives in the session map shard
+    (``record_progress`` commits each round's token counts in one combined
+    phase), and completion retirement is a fabric op (``mark_served``).
+
+    The loop interleaves sessions: each round every active slot decodes one
+    QUANTUM of tokens (``decode`` callable — the launcher wires the jitted
+    prefill/quantum steps in, tests and benchmarks use the deterministic
+    simulated decoder), emits them to the consumer token log, and commits
+    progress; finished sessions retire and their slots return through the
+    fabric, so admissions join mid-stream as capacity frees.
+
+    Crash-exact resume: the consumer logs (``served.log``/``tokens.log``)
+    live OUTSIDE the fault-injected SimFS; a resumed server rebuilds
+    in-flight sessions from the recovery walk (announcement-level in-flight
+    dequeues plus map entries stuck at ADMITTED), deduplicates against the
+    served log, re-prefills each sequence at its committed token offset,
+    and emits exactly the remaining tokens — ``verify_exactly_once`` audits
+    the combined logs.
+    """
+
+    def __init__(
+        self,
+        tier: RequestQueueTier,
+        *,
+        sids: Sequence[int],
+        batch: int,
+        gen: int,
+        quantum: int = 0,
+        arrival: int = 0,
+        class_of: Optional[Callable[[int], int]] = None,
+        state_dir: Optional[Path] = None,
+        decode: Optional[Callable[..., List[int]]] = None,
+        resume_info: Optional[Dict[str, Any]] = None,
+        served_before: Sequence[int] = (),
+        token_log: Optional[Mapping[int, Sequence[int]]] = None,
+    ):
+        self.tier = tier
+        self.sids = [int(s) for s in sids]
+        self.batch = int(batch)
+        self.gen = int(gen)
+        self.quantum = int(quantum) or self.gen
+        self.arrival = int(arrival) or self.batch
+        k = tier.k_classes
+        self.class_of = class_of or (
+            (lambda sid: sid % k) if k else (lambda sid: 0)
+        )
+        self.state_dir = state_dir
+        self.decode = decode or self._sim_decode
+        self.served: List[int] = [int(s) for s in served_before]
+        # committed token prefix per session (mirrors the consumer log)
+        self.token_log: Dict[int, List[int]] = {
+            int(s): list(t) for s, t in (token_log or {}).items()
+        }
+        # sid -> {"slot", "done", "state"}; "state" is the decoder's
+        # per-session scratch (the model path keeps its KV cache there)
+        self.active: Dict[int, Dict[str, Any]] = {}
+        self.rounds = 0
+        self.decoded = 0
+        if resume_info is not None:
+            self.pending = self._reconcile(resume_info)
+        else:
+            self.pending = list(self.sids)
+
+    # deterministic simulated decode: lets the tier-only path (and the
+    # crash campaign) check token-level exactly-once without a model
+    @staticmethod
+    def sim_token(sid: int, idx: int) -> int:
+        return (int(sid) * 1009 + int(idx) * 31) % 4093
+
+    def _sim_decode(self, sid, start, n, state, history):
+        return [self.sim_token(sid, start + j) for j in range(n)]
+
+    def _reconcile(self, info: Dict[str, Any]) -> List[int]:
+        """Rebuild the serving state from one recovery walk: in-flight
+        sequences resume mid-decode (holding their bound slots), queued
+        sessions stay queued, everything else resubmits; the slot pool is
+        restored to exactly ``batch`` minus free minus held."""
+        served_set = set(self.served)
+        sessions = info["sessions"]
+        universe = set(self.sids)
+        # in-flight = dequeues that committed in the announcement slots,
+        # PLUS sessions whose map entry is stuck at ADMITTED (admitted many
+        # rounds ago: their dequeue announcement was long overwritten, but
+        # the session map keeps the stage durable) — deduplicated against
+        # the consumer's served log, which wins every conflict.  A map entry
+        # at SERVED that never reached the served log resumes too: its
+        # tokens are already consumer-logged (they commit first), so it
+        # retires on the next round without re-decoding a single token.
+        in_flight = sorted(
+            (set(info["in_flight"])
+             | {s for s, st in sessions.items()
+                if st["stage"] in (SESSION_ADMITTED, SESSION_SERVED)})
+            & universe - served_set
+        )
+        queued = set(info["queued"])
+        pending = [
+            s for s in self.sids
+            if s not in served_set and s not in queued and s not in in_flight
+        ]
+        pool = set(info["pool"])
+        complement = [i for i in range(self.batch) if i not in pool]
+        assert len(complement) >= len(in_flight), (complement, in_flight)
+        taken: set = set()
+        for sid in in_flight:
+            st = sessions.get(sid)
+            slot = st["slot"] if st is not None else SESSION_SLOT_NONE
+            if (
+                slot == SESSION_SLOT_NONE or slot >= self.batch
+                or slot in pool or slot in taken
+            ):
+                slot = next(i for i in complement if i not in taken)
+            taken.add(slot)
+            done = min(len(self.token_log.get(sid, ())), self.gen)
+            self.active[sid] = {"slot": slot, "done": done, "state": {}}
+        # complement slots no in-flight session holds go back to the pool
+        leftovers = [i for i in complement if i not in taken]
+        if leftovers:
+            self.tier.submit([], release_slots=leftovers)
+        return pending
+
+    def _outstanding(self) -> List[int]:
+        done = set(self.served)
+        return [s for s in self.sids if s not in done]
+
+    def run(self, max_rounds: Optional[int] = None) -> Dict[str, Any]:
+        tier = self.tier
+        waiting: List[int] = []
+        next_idx = 0
+        limit = max_rounds or (8 * max(len(self.sids), 1) + 64)
+        for _ in range(limit):
+            if not self._outstanding():
+                break
+            self.rounds += 1
+            fresh = self.pending[next_idx : next_idx + self.arrival]
+            next_idx += len(fresh)
+            subs = waiting + fresh
+            if subs:
+                kw: Dict[str, Any] = {}
+                if tier.k_classes:
+                    kw["classes"] = [self.class_of(s) for s in subs]
+                elif tier.priority:
+                    kw["priorities"] = [self.class_of(s) for s in subs]
+                waiting = tier.submit(subs, **kw)
+            free = self.batch - len(self.active)
+            for sid, slot in tier.admit(free):
+                self.active[sid] = {"slot": slot, "done": 0, "state": {}}
+            progress: Dict[int, int] = {}
+            finished: List[int] = []
+            for sid, st in sorted(self.active.items()):
+                n_new = min(self.quantum, self.gen - st["done"])
+                history = self.token_log.setdefault(sid, [])
+                toks = (
+                    self.decode(sid, st["done"], n_new, st["state"], history)
+                    if n_new > 0 else []
+                )
+                if toks:
+                    # consumer durability FIRST, fabric progress after: a
+                    # crash between the two resumes from the (longer)
+                    # consumer log and never re-emits a logged token
+                    _log_tokens(self.state_dir, sid, st["done"], toks)
+                    history.extend(int(t) for t in toks)
+                    st["done"] += len(toks)
+                    self.decoded += len(toks)
+                progress[sid] = st["done"]
+                if st["done"] >= self.gen:
+                    finished.append(sid)
+            if progress:
+                tier.record_progress(progress)
+            for sid in finished:
+                _log_served(self.state_dir, sid)
+                self.served.append(sid)
+                tier.mark_served(sid)
+            if finished:
+                tier.submit(
+                    [],
+                    release_slots=[
+                        self.active.pop(sid)["slot"] for sid in finished
+                    ],
+                )
+            if (
+                not self.active and not waiting
+                and next_idx >= len(self.pending) and tier.backlog() == 0
+            ):
+                break  # nothing left anywhere (lost-session guard)
+        return {
+            "completed": len(set(self.served) & set(self.sids)),
+            "rounds": self.rounds,
+            "decoded_tokens": self.decoded,
+            "served": list(self.served),
+        }
+
+
+def make_model_decode(
+    cfg, params, prefill_step, serve_step, quantum_step,
+    prompt_len: int, quantum: int,
+):
+    """Build the per-session model decoder the continuous loop drives.
+
+    Emits the next ``n`` greedy tokens of session ``sid``: fresh sessions
+    prefill the (sid-seeded) prompt; resumed sessions re-prefill prompt +
+    committed history — argmax decode is deterministic, so the
+    continuation is crash-exact. The KV cache lives in ``state`` between
+    rounds; full quanta ride the scanned ``quantum_step`` (one dispatch),
+    remainders single-step."""
+    import jax.numpy as jnp
+
+    def decode(sid, start, n, state, history):
+        if n <= 0:
+            return []
+        out: List[int] = []
+        if "cache" not in state:
+            prompt = np.random.default_rng(sid).integers(
+                0, cfg.vocab, prompt_len
+            )
+            row = np.concatenate(
+                [prompt, np.asarray(list(history[:start]), np.int64)]
+            )
+            last, cache = prefill_step(
+                params, {"tokens": jnp.asarray(row[None, :], jnp.int32)}
+            )
+            tok = jnp.argmax(last[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            state["cache"], state["tok"] = cache, tok
+            out.append(int(tok[0, 0]))
+        while len(out) < n:
+            if n - len(out) >= quantum:
+                o, state["cache"] = quantum_step(
+                    params, state["cache"], state["tok"]
+                )
+                state["tok"] = o["next_token"]
+                out.extend(int(t) for t in np.asarray(o["tokens"])[0])
+            else:
+                o, state["cache"] = serve_step(
+                    params, state["cache"], {"tokens": state["tok"]}
+                )
+                state["tok"] = o["next_token"][:, None].astype(jnp.int32)
+                out.append(int(state["tok"][0, 0]))
+        return out
+
+    return decode
+
+
+def _serve_continuous(
+    args, cfg, params, prefill_step, serve_step, fs, obs,
+    tier_kw, state_dir, served_before, n_sessions, arrival,
+):
+    """Launcher branch for ``--k-classes``: continuous-batching decode with
+    the jitted quantum step, crash/resume via the consumer logs plus one
+    recovery walk."""
+    quantum = args.quantum or min(8, args.gen)
+    decode = None
+    if not args.tier_only:
+        import jax
+
+        from repro.launch.steps import make_quantum_step
+
+        quantum_step = jax.jit(
+            make_quantum_step(cfg, window=args.window, quantum=quantum)
+        )
+        decode = make_model_decode(
+            cfg, params, prefill_step, serve_step, quantum_step,
+            args.prompt_len, quantum,
+        )
+
+    sids = list(range(1, n_sessions + 1))
+    t0 = time.perf_counter()
+    try:
+        if args.resume:
+            tier, info = RequestQueueTier.recover(fs, **tier_kw)
+        else:
+            tier = RequestQueueTier(
+                slots=args.batch, durable=args.durable, fs=fs, **tier_kw
+            )
+            info = None
+        entries = _read_token_entries(state_dir)
+        srv = ContinuousServer(
+            tier,
+            sids=sids,
+            batch=args.batch,
+            gen=args.gen,
+            quantum=quantum,
+            arrival=arrival,
+            class_of=lambda s: s % args.k_classes,
+            state_dir=state_dir,
+            decode=decode,
+            resume_info=info,
+            served_before=served_before,
+            token_log={s: _committed_tokens(e) for s, e in entries.items()},
+        )
+        if info is not None:
+            print(
+                f"resume: served={len(set(served_before))} "
+                f"in_flight={sorted(srv.active)} "
+                f"lost_arrivals={info['lost_arrivals']} "
+                f"resubmitting={len(srv.pending)} "
+                f"progress={ {s: st['done'] for s, st in sorted(srv.active.items())} }"
+            )
+        res = srv.run()
+    except CrashNow as e:
+        print(f"CRASHED: {e}")
+        print(
+            f"tier state is durable under {state_dir}; resume with "
+            f"--resume --state-dir {state_dir}"
+        )
+        return
+    dt = time.perf_counter() - t0
+
+    print(
+        f"{args.arch}: continuous batching served {res['completed']}/"
+        f"{n_sessions} sessions in {res['rounds']} rounds, "
+        f"{res['decoded_tokens']} tok (quantum={quantum}) in {dt*1e3:.0f} ms"
+        + ("" if args.tier_only or dt == 0
+           else f" ({res['decoded_tokens']/dt:.0f} tok/s)")
+    )
+    print(
+        f"k-class tier: k={tier.k_classes} weights={tier.class_weights} "
+        f"starvation_bound={tier.starvation_bound()} "
+        f"arrived={tier.stats['arrived']} admitted={tier.stats['admitted']} "
+        f"rejected={tier.stats['rejected']} backlog={tier.backlog()}"
+    )
+    p = tier.persistence_stats()
+    if p:
+        print(f"pwb/op: {p['pwb_per_op']:.2f}  pfence/op: {p['pfence_per_op']:.2f}")
+    lat = tier.latency_stats()
+    if lat:
+        for name, s in lat.items():
+            print(
+                f"{name}: p50={s['p50']:.3f} p99={s['p99']:.3f} "
+                f"mean={s['mean']:.3f} n={int(s['count'])}"
+            )
+    if obs is not None:
+        obs.flush()
+    if args.expect_exactly_once:
+        verify_exactly_once(
+            sids, args.gen, _read_served(state_dir),
+            _read_token_entries(state_dir),
+        )
+        print("exactly-once: OK (sessions + token indices)")
 
 
 def main():
@@ -882,6 +1558,17 @@ def main():
     ap.add_argument("--high-every", type=int, default=0,
                     help="with --priority: every Nth session arrives "
                          "high-priority (0 = none)")
+    ap.add_argument("--k-classes", type=int, default=0,
+                    help="continuous-batching mode with k priority classes "
+                         "(2..4): per-class queue shards, weighted "
+                         "round-robin admission, quantum decode with "
+                         "crash-exact resume")
+    ap.add_argument("--class-weights", default="",
+                    help="comma-separated dequeue credits per class "
+                         "(default: 1<<c, i.e. 1,2,4,...)")
+    ap.add_argument("--quantum", type=int, default=0,
+                    help="decode tokens per session per scheduling round "
+                         "(default: min(8, --gen))")
     ap.add_argument("--reshard-backlog", type=int, default=0,
                     help="split a request shard when its backlog exceeds N")
     ap.add_argument("--bulk-arrivals", action="store_true",
@@ -951,6 +1638,7 @@ def main():
         # volatile tiers trace in memory (metrics + ring only)
         obs = FabricObserver(root=fs.root if fs is not None else None)
 
+    k = args.k_classes if args.k_classes >= 2 else 0
     tier_kw = dict(
         n_queues=args.queues,
         capacity=4096,
@@ -960,9 +1648,22 @@ def main():
         depth=depth,
         priority=args.priority,
         split_lanes=args.split_lanes,
+        k_classes=k,
+        class_weights=(
+            [int(x) for x in args.class_weights.split(",")]
+            if k and args.class_weights else None
+        ),
         obs=obs,
     )
     served_before = _read_served(state_dir) if state_dir else []
+
+    if k:
+        _serve_continuous(
+            args, cfg, params, prefill_step, serve_step, fs, obs,
+            tier_kw, state_dir, served_before, n_sessions, arrival,
+        )
+        return
+
     in_flight: List[int] = []
 
     def serve_batch(sids: List[int]) -> None:

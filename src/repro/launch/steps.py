@@ -3,6 +3,7 @@
   train_step(params, opt_state, batch)        -> (params, opt_state, metrics)
   prefill_step(params, batch)                 -> (last_logits, cache)
   serve_step(params, cache, batch)            -> (logits, cache)
+  quantum_step(params, cache, tok)            -> (tokens, cache)
 """
 
 from __future__ import annotations
@@ -42,3 +43,37 @@ def make_serve_step(cfg: ModelConfig, window: int = 0):
         return {"logits": logits, "next_token": next_token}, new_cache
 
     return serve_step
+
+
+def make_quantum_step(cfg: ModelConfig, window: int = 0, quantum: int = 8):
+    """Greedy-decode ``quantum`` tokens in one jitted dispatch.
+
+    Scans ``decode_step`` so a continuous-batching server amortises the
+    host<->device round-trip over a whole decode quantum instead of paying
+    it per token. Carry is ``(cache, last_token [B,1] i32)``; each scan
+    step feeds the previous argmax back in and emits the next one.
+
+        quantum_step(params, cache, tok)
+            -> ({"tokens": [B, quantum] i32, "next_token": [B, 1] i32},
+                cache)
+
+    ``tokens[:, 0]`` is the token produced FROM ``tok`` — the caller is
+    assumed to have already emitted ``tok`` itself (e.g. the prefill
+    argmax).
+    """
+
+    def quantum_step(params, cache, tok):
+        def body(carry, _):
+            cache, prev = carry
+            logits, cache = decode_step(
+                params, cfg, cache, {"tokens": prev}, window=window
+            )
+            nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            return (cache, nxt), nxt[:, 0]
+
+        (cache, tok), toks = jax.lax.scan(
+            body, (cache, tok), None, length=quantum
+        )
+        return {"tokens": jnp.moveaxis(toks, 0, 1), "next_token": tok}, cache
+
+    return quantum_step

@@ -260,6 +260,68 @@ def zipf_keys(rng, n: int, universe: int, skew: float) -> np.ndarray:
     return rng.choice(universe, size=n, p=p)
 
 
+def weighted_cycle(weights) -> List[int]:
+    """The deterministic weighted-round-robin cycle over priority classes.
+
+    Class ``c`` (higher = more urgent) appears ``weights[c]`` times; classes
+    are laid out highest-first with each class's slots CONTIGUOUS, so within
+    one cycle the urgent classes drain their whole credit burst before the
+    next class starts, and the lowest class's credits sit at the cycle's
+    tail.  The contiguity is what makes the starvation bound of
+    :func:`weighted_dequeue_plan` tight: between two credits of class ``c``
+    there are exactly ``sum(weights) - weights[c]`` foreign credits.
+    """
+    ws = [int(w) for w in weights]
+    if not ws or any(w < 1 for w in ws):
+        raise ValueError(f"class weights must all be >= 1, got {list(weights)}")
+    cyc: List[int] = []
+    for c in range(len(ws) - 1, -1, -1):
+        cyc.extend([c] * ws[c])
+    return cyc
+
+
+def weighted_dequeue_plan(
+    backlogs, weights, n: int, cursor: int = 0
+) -> Tuple[List[int], int]:
+    """Plan ``n`` dequeues across per-class shards by weighted round-robin.
+
+    ``backlogs[c]`` is class ``c``'s committed shard backlog, ``weights[c]``
+    its per-cycle dequeue credit, ``cursor`` the persistent position in the
+    weighted cycle (thread it through successive calls).  Returns
+    ``(plan, new_cursor)`` where ``plan`` lists the class shard to dequeue
+    for each of up to ``n`` slots.  The walk is WORK-CONSERVING: a credit
+    landing on an empty class is skipped (the slot goes to the next
+    backlogged class in cycle order), so the plan emits
+    ``min(n, sum(backlogs))`` dequeues.
+
+    Starvation bound (the serving tier's acceptance gate): a class that
+    stays backlogged is visited at least ``weights[c]`` times per full
+    cycle, and every OTHER emitted dequeue consumes one of the cycle's
+    ``W - weights[c]`` foreign credits (``W = sum(weights)``; skipped
+    credits emit nothing) — so between two consecutive dequeues of a
+    backlogged class ``c`` at most ``W - weights[c]`` other dequeues are
+    emitted, across plan-call boundaries, for ANY backlog mix.  For the
+    lowest class that is the bound ``W - weights[0]``.
+    """
+    left = [int(b) for b in backlogs]
+    cyc = weighted_cycle(weights)
+    if len(left) != len(set(cyc)):
+        raise ValueError(
+            f"backlogs ({len(left)} classes) must parallel weights "
+            f"({len(set(cyc))} classes)"
+        )
+    W = len(cyc)
+    cursor = int(cursor) % W
+    plan: List[int] = []
+    while len(plan) < n and any(v > 0 for v in left):
+        c = cyc[cursor]
+        cursor = (cursor + 1) % W
+        if left[c] > 0:
+            plan.append(c)
+            left[c] -= 1
+    return plan, cursor
+
+
 @functools.partial(jax.jit, static_argnames=("n_shards", "lanes"))
 def route_batch(keys, ops, params, *, n_shards: int, lanes: int, table=None):
     """Bucket a flat announced batch into per-shard op lists.

@@ -1,0 +1,324 @@
+"""k priority classes at the serving tier (ISSUE 10).
+
+``RequestQueueTier(k_classes=k)`` generalizes the binary ``priority=True``
+path: each class gets its own FIFO request shard (shard c == class c) and
+admission walks the shards with a WEIGHTED round-robin
+(``weighted_dequeue_plan``) whose cycle cursor persists across admit
+calls.  The plan is work-conserving (empty classes forfeit their credits)
+and gives the lowest class a provable starvation bound: while backlogged
+it waits at most ``sum(w) - w[0]`` other admissions between services.
+
+Also pins the ISSUE-10 satellites that live at this layer: the
+``pack_session``/``unpack_session`` range validation (silent modulo-wrap
+corruption fix), the f32-exact CAS packing domain, and the large-batch
+admission drain (the O(n^2) ``spare.pop(0)`` fix).
+"""
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint.dfc_checkpoint import FaultInjector, SimFS
+from repro.core.jax_dfc import CAS_DOM, pack_cas, unpack_cas
+from repro.launch.serve import (
+    PROGRESS_MAX,
+    SESSION_ADMITTED,
+    SESSION_CLASS_DOM,
+    SESSION_QUEUED,
+    SESSION_SLOT_DOM,
+    SESSION_SLOT_NONE,
+    SESSION_STAGE_DOM,
+    RequestQueueTier,
+    pack_session,
+    unpack_session,
+)
+from repro.runtime.dfc_shard import weighted_cycle, weighted_dequeue_plan
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------- packed session encoding
+
+def test_pack_session_roundtrip_full_domain():
+    """Every (cls, slot, stage) packs to a distinct f32-exact value below
+    CAS_DOM and unpacks back exactly — the whole widened domain."""
+    seen = set()
+    for cls in range(SESSION_CLASS_DOM):
+        for slot in range(SESSION_SLOT_DOM):
+            for stage in range(SESSION_STAGE_DOM):
+                p = pack_session(cls, slot, stage)
+                assert 0 <= p < CAS_DOM
+                assert float(np.float32(p)) == p
+                assert p not in seen
+                seen.add(p)
+                u = unpack_session(p)
+                assert (u["cls"], u["slot"], u["stage"]) == (cls, slot, stage)
+                assert u["priority"] == (1 if cls > 0 else 0)
+
+
+def test_pack_session_rejects_out_of_range():
+    """The satellite fix: out-of-range fields raise instead of silently
+    wrapping into another session's bits."""
+    bad = [
+        (-1, 0, 1),
+        (SESSION_CLASS_DOM, 0, 1),
+        (0, -1, 1),
+        (0, SESSION_SLOT_DOM, 1),
+        (0, 0, -1),
+        (0, 0, SESSION_STAGE_DOM),
+        (SESSION_CLASS_DOM + 7, SESSION_SLOT_DOM + 9, SESSION_STAGE_DOM + 3),
+    ]
+    for cls, slot, stage in bad:
+        with pytest.raises(ValueError):
+            pack_session(cls, slot, stage)
+
+
+def test_unpack_session_rejects_out_of_domain():
+    with pytest.raises(ValueError):
+        unpack_session(-1)
+    with pytest.raises(ValueError):
+        unpack_session(CAS_DOM)
+    with pytest.raises(ValueError):
+        unpack_session(CAS_DOM * CAS_DOM)
+
+
+def test_pack_cas_domain_and_roundtrip():
+    assert unpack_cas(pack_cas(0, 0)) == (0, 0)
+    assert unpack_cas(pack_cas(CAS_DOM - 1, CAS_DOM - 1)) == (
+        CAS_DOM - 1, CAS_DOM - 1,
+    )
+    p = pack_cas(17, 4000)
+    assert float(np.float32(p)) == p
+    assert unpack_cas(p) == (17, 4000)
+    for expected, new in [(-1, 0), (0, -1), (CAS_DOM, 0), (0, CAS_DOM)]:
+        with pytest.raises(ValueError):
+            pack_cas(expected, new)
+    with pytest.raises(ValueError):
+        unpack_cas(CAS_DOM * CAS_DOM)
+
+
+# ------------------------------------------------- weighted dequeue plan
+
+def test_weighted_cycle_shape():
+    """Highest class first, ``weights[c]`` contiguous credits each."""
+    assert weighted_cycle([1, 2, 4]) == [2, 2, 2, 2, 1, 1, 0]
+    assert weighted_cycle([1, 1]) == [1, 0]
+    assert weighted_cycle([3]) == [0, 0, 0]
+    with pytest.raises(ValueError):
+        weighted_cycle([])
+    with pytest.raises(ValueError):
+        weighted_cycle([1, 0])
+
+
+def test_weighted_plan_full_backlog_matches_cycle():
+    plan, cur = weighted_dequeue_plan([8, 8, 8], [1, 2, 4], 7, 0)
+    assert plan == [2, 2, 2, 2, 1, 1, 0]
+    assert cur == 0  # one full cycle consumed
+
+
+def test_weighted_plan_is_work_conserving():
+    """Empty classes forfeit their credits — slots never idle while ANY
+    class is backlogged."""
+    plan, _ = weighted_dequeue_plan([5, 0, 0], [1, 2, 4], 4, 0)
+    assert plan == [0, 0, 0, 0]
+    plan, _ = weighted_dequeue_plan([0, 3, 2], [1, 2, 4], 5, 0)
+    assert plan == [2, 2, 1, 1, 1]
+
+
+def test_weighted_plan_cursor_persists_across_calls():
+    """Splitting one cycle across admit calls changes nothing: the cursor
+    carries the position, so the bound spans call boundaries."""
+    plan1, cur = weighted_dequeue_plan([8, 8, 8], [1, 2, 4], 3, 0)
+    plan2, cur = weighted_dequeue_plan([8, 8, 8], [1, 2, 4], 4, cur)
+    assert plan1 + plan2 == [2, 2, 2, 2, 1, 1, 0]
+    assert cur == 0
+
+
+def test_weighted_plan_starvation_bound_property():
+    """Under continuous all-class backlog, any two consecutive services of
+    class c are separated by at most ``sum(w) - w[c]`` other services —
+    across randomized plan sizes."""
+    rng = np.random.default_rng(0)
+    weights = [1, 2, 4]
+    w_sum = sum(weights)
+    cursor = 0
+    stream = []
+    for _ in range(100):
+        n = int(rng.integers(1, 8))
+        plan, cursor = weighted_dequeue_plan([100, 100, 100], weights, n, cursor)
+        assert len(plan) == n  # work-conserving under full backlog
+        stream.extend(plan)
+    for c, w in enumerate(weights):
+        idx = [i for i, x in enumerate(stream) if x == c]
+        assert idx, (c, stream[:20])
+        gaps = [b - a - 1 for a, b in zip(idx, idx[1:])]
+        assert max(gaps) <= w_sum - w, (c, max(gaps))
+
+
+# ------------------------------------------------- k-class tier behavior
+
+def _k_tier(k=3, weights=None, slots=8, fs=None, lanes=32):
+    return RequestQueueTier(
+        n_queues=k, slots=slots, capacity=512, lanes=lanes, durable=True,
+        fs=fs, k_classes=k, class_weights=weights,
+    )
+
+
+def test_k_tier_validation():
+    with pytest.raises(ValueError):  # generalizes priority=True: pick one
+        _k_tier().__class__(
+            n_queues=2, slots=2, capacity=256, lanes=8,
+            k_classes=2, priority=True,
+        )
+    with pytest.raises(ValueError):  # packed class field is 2 bits
+        RequestQueueTier(
+            n_queues=5, slots=2, capacity=256, lanes=8,
+            k_classes=SESSION_CLASS_DOM + 1,
+        )
+    with pytest.raises(ValueError):  # weights must parallel classes
+        RequestQueueTier(
+            n_queues=2, slots=2, capacity=256, lanes=8, k_classes=2,
+            class_weights=[1, 2, 3],
+        )
+    with pytest.raises(ValueError):  # weights need the k-class mode
+        RequestQueueTier(
+            n_queues=2, slots=2, capacity=256, lanes=8, class_weights=[1, 2],
+        )
+    tier = RequestQueueTier(n_queues=1, slots=2, capacity=256, lanes=8)
+    with pytest.raises(ValueError):  # classes need the k-class mode
+        tier.submit([1], classes=[0])
+    ktier = _k_tier()
+    with pytest.raises(ValueError):  # class label outside [0, k)
+        ktier.submit([1], classes=[3 + 1])
+    with pytest.raises(ValueError):
+        ktier.submit([1], classes=[-1])
+
+
+def test_k_tier_weighted_admission_order():
+    """Full backlog in every class: one admit follows the weighted cycle
+    (high classes first, per their credits), FIFO within each class."""
+    tier = _k_tier()
+    by_class = {c: [100 * c + i for i in range(1, 8)] for c in range(3)}
+    for c, sids in by_class.items():
+        tier.submit(sids, classes=[c] * len(sids))
+    admitted = tier.admit(7)
+    assert [c for _, c in tier.admit_log] == [2, 2, 2, 2, 1, 1, 0]
+    assert [sid for sid, _ in admitted] == [201, 202, 203, 204, 101, 102, 1]
+
+
+def test_k_tier_lowest_class_starvation_bound():
+    """Continuous backlog in every class, small admit batches: class 0 is
+    never gapped past ``starvation_bound()`` admissions, and the observed
+    shares track the weights."""
+    tier = _k_tier(slots=2)
+    bound = tier.starvation_bound()
+    assert bound == (1 + 2 + 4) - 1
+    next_sid = {c: 1000 * (c + 1) for c in range(3)}
+    for _ in range(30):
+        subs, clss = [], []
+        for c in range(3):  # one fresh arrival per class keeps all backlogged
+            subs.append(next_sid[c])
+            next_sid[c] += 1
+            clss.append(c)
+        tier.submit(subs, classes=clss)
+        admitted = tier.admit(2)
+        tier.submit([], release_slots=[slot for _, slot in admitted])
+    stream = [c for _, c in tier.admit_log]
+    assert len(stream) >= 40
+    counts = {c: stream.count(c) for c in range(3)}
+    assert counts[2] > counts[1] > counts[0] > 0
+    idx0 = [i for i, c in enumerate(stream) if c == 0]
+    gaps = [b - a - 1 for a, b in zip(idx0, idx0[1:])]
+    assert idx0[0] <= bound, stream[: bound + 2]
+    assert max(gaps, default=0) <= bound, (gaps, stream)
+
+
+def test_k_tier_progress_entries_are_separate_from_state():
+    """Progress entries share the session map shard but are value-tagged:
+    they never shadow the packed stage, and both survive one walk."""
+    tier = _k_tier()
+    tier.submit([1, 2, 3], classes=[0, 1, 2])
+    admitted = tier.admit(3)
+    assert sorted(sid for sid, _ in admitted) == [1, 2, 3]
+    tier.record_progress({1: 5, 2: 0, 3: 4095})
+    assert tier.session_progress_table() == {1: 5, 2: 0, 3: 4095}
+    states = tier.session_states()
+    for sid in (1, 2, 3):
+        assert states[sid]["stage"] == SESSION_ADMITTED
+    assert {s: st["cls"] for s, st in states.items()} == {1: 0, 2: 1, 3: 2}
+    with pytest.raises(ValueError):
+        tier.record_progress({1: -1})
+    with pytest.raises(ValueError):
+        tier.record_progress({1: PROGRESS_MAX})
+
+
+def test_k_tier_classes_survive_crash_recover():
+    """Class membership, FIFO order per class, and decode progress are all
+    fabric state: a recovered tier admits in the same weighted order."""
+    fs = SimFS(
+        Path(tempfile.mkdtemp(prefix="dfc_kcls_")), FaultInjector()
+    )
+    tier = _k_tier(slots=4, fs=fs)
+    tier.submit([1, 2, 3, 4, 5, 6], classes=[0, 1, 2, 0, 1, 2])
+    tier.record_progress({9: 7})
+    tier2, info = RequestQueueTier.recover(
+        fs, capacity=512, lanes=32, k_classes=3
+    )
+    assert {s: st["cls"] for s, st in info["sessions"].items()} == {
+        1: 0, 2: 1, 3: 2, 4: 0, 5: 1, 6: 2,
+    }
+    assert all(
+        st["stage"] == SESSION_QUEUED and st["slot"] == SESSION_SLOT_NONE
+        for st in info["sessions"].values()
+    )
+    assert sorted(info["queued"]) == [1, 2, 3, 4, 5, 6]
+    assert info["progress"] == {9: 7}
+    order = []
+    for _ in range(8):
+        admitted = tier2.admit(4)
+        order += [sid for sid, _ in admitted]
+        tier2.submit([], release_slots=[slot for _, slot in admitted])
+        if tier2.backlog() == 0:
+            break
+    # weights [1,2,4], backlog 2/2/2: cycle gives c2,c2 then (c2 empty)
+    # c1,c1, wrap to c0,c0 — weighted order survives the restart
+    assert order == [3, 6, 2, 5, 1, 4]
+
+
+# ------------------------------------------------- large-batch admission
+
+def test_large_batch_admission_drain_exact_slot_accounting():
+    """Satellite fix for the O(n^2) ``spare.pop(0)`` drain: a full-width
+    admit (120 slots, the packed field's whole usable range) over a
+    96-session backlog admits every session once and returns EVERY spare
+    slot to the pool — held + free slots partition the range."""
+    n_slots = 120  # slot ids must fit the packed 7-bit field (127 = NONE)
+    tier = RequestQueueTier(
+        n_queues=2, slots=n_slots, capacity=1024, lanes=256, durable=False,
+        k_classes=2,
+    )
+    sids = list(range(1, 97))
+    rejected = tier.submit(sids, classes=[s % 2 for s in sids])
+    assert rejected == []
+    admitted = tier.admit(n_slots)
+    got = [sid for sid, _ in admitted]
+    held = [slot for _, slot in admitted]
+    assert sorted(got) == sids
+    assert len(set(held)) == len(held) == 96
+    pool = tier.pool_slots()
+    assert len(pool) == n_slots - 96
+    assert sorted(set(pool) | set(held)) == list(range(n_slots))
+    assert tier.backlog() == 0
+
+
+def test_tier_rejects_slot_ids_past_packed_field():
+    """Slot ids ride the packed session encoding, so a pool wider than the
+    7-bit field fails fast at construction instead of corrupting a bind."""
+    with pytest.raises(ValueError):
+        RequestQueueTier(
+            n_queues=1, slots=SESSION_SLOT_NONE + 1, capacity=256, lanes=8,
+        )
